@@ -1,0 +1,164 @@
+"""Algorithm-level benchmarks: competitive-ratio table, ETP search quality
+(paper-faithful vs enhanced ablation), engine throughput, planner wall time
+(the paper's 5-minute budget claim)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    chain_lower_bound,
+    build_gnn_workload,
+    heterogeneous_cluster,
+    ifs_placement,
+    max_degree,
+    simulate,
+    testbed_cluster,
+)
+from repro.core.placement import etp_search
+from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
+
+from .common import Timer, emit, feasible_cluster
+
+
+def competitive_ratio_table(n_jobs: int = 12):
+    """Empirical T_OES / LB_chain vs the Delta guarantee (Theorem 1)."""
+    worst = 0.0
+    margins = []
+    for seed in range(n_jobs):
+        rng = np.random.default_rng(seed)
+        wl = build_gnn_workload(
+            n_stores=int(rng.integers(2, 5)),
+            n_workers=int(rng.integers(2, 6)),
+            samplers_per_worker=int(rng.integers(1, 3)),
+            n_ps=1,
+            n_iters=int(rng.integers(3, 8)),
+            store_to_sampler_gb=float(rng.uniform(0.1, 3.0)),
+            sampler_to_worker_gb=float(rng.uniform(0.1, 2.0)),
+            grad_gb=0.05,
+            store_exec_s=0.1, sampler_exec_s=0.2, worker_exec_s=0.5, ps_exec_s=0.1,
+            pmr=1.3,
+        )
+        cluster = heterogeneous_cluster(max(2, wl.store_tasks[-1] + 1), seed=seed)
+        p = ifs_placement(wl, cluster, seed=seed)
+        r = wl.realize(seed=seed)
+        with Timer() as t:
+            res = simulate(wl, cluster, p, r, policy="oes", record=True)
+        cert = chain_lower_bound(wl, cluster, p, r, res)
+        margins.append(cert.ratio / cert.delta)
+        worst = max(worst, cert.ratio / cert.delta)
+        assert cert.holds
+    emit(
+        "competitive_ratio",
+        t.us,
+        f"jobs={n_jobs} worst_ratio/delta={worst:.3f} "
+        f"mean={np.mean(margins):.3f} (guarantee: <= 1.0)",
+    )
+
+
+def etp_ablation(budget: int = 1500):
+    """Paper-faithful Alg.3 vs enhanced (auto-beta + group moves + anneal)."""
+    wl = build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=6, samplers_per_worker=2,
+        n_ps=1, n_iters=40,
+    )
+    cluster = testbed_cluster()
+    r = wl.realize(seed=0)
+    variants = {
+        "paper_faithful": dict(beta=0.1, group_moves=0.0, anneal=False),
+        "enhanced": dict(beta="auto", group_moves=0.35, anneal=True),
+    }
+    out = {}
+    for name, kw in variants.items():
+        with Timer() as t:
+            res = etp_search(wl, cluster, budget=budget, sim_iters=15, seed=0,
+                             policy="oes_strict", **kw)
+        mk = simulate(wl, cluster, res.placement, r, policy="oes").makespan
+        out[name] = (mk, t.dt, res.cache_hits)
+        emit(
+            f"etp_{name}",
+            t.us,
+            f"makespan={mk:.2f}s wall={t.dt:.1f}s cache_hits={res.cache_hits} "
+            f"evals={res.evaluations}",
+        )
+    gain = 100 * (1 - out["enhanced"][0] / out["paper_faithful"][0])
+    emit("etp_enhancement_gain", 0.0, f"enhanced_vs_paper={gain:.1f}%")
+
+
+def planner_budget_claim():
+    """Paper: offline search within 5 minutes (20-iter sims, I=10000).
+    Measure our per-transition cost and extrapolate."""
+    wl = build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=6, samplers_per_worker=2,
+        n_ps=1, n_iters=20,
+    )
+    cluster = testbed_cluster()
+    with Timer() as t:
+        res = etp_search(wl, cluster, budget=200, sim_iters=20, sim_draws=1, seed=0)
+    per = t.dt / 200
+    emit(
+        "planner_5min_claim",
+        per * 1e6,
+        f"per_transition={per*1000:.1f}ms -> I=10000 in {per*10000/60:.1f}min "
+        f"(cache hits shrink this further: {res.cache_hits}/200 here)",
+    )
+
+
+def engine_throughput():
+    for name, (m, w, s, iters, profile) in {
+        "testbed_products": (4, 6, 2, 40, OGBN_PRODUCTS),
+    }.items():
+        wl = build_workload_from_profile(
+            profile, n_stores=m, n_workers=w, samplers_per_worker=s,
+            n_ps=1, n_iters=iters,
+        )
+        cluster = testbed_cluster() if m == 4 else feasible_cluster(m, wl)
+        p = ifs_placement(wl, cluster, seed=0)
+        r = wl.realize(seed=0)
+        with Timer() as t:
+            res = simulate(wl, cluster, p, r, policy="oes")
+        emit(
+            f"engine_{name}",
+            t.us,
+            f"events={res.n_events} events_per_s={res.n_events/t.dt:.0f} "
+            f"makespan={res.makespan:.1f}s",
+        )
+
+
+def scheduler_ablation():
+    """Work-conserving OES (ours) vs the paper's strict rule vs FIFO —
+    the paper's min-share rule is not work-conserving and loses to FIFO
+    at high flow degrees; max-min filling dominates both (EXPERIMENTS
+    §Search)."""
+    from repro.core.profiles import OGBN_PAPERS100M
+    from repro.core import distdgl_placement
+    wl = build_workload_from_profile(
+        OGBN_PAPERS100M, n_stores=16, n_workers=20, samplers_per_worker=4,
+        n_ps=1, n_iters=10,
+    )
+    cluster = heterogeneous_cluster(16, seed=1)
+    pd = distdgl_placement(wl, cluster)
+    r = wl.realize(seed=0)
+    out = {}
+    for pol in ("oes", "oes_strict", "fifo"):
+        with Timer() as t:
+            out[pol] = simulate(wl, cluster, pd, r, policy=pol).makespan
+    emit(
+        "scheduler_ablation_papers",
+        t.us,
+        " ".join(f"{k}={v:.2f}s" for k, v in out.items())
+        + f" | workconserving_gain_vs_strict={100*(1-out['oes']/out['oes_strict']):.1f}%",
+    )
+
+
+def main():
+    competitive_ratio_table()
+    scheduler_ablation()
+    etp_ablation()
+    planner_budget_claim()
+    engine_throughput()
+
+
+if __name__ == "__main__":
+    main()

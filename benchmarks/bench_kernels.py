@@ -1,0 +1,110 @@
+"""Kernel-layer benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python)
+— wall time is meaningless for them, so we report (i) allclose vs oracle,
+(ii) wall time of the XLA mirrors (chunked attention / chunked SSD) vs the
+naive formulations, and (iii) the structural VMEM working set implied by
+the BlockSpecs (what the TPU roofline sees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref, ssd_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models import layers as ly
+from repro.models.ssm import ssd_chunked
+
+from .common import Timer, emit
+
+
+def attention_mirror_vs_naive():
+    cfg = get_smoke_config("internlm2-1.8b")
+    b, s, nh, kv, hd = 1, 2048, 8, 4, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, nh, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+
+    naive = jax.jit(
+        lambda q, k, v: ly._attend(q, k, v, ly.causal_mask(s, s, None), cfg)
+    )
+    chunk = jax.jit(
+        lambda q, k, v: ly._attend_chunked(q, k, v, cfg, s + 1, True, 256, 512)
+    )
+    naive(q, k, v).block_until_ready()
+    chunk(q, k, v).block_until_ready()
+    with Timer() as t1:
+        r1 = naive(q, k, v).block_until_ready()
+    with Timer() as t2:
+        r2 = chunk(q, k, v).block_until_ready()
+    err = float(jnp.abs(r1 - r2).max())
+    # transient memory: naive materializes S^2 scores; chunked S*kv_chunk
+    naive_bytes = b * nh * s * s * 4
+    chunk_bytes = b * nh * 256 * 512 * 4
+    emit(
+        "attn_chunked_vs_naive",
+        t2.us,
+        f"naive={t1.dt*1e3:.0f}ms chunked={t2.dt*1e3:.0f}ms err={err:.1e} "
+        f"scores_bytes naive={naive_bytes/2**20:.0f}MiB chunked={chunk_bytes/2**20:.1f}MiB",
+    )
+
+
+def flash_kernel_allclose():
+    b, h, s, d = 1, 2, 256, 64
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, d), jnp.float32)
+    with Timer() as t:
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+    err = float(jnp.abs(out - flash_attention_ref(q, k, v)).max())
+    vmem = (128 * d * 3 + 128 * 128 + 128 * d) * 4
+    emit(
+        "flash_kernel_interpret",
+        t.us,
+        f"err={err:.1e} vmem_working_set={vmem/1024:.0f}KiB (bq=bk=128)",
+    )
+
+
+def ssd_mirror_and_kernel():
+    b, s, h, hd, ds = 2, 1024, 8, 64, 64
+    ks = jax.random.split(jax.random.key(2), 5)
+    x = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, ds), jnp.float32)
+    Cm = jax.random.normal(ks[4], (b, s, ds), jnp.float32)
+    Bh = jnp.repeat(Bm[:, :, None, :], h, 2)
+    Ch = jnp.repeat(Cm[:, :, None, :], h, 2)
+    seq = jax.jit(lambda *a: ssd_ref(*a))
+    chunk = jax.jit(lambda x, dt, A, B, C: ssd_chunked(x, dt, A, B, C, 128)[0])
+    seq(x, dt, A, Bh, Ch).block_until_ready()
+    chunk(x, dt, A, Bh, Ch).block_until_ready()
+    with Timer() as t1:
+        r1 = seq(x, dt, A, Bh, Ch).block_until_ready()
+    with Timer() as t2:
+        r2 = chunk(x, dt, A, Bh, Ch).block_until_ready()
+    err = float(jnp.abs(r1 - r2).max())
+    with Timer() as t3:
+        rk = ssd_scan(x, dt, A, Bm, Cm, chunk=128, interpret=True)
+    kerr = float(jnp.abs(rk - r1).max())
+    emit(
+        "ssd_chunked_vs_sequential",
+        t2.us,
+        f"seq={t1.dt*1e3:.0f}ms chunked={t2.dt*1e3:.0f}ms err={err:.1e} "
+        f"kernel_err={kerr:.1e} vmem_state={hd*ds*4/1024:.0f}KiB",
+    )
+
+
+def main():
+    attention_mirror_vs_naive()
+    flash_kernel_allclose()
+    ssd_mirror_and_kernel()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import ClusterSpec, heterogeneous_cluster, ifs_placement
+
+
+def feasible_cluster(m: int, workload, seed0: int = 0, tries: int = 50) -> ClusterSpec:
+    """First random heterogeneous cluster (paper §VI-B ranges) that can host
+    the workload (IFS feasibility check)."""
+    for s in range(seed0, seed0 + tries):
+        cluster = heterogeneous_cluster(m, seed=s)
+        try:
+            ifs_placement(workload, cluster, seed=0)
+            return cluster
+        except ValueError:
+            continue
+    raise RuntimeError("no feasible cluster found")
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.dt * 1e6

@@ -1,0 +1,74 @@
+"""Benchmark harness entry: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (plus the framework's own perf
+benches).  Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig4            testbed end-to-end: DGTP vs DistDGL (products, reddit)
+  fig6/8          products 8-machine sim: batch-size + PMR sweeps, 4 schedulers
+  fig7/9          papers100M 16-machine sim: batch-size + PMR sweeps
+  competitive     Theorem-1 empirical certificate table
+  etp_*           ETP ablation (paper-faithful vs enhanced) + 5-min claim
+  engine_*        event-engine throughput
+  attn/ssd/flash  kernel-layer benches (XLA mirrors + interpret allclose)
+  roofline_*      summary rows from the dry-run roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from . import bench_algorithms, bench_figures, bench_kernels
+from .common import emit
+
+
+def roofline_summary():
+    try:
+        from repro.roofline import full_table
+    except Exception:  # pragma: no cover
+        return
+    cells = [c for c in full_table("pod") if c.status == "run"]
+    if not cells:
+        emit("roofline", 0.0, "no dry-run artifacts (run repro.launch.dryrun)")
+        return
+    by_dom = {}
+    for c in cells:
+        by_dom.setdefault(c.dominant or "n/a", []).append(c)
+    emit(
+        "roofline_summary",
+        0.0,
+        " ".join(f"{k}-bound={len(v)}" for k, v in sorted(by_dom.items()))
+        + f" cells={len(cells)}",
+    )
+    for c in cells:
+        emit(
+            f"roofline_{c.arch}_{c.shape}",
+            0.0,
+            f"compute={c.compute_s:.3g}s memory={c.memory_s:.3g}s "
+            f"collective={c.collective_s:.3g}s dom={c.dominant} "
+            f"frac={c.roofline_fraction:.2f} fits={'y' if c.fits else 'N'}",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only", default=None,
+        choices=[None, "figures", "algorithms", "kernels", "roofline"],
+    )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.only in (None, "algorithms"):
+        bench_algorithms.main()
+    if args.only in (None, "kernels"):
+        bench_kernels.main()
+    if args.only in (None, "roofline"):
+        roofline_summary()
+    if args.only in (None, "figures"):
+        bench_figures.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+GraphSAGE training job).  ``get_config(id)`` accepts the canonical hyphened
+ids from the assignment; ``get_smoke_config(id)`` returns the reduced
+same-family config used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "zamba2-7b": "zamba2_7b",
+    "gemma2-27b": "gemma2_27b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "starcoder2-3b": "starcoder2_3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).smoke_config()
+
+
+# Shape grid of the assignment (applies to every arch; skips per DESIGN §4).
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def cell_status(cfg: ModelConfig, shape_name: str) -> str:
+    """'run' or a skip reason, per DESIGN §4."""
+    sh = SHAPES[shape_name]
+    if cfg.is_encoder and sh["kind"] == "decode":
+        return "skip: encoder-only arch has no decode step"
+    if shape_name == "long_500k" and cfg.full_attention:
+        return "skip: full-attention arch is quadratic/KV-infeasible at 500k"
+    return "run"

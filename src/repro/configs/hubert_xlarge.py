@@ -1,0 +1,46 @@
+"""hubert-xlarge [audio]: encoder-only transformer backbone.
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 [arXiv:2106.07447;
+unverified].  The conv feature extractor (waveform -> 50 Hz frames) is a
+STUB per the assignment: input_specs() supplies precomputed frame
+embeddings [B, T, d_model]; the model is the transformer + per-frame
+classification head (504 masked-prediction clusters).  Encoder-only: no
+decode shapes.
+"""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge",
+        block_pattern="encoder",
+        n_layers=48,
+        d_model=1280,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=5120,
+        vocab=504,
+        mlp="gelu",
+        norm="layernorm",
+        causal=False,
+        frontend="frames",
+        rope_theta=0.0,  # positional info comes from the (stubbed) conv frontend
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-smoke",
+        block_pattern="encoder",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=64,
+        mlp="gelu",
+        norm="layernorm",
+        causal=False,
+        frontend="frames",
+        rope_theta=0.0,
+    )

@@ -1,0 +1,36 @@
+"""llama4-scout-17b-a16e [moe]: 16 experts top-1, early fusion.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].  Text backbone only
+(early-fusion vision tower is out of the assignment's scope); 40 heads do
+not divide TP=16 -> head_dim sharding.
+"""
+from ..models.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        block_pattern="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=202048,
+        moe=MoEConfig(n_experts=16, top_k=1, d_ff_expert=8192),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-smoke",
+        block_pattern="moe",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=512,
+        moe=MoEConfig(n_experts=4, top_k=1, d_ff_expert=128),
+    )

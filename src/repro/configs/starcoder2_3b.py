@@ -1,0 +1,37 @@
+"""starcoder2-3b [dense]: GQA (kv=2), RoPE, GELU MLP, LayerNorm.
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152
+[arXiv:2402.19173; hf].  24 heads do not divide TP=16, so attention shards
+the head_dim axis (layers.attn_shard_mode) — exercised by the dry-run.
+"""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-3b",
+        block_pattern="dense",
+        n_layers=30,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=2,
+        d_ff=12288,
+        vocab=49152,
+        mlp="gelu",
+        norm="layernorm",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-smoke",
+        block_pattern="dense",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,  # non-divisible head counts are a full-config property
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=512,
+        mlp="gelu",
+        norm="layernorm",
+    )

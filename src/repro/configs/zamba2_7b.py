@@ -1,0 +1,38 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64
+[arXiv:2411.15242; unverified].  The shared transformer block (one set of
+weights, applied every 6th layer) follows the Zamba design; per-application
+LoRA deltas of the official checkpoint are omitted (noted in DESIGN §4).
+"""
+from ..models.config import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        block_pattern="zamba2",
+        n_layers=81,
+        d_model=3584,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=14336,
+        vocab=32000,
+        ssm=SSMConfig(d_state=64, head_dim=64, expand=2),
+        hybrid_every=6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke",
+        block_pattern="zamba2",
+        n_layers=7,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=512,
+        ssm=SSMConfig(d_state=16, head_dim=16, expand=2, chunk=32),
+        hybrid_every=3,
+    )

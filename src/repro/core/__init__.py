@@ -1,0 +1,53 @@
+"""DGTP core: the paper's contribution.
+
+Task placement (IFS/ETP), online execution & flow scheduling (OES + baseline
+policies), the theoretical certificates (Delta, chain lower bound), dataset
+traffic profiles, and the LM infeed planner that makes the technique a
+first-class feature of the training framework.
+"""
+from .analysis import (
+    ChainCertificate,
+    chain_lower_bound,
+    max_degree,
+    one_iteration_degrees,
+    traffic_summary,
+)
+from .cluster import (
+    ClusterSpec,
+    Machine,
+    Placement,
+    TaskSpec,
+    heterogeneous_cluster,
+    is_feasible,
+    testbed_cluster,
+    violation_fraction,
+)
+from .dgtp import Plan, plan, plan_baseline
+from .engine import (
+    FIFORate,
+    MRTFRate,
+    OESRate,
+    OMCoflowRate,
+    POLICIES,
+    ScheduleResult,
+    expected_makespan,
+    simulate,
+)
+from .oes_slotted import simulate_slotted
+from .placement import (
+    ETPResult,
+    distdgl_placement,
+    etp_search,
+    ifs_placement,
+    replan_after_failure,
+)
+from .profiles import (
+    OGBN_PAPERS100M,
+    OGBN_PRODUCTS,
+    PROFILES,
+    REDDIT,
+    build_workload_from_profile,
+)
+from .workload import Edge, Realization, TrafficModel, Workload, build_gnn_workload
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,418 @@
+"""Continuous-time event-driven execution/flow engine (array-based).
+
+This is the exact (slot-width -> 0) counterpart of the paper's slotted
+Alg. 1, with the *rate policy* factored out so the paper's OES rule and the
+three baselines (OMCoflow / MRTF / FIFO) all run on identical dependency
+semantics — the comparison then isolates the scheduling policy, exactly as
+in §VI-B where baselines "start a task immediately once its dependencies
+have been cleared" and differ only in flow rate control.
+
+Dependency semantics implemented (paper constraints (5)-(14)):
+  * store tasks bootstrap iteration 1 at t=0                         (5)
+  * task (j,n) starts when: (j,n-1) done; every remote in-edge's
+    instance for source-iteration (n - lag) delivered; every local
+    in-edge's source task has finished iteration (n - lag)        (7)-(9)
+  * instances of one edge transmit strictly in iteration order       (11)
+  * per-machine NIC capacity is respected by every rate policy   (13)(14)
+
+Makespan = completion time of the last task's iteration N (eq. 15). Final
+PS->worker flows (which would feed iteration N+1) are not generated.
+
+Implementation notes: because constraint (11) serialises a logical edge's
+instances, *at most one instance per edge is ever in flight* — the active
+flow set is a boolean mask over the E logical edges, and all per-event work
+is vectorised numpy over that mask.  This is the engine used by ETP's inner
+loop, so constant factors matter (see benchmarks/bench_etp.py).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cluster import ClusterSpec, Placement
+from .workload import Realization, Workload
+
+EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Rate policies (vectorised): given arrays describing active flows, return
+# per-active-flow rates.  All respect NIC caps (13)(14).
+# ---------------------------------------------------------------------------
+class RatePolicy:
+    name = "abstract"
+
+    def rates(
+        self,
+        src_m: np.ndarray,  # [A] source machine per active flow
+        dst_m: np.ndarray,  # [A]
+        remaining: np.ndarray,  # [A] GB left
+        release: np.ndarray,  # [A] release time (for FIFO)
+        group: np.ndarray,  # [A] coflow group id (dst task instance)
+        bw_in: np.ndarray,  # [M]
+        bw_out: np.ndarray,  # [M]
+    ) -> np.ndarray:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class OESStrictRate(RatePolicy):
+    """Paper Alg. 1 lines 18-21, verbatim: degree-balanced fair share.
+
+    rate(f) = min( B_in[dst]/Delta_in[dst], B_out[src]/Delta_out[src] ).
+
+    NOT work-conserving: when a flow's other NIC is the bottleneck, the
+    residual capacity of this NIC is wasted — measurably slower than FIFO
+    on high-degree jobs (papers100M: ~9 % — see EXPERIMENTS §Search).
+    Kept verbatim for fidelity tests and the ablation.
+    """
+
+    name = "oes_strict"
+
+    def rates(self, src_m, dst_m, remaining, release, group, bw_in, bw_out):
+        d_out = np.bincount(src_m, minlength=len(bw_out))
+        d_in = np.bincount(dst_m, minlength=len(bw_in))
+        return np.minimum(bw_in[dst_m] / d_in[dst_m], bw_out[src_m] / d_out[src_m])
+
+
+class OESRate(RatePolicy):
+    """Work-conserving OES (beyond-paper, default for DGTP): max-min fair
+    rates via progressive filling over the bipartite NIC graph.
+
+    Every flow receives AT LEAST the paper rule's min-share (its first
+    freeze level is >= min(B_in/Delta_in, B_out/Delta_out)), so Lemma 1
+    and the Theorem-1 chain bound continue to hold verbatim, while
+    residual capacity is redistributed instead of wasted.  Property-tested
+    dominance: tests/test_oes.py::test_workconserving_dominates_strict.
+    """
+
+    name = "oes"
+
+    def rates(self, src_m, dst_m, remaining, release, group, bw_in, bw_out):
+        n = len(src_m)
+        r = np.zeros(n)
+        rem_in = bw_in.astype(np.float64).copy()
+        rem_out = bw_out.astype(np.float64).copy()
+        unfrozen = np.ones(n, dtype=bool)
+        # progressive filling: raise all unfrozen flows uniformly until a
+        # NIC saturates; freeze its flows; repeat (<= 2M rounds).
+        for _ in range(2 * (len(bw_in) + len(bw_out))):
+            if not unfrozen.any():
+                break
+            cnt_in = np.bincount(dst_m[unfrozen], minlength=len(bw_in))
+            cnt_out = np.bincount(src_m[unfrozen], minlength=len(bw_out))
+            with np.errstate(divide="ignore", invalid="ignore"):
+                inc_in = np.where(cnt_in > 0, rem_in / np.maximum(cnt_in, 1), np.inf)
+                inc_out = np.where(cnt_out > 0, rem_out / np.maximum(cnt_out, 1), np.inf)
+            inc = min(inc_in.min(), inc_out.min())
+            if not np.isfinite(inc):
+                break
+            r[unfrozen] += inc
+            rem_in -= inc * cnt_in
+            rem_out -= inc * cnt_out
+            sat_in = (rem_in <= EPS) & (cnt_in > 0)
+            sat_out = (rem_out <= EPS) & (cnt_out > 0)
+            newly = unfrozen & (sat_in[dst_m] | sat_out[src_m])
+            if not newly.any():
+                break
+            unfrozen &= ~newly
+        return r
+
+
+class _WaterfillRate(RatePolicy):
+    """Greedy sequential water-fill in a priority order (FIFO/MRTF base).
+
+    Flows are visited in priority order; each takes the min of the remaining
+    ingress/egress capacity of its two NICs (head-of-line blocking emerges
+    naturally for FIFO)."""
+
+    def order(self, src_m, dst_m, remaining, release, bw_in, bw_out):
+        raise NotImplementedError
+
+    def rates(self, src_m, dst_m, remaining, release, group, bw_in, bw_out):
+        rem_in = bw_in.copy()
+        rem_out = bw_out.copy()
+        r = np.zeros(len(src_m))
+        for i in self.order(src_m, dst_m, remaining, release, bw_in, bw_out):
+            give = min(rem_in[dst_m[i]], rem_out[src_m[i]])
+            if give > EPS:
+                r[i] = give
+                rem_in[dst_m[i]] -= give
+                rem_out[src_m[i]] -= give
+        return r
+
+
+class FIFORate(_WaterfillRate):
+    """DistDGL's system-default behaviour: FIFO queues per NIC."""
+
+    name = "fifo"
+
+    def order(self, src_m, dst_m, remaining, release, bw_in, bw_out):
+        return np.argsort(release, kind="stable")
+
+
+class MRTFRate(_WaterfillRate):
+    """Minimum-remaining-time-first heuristic (§VI-B baseline (ii))."""
+
+    name = "mrtf"
+
+    def order(self, src_m, dst_m, remaining, release, bw_in, bw_out):
+        t_rem = remaining / np.minimum(bw_in[dst_m], bw_out[src_m])
+        return np.argsort(t_rem, kind="stable")
+
+
+class OMCoflowRate(RatePolicy):
+    """Online coflow baseline (§VI-B baseline (i), after Tan et al. [48]).
+
+    Flows destined to the same task instance form one coflow. Within a
+    coflow each flow gets weight inversely proportional to its predicted
+    standalone finish time (remaining / min(B_in, B_out)), normalised so
+    each coflow has unit aggregate weight ('as if it were the only coflow
+    in the network'); rates are then proportional-fair scaled onto NIC
+    capacities by iterative scaling.
+    """
+
+    name = "omcoflow"
+    rounds = 4
+
+    def rates(self, src_m, dst_m, remaining, release, group, bw_in, bw_out):
+        pred = np.maximum(remaining, EPS) / np.minimum(bw_in[dst_m], bw_out[src_m])
+        w = 1.0 / pred
+        gsum = np.zeros(group.max() + 1)
+        np.add.at(gsum, group, w)
+        w = w / gsum[group]
+        r = w * min(bw_in.max(), bw_out.max())
+        for _ in range(self.rounds):
+            load_out = np.bincount(src_m, weights=r, minlength=len(bw_out))
+            load_in = np.bincount(dst_m, weights=r, minlength=len(bw_in))
+            s_out = bw_out / np.maximum(load_out, EPS)
+            s_in = bw_in / np.maximum(load_in, EPS)
+            r = r * np.minimum(1.0, np.minimum(s_out[src_m], s_in[dst_m]))
+        return r
+
+
+POLICIES: Dict[str, Callable[[], RatePolicy]] = {
+    "oes": OESRate,
+    "oes_strict": OESStrictRate,
+    "fifo": FIFORate,
+    "mrtf": MRTFRate,
+    "omcoflow": OMCoflowRate,
+}
+
+
+# ---------------------------------------------------------------------------
+# Schedule recording
+# ---------------------------------------------------------------------------
+@dataclass
+class TaskEvent:
+    task: int
+    iter: int
+    start: float
+    end: float
+
+
+@dataclass
+class ScheduleResult:
+    makespan: float
+    task_events: List[TaskEvent]
+    flow_log: List[Tuple[int, int, float, float]]  # (edge, iter, start, end)
+    n_events: int
+    policy: str
+
+    def task_start_matrix(self, J: int, N: int) -> np.ndarray:
+        out = np.full((J, N), np.nan)
+        for ev in self.task_events:
+            out[ev.task, ev.iter - 1] = ev.start
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+def simulate(
+    workload: Workload,
+    cluster: ClusterSpec,
+    placement: Placement,
+    realization: Realization,
+    policy: RatePolicy | str = "oes",
+    record: bool = False,
+    max_events: int = 50_000_000,
+) -> ScheduleResult:
+    """Run one training job to completion under ``policy``; return schedule."""
+    if isinstance(policy, str):
+        policy = POLICIES[policy]()
+    N = realization.n_iters
+    J, E = workload.J, workload.E
+    y = placement.y
+    src_t, dst_t, lag = workload.edge_src, workload.edge_dst, workload.edge_lag
+    vol = realization.volumes
+    ex = realization.exec_times
+    bw_in, bw_out = cluster.bw_in, cluster.bw_out
+    src_m_all = y[src_t]
+    dst_m_all = y[dst_t]
+
+    local = src_m_all == dst_m_all  # dependency only, no flow
+    remote = ~local
+    last_instance = N - lag  # [E]
+
+    # per-edge instance state (constraint (11): <=1 active instance per edge)
+    delivered = np.zeros(E, dtype=np.int64)
+    sending = np.zeros(E, dtype=np.int64)  # active instance id (0 = idle)
+    remaining = np.zeros(E, dtype=np.float64)
+    release = np.zeros(E, dtype=np.float64)
+    active = np.zeros(E, dtype=bool)
+
+    done_iter = np.zeros(J, dtype=np.int64)
+    running = np.zeros(J, dtype=bool)
+
+    in_edges = workload.in_edges
+    out_edges = workload.out_edges
+
+    task_heap: List[Tuple[float, int, int]] = []
+    events: List[TaskEvent] = []
+    flow_log: List[Tuple[int, int, float, float]] = []
+    flow_start: Dict[Tuple[int, int], float] = {}
+
+    def can_start(j: int, n: int) -> bool:
+        if n > N or running[j] or done_iter[j] != n - 1:
+            return False
+        for e in in_edges[j]:
+            need = n - lag[e]
+            if need <= 0:
+                continue
+            if local[e]:
+                if done_iter[src_t[e]] < need:
+                    return False
+            elif delivered[e] < need:
+                return False
+        return True
+
+    def start_task(j: int, n: int, t: float) -> None:
+        running[j] = True
+        end = t + ex[j, n - 1]
+        heapq.heappush(task_heap, (end, j, n))
+        if record:
+            events.append(TaskEvent(j, n, t, end))
+
+    def try_start_flow(e: int, t: float) -> bool:
+        """Arm the next instance of edge e if released + predecessor done.
+        Returns True if zero-volume instances were delivered instantly."""
+        if local[e] or active[e]:
+            return False
+        got_zero = False
+        while True:
+            nxt = delivered[e] + 1
+            if nxt > last_instance[e] or done_iter[src_t[e]] < nxt:
+                return got_zero
+            if vol[e, nxt - 1] > EPS:
+                break
+            delivered[e] = nxt
+            got_zero = True
+        sending[e] = nxt
+        remaining[e] = vol[e, nxt - 1]
+        release[e] = t
+        active[e] = True
+        if record:
+            flow_start[(e, int(nxt))] = t
+        return got_zero
+
+    t = 0.0
+    for j in range(J):
+        if can_start(j, 1):
+            start_task(j, 1, 0.0)
+
+    n_events = 0
+    while task_heap or active.any():
+        n_events += 1
+        if n_events > max_events:  # pragma: no cover
+            raise RuntimeError("event limit exceeded — dependency deadlock?")
+        (idx,) = np.nonzero(active)
+        if len(idx):
+            rates = policy.rates(
+                src_m_all[idx],
+                dst_m_all[idx],
+                remaining[idx],
+                release[idx],
+                # coflow group id: destination task instance, encoded densely
+                dst_t[idx] * (N + 2) + delivered[idx] + 1 + lag[idx],
+                bw_in,
+                bw_out,
+            )
+            with np.errstate(divide="ignore"):
+                dt = np.where(rates > EPS, remaining[idx] / np.maximum(rates, EPS), np.inf)
+            dt_min = dt.min()
+            t_flow = t + dt_min if np.isfinite(dt_min) else np.inf
+        else:
+            rates = None
+            t_flow = np.inf
+        t_task = task_heap[0][0] if task_heap else np.inf
+        t_next = min(t_task, t_flow)
+        if not np.isfinite(t_next):  # pragma: no cover
+            raise RuntimeError("no progress: flows active but zero rates")
+        if len(idx):
+            remaining[idx] -= rates * (t_next - t)
+        t = t_next
+
+        touched: List[int] = []
+
+        # task completions
+        while task_heap and task_heap[0][0] <= t + EPS:
+            _, j, n = heapq.heappop(task_heap)
+            running[j] = False
+            done_iter[j] = n
+            touched.append(j)
+            for e in out_edges[j]:
+                if local[e]:
+                    touched.append(int(dst_t[e]))
+                elif try_start_flow(e, t):
+                    touched.append(int(dst_t[e]))
+
+        # flow completions (delivery may arm next instance; cascades handled
+        # inside try_start_flow for zero-volume runs)
+        if len(idx):
+            fin = idx[remaining[idx] <= EPS * np.maximum(1.0, vol[idx, sending[idx] - 1])]
+            for e in fin:
+                n = int(sending[e])
+                delivered[e] = n
+                sending[e] = 0
+                active[e] = False
+                remaining[e] = 0.0
+                touched.append(int(dst_t[e]))
+                if record:
+                    flow_log.append((int(e), n, flow_start.pop((int(e), n)), t))
+                if try_start_flow(int(e), t):
+                    touched.append(int(dst_t[e]))
+
+        # start newly-available tasks
+        for j in set(touched):
+            n = int(done_iter[j]) + 1
+            if can_start(j, n):
+                start_task(j, n, t)
+
+    return ScheduleResult(
+        makespan=float(t),
+        task_events=events,
+        flow_log=flow_log,
+        n_events=n_events,
+        policy=policy.name,
+    )
+
+
+def expected_makespan(
+    workload: Workload,
+    cluster: ClusterSpec,
+    placement: Placement,
+    policy: str = "oes",
+    n_iters: int = 20,
+    n_draws: int = 3,
+    seed: int = 0,
+) -> float:
+    """Monte-Carlo estimate of T'_Y (paper §V-B): simulate ``n_iters``
+    iterations a few times with fresh draws from the traffic profile."""
+    total = 0.0
+    for d in range(n_draws):
+        r = workload.realize(seed=seed + 1000 * d, n_iters=n_iters)
+        total += simulate(workload, cluster, placement, r, policy=policy).makespan
+    return total / n_draws

@@ -1,0 +1,117 @@
+"""Multi-job planning (the paper's conclusion, last paragraph): several
+GNN training jobs share one cluster; DGTP jointly searches placements for
+all jobs and schedules every job's tasks/flows online on the shared NICs.
+
+Implementation: the jobs' task/flow sets are merged into one Workload
+(index offsets; per-job iteration counts padded with epsilon-work so the
+engine's uniform-N loop is exact up to eps).  Everything downstream —
+IFS/ETP, OES + baselines, the Theorem-1 certificate — operates on the
+merged job unchanged; Delta simply becomes the max NIC flow count across
+all jobs, exactly the quantity the shared-network guarantee should use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .cluster import STORE, TaskSpec
+from .workload import Edge, Realization, TrafficModel, Workload
+
+EPS_EXEC = 1e-6
+
+
+@dataclass
+class MergedJob:
+    workload: Workload
+    task_offsets: List[int]  # job j's tasks start at task_offsets[j]
+    n_iters: List[int]  # per-job true iteration counts
+
+
+def merge_workloads(jobs: Sequence[Workload]) -> MergedJob:
+    """Merge jobs into one Workload on a shared cluster.
+
+    Graph stores keep their pinning semantics per job (store g of every
+    job lives on machine g — multiple jobs share graph-store machines,
+    as co-located deployments do)."""
+    tasks: List[TaskSpec] = []
+    edges: List[Edge] = []
+    vols: List[float] = []
+    fluct: List[bool] = []
+    execs: List[float] = []
+    offsets: List[int] = []
+    n_max = max(j.n_iters for j in jobs)
+    sampler_of_worker: Dict[int, List[int]] = {}
+    store_tasks: List[int] = []
+    for ji, job in enumerate(jobs):
+        off = len(tasks)
+        offsets.append(off)
+        for t in job.tasks:
+            tasks.append(TaskSpec(f"j{ji}.{t.name}", t.kind, t.demand))
+        for e in job.edges:
+            edges.append(Edge(e.src + off, e.dst + off, e.lag, e.kind))
+        vols.extend(job.traffic.mean_volume.tolist())
+        fl = (
+            job.traffic.fluctuating
+            if job.traffic.fluctuating is not None
+            else np.zeros(job.E, dtype=bool)
+        )
+        fluct.extend(fl.tolist())
+        execs.extend(job.traffic.mean_exec.tolist())
+        for w, ss in job.sampler_of_worker.items():
+            sampler_of_worker[w + off] = [s + off for s in ss]
+        store_tasks.extend(g + off for g in job.store_tasks)
+    traffic = TrafficModel(
+        mean_volume=np.asarray(vols),
+        mean_exec=np.asarray(execs),
+        pmr=max(j.traffic.pmr for j in jobs),
+        exec_jitter=max(j.traffic.exec_jitter for j in jobs),
+        fluctuating=np.asarray(fluct, dtype=bool),
+    )
+    merged = Workload(
+        tasks=tasks,
+        edges=edges,
+        traffic=traffic,
+        n_iters=n_max,
+        sampler_of_worker=sampler_of_worker,
+        store_tasks=store_tasks,
+    )
+    return MergedJob(
+        workload=merged,
+        task_offsets=offsets,
+        n_iters=[j.n_iters for j in jobs],
+    )
+
+
+def realize_merged(mj: MergedJob, jobs: Sequence[Workload], seed: int = 0) -> Realization:
+    """Concatenate per-job realizations; shorter jobs get epsilon work
+    beyond their true horizon (zero-volume flows deliver instantly,
+    eps-exec tasks are effectively free — makespan error < J * N * eps)."""
+    n_max = mj.workload.n_iters
+    vol_parts, ex_parts = [], []
+    for ji, job in enumerate(jobs):
+        r = job.realize(seed=seed + 7919 * ji, n_iters=job.n_iters)
+        vol = np.zeros((job.E, n_max))
+        vol[:, : job.n_iters] = r.volumes
+        ex = np.full((job.J, n_max), EPS_EXEC)
+        ex[:, : job.n_iters] = r.exec_times
+        vol_parts.append(vol)
+        ex_parts.append(ex)
+    return Realization(
+        volumes=np.concatenate(vol_parts, axis=0),
+        exec_times=np.concatenate(ex_parts, axis=0),
+    )
+
+
+def per_job_makespans(
+    mj: MergedJob, result, record_events: bool = True
+) -> List[float]:
+    """Completion time of each job's own last true iteration."""
+    ends = [0.0] * len(mj.task_offsets)
+    bounds = mj.task_offsets + [mj.workload.J]
+    for ev in result.task_events:
+        for ji in range(len(mj.task_offsets)):
+            if bounds[ji] <= ev.task < bounds[ji + 1] and ev.iter <= mj.n_iters[ji]:
+                ends[ji] = max(ends[ji], ev.end)
+    return ends

@@ -1,0 +1,459 @@
+"""Task placement: IFS (Alg. 2), ETP (Alg. 3) and the DistDGL baseline.
+
+Stores are pre-placed one per machine (constraint (3)): store g lives on
+machine g.  IFS packs the remaining samplers/workers/PSs with a DP over
+per-machine count tuples; ETP then explores the placement space with
+Metropolis-Hastings moves under relaxed capacities (paper §V-B).
+
+Beyond-paper engineering (recorded in EXPERIMENTS.md §Search):
+  * placement-cost memoisation across MCMC steps (placements revisit often);
+  * optional multi-chain search (independent chains, best-of) which
+    parallelises the paper's single chain without changing per-chain
+    semantics;
+  * warm-started re-planning after machine failure (fault-tolerance path).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cluster import (
+    PS,
+    SAMPLER,
+    STORE,
+    WORKER,
+    ClusterSpec,
+    Placement,
+    is_feasible,
+    violation_fraction,
+)
+from .engine import expected_makespan
+from .workload import Workload
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _group_indices(workload: Workload) -> Dict[str, List[int]]:
+    out: Dict[str, List[int]] = {STORE: [], SAMPLER: [], WORKER: [], PS: []}
+    for i, t in enumerate(workload.tasks):
+        out[t.kind].append(i)
+    return out
+
+
+def _kind_demand(workload: Workload, cluster: ClusterSpec, kind: str) -> np.ndarray:
+    for t in workload.tasks:
+        if t.kind == kind:
+            return np.array(
+                [float(t.demand.get(r, 0.0)) for r in cluster.resource_types]
+            )
+    return np.zeros(cluster.R)
+
+
+def store_placement(workload: Workload, cluster: ClusterSpec) -> np.ndarray:
+    """store g -> machine g (constraint (3)).  Multi-job merged workloads
+    wrap around: each job's store g shares machine g (core/multijob.py)."""
+    groups = _group_indices(workload)
+    y = np.full(workload.J, -1, dtype=np.int64)
+    for g, j in enumerate(groups[STORE]):
+        y[j] = g % cluster.M
+    return y
+
+
+# ---------------------------------------------------------------------------
+# IFS — Initial Feasible Solution (Alg. 2)
+# ---------------------------------------------------------------------------
+def ifs_placement(
+    workload: Workload,
+    cluster: ClusterSpec,
+    seed: int = 0,
+) -> Placement:
+    """DP over per-machine packing tuples; returns the first complete
+    feasible placement (Theorem 2: polynomial time)."""
+    rng = np.random.default_rng(seed)
+    groups = _group_indices(workload)
+    n_s, n_w, n_p = len(groups[SAMPLER]), len(groups[WORKER]), len(groups[PS])
+    d_s = _kind_demand(workload, cluster, SAMPLER)
+    d_w = _kind_demand(workload, cluster, WORKER)
+    d_p = _kind_demand(workload, cluster, PS)
+    d_g = _kind_demand(workload, cluster, STORE)
+
+    order = rng.permutation(cluster.M)
+    # residual capacity after the pinned store(s) on each machine
+    resid = cluster.cap.copy()
+    for g, _ in enumerate(groups[STORE]):
+        resid[g % cluster.M] -= d_g
+    if np.any(resid < -1e-9):
+        raise ValueError("graph store does not fit on its machine")
+
+    def eta(cap: np.ndarray, d: np.ndarray, n: int) -> int:
+        """Max count of a task kind that fits in cap."""
+        if n == 0:
+            return 0
+        with np.errstate(divide="ignore"):
+            per = np.where(d > 0, cap / np.where(d > 0, d, 1.0), np.inf)
+        return int(min(n, max(0.0, np.floor(per.min() + 1e-9))))
+
+    def fits(cap: np.ndarray, qs: int, qw: int, qp: int) -> bool:
+        return bool(np.all(qs * d_s + qw * d_w + qp * d_p <= cap + 1e-9))
+
+    # Omega: dict (qs, qw, qp) -> partial assignment [(mi, qs, qw, qp), ...]
+    omega: Dict[Tuple[int, int, int], List[Tuple[int, int, int, int]]] = {}
+    for i, mi in enumerate(order):
+        cap = resid[mi]
+        es, ew, ep = eta(cap, d_s, n_s), eta(cap, d_w, n_w), eta(cap, d_p, n_p)
+        local: List[Tuple[int, int, int]] = [
+            (qs, qw, qp)
+            for qs in range(es + 1)
+            for qw in range(ew + 1)
+            for qp in range(ep + 1)
+            if fits(cap, qs, qw, qp)
+        ]
+        if i == 0:
+            new_omega = {
+                (qs, qw, qp): [(int(mi), qs, qw, qp)] for qs, qw, qp in local
+            }
+        else:
+            new_omega = dict(omega)
+            for (qs0, qw0, qp0), assign in omega.items():
+                # completion check: can the remainder fit entirely on mi?
+                rs, rw, rp = n_s - qs0, n_w - qw0, n_p - qp0
+                if rs <= es and rw <= ew and rp <= ep and fits(cap, rs, rw, rp):
+                    full = assign + [(int(mi), rs, rw, rp)]
+                    return _materialize(workload, cluster, full, groups)
+                for qs1, qw1, qp1 in local:
+                    key = (
+                        min(qs0 + qs1, n_s),
+                        min(qw0 + qw1, n_w),
+                        min(qp0 + qp1, n_p),
+                    )
+                    if (
+                        qs0 + qs1 <= n_s
+                        and qw0 + qw1 <= n_w
+                        and qp0 + qp1 <= n_p
+                        and key not in new_omega
+                    ):
+                        new_omega[key] = assign + [(int(mi), qs1, qw1, qp1)]
+        omega = new_omega
+        if (n_s, n_w, n_p) in omega:
+            return _materialize(workload, cluster, omega[(n_s, n_w, n_p)], groups)
+    raise ValueError("IFS: no feasible placement exists for this job/cluster")
+
+
+def _materialize(
+    workload: Workload,
+    cluster: ClusterSpec,
+    assign: List[Tuple[int, int, int, int]],
+    groups: Dict[str, List[int]],
+) -> Placement:
+    """Turn count tuples into a concrete Placement.
+
+    Identities are assigned to keep a worker's samplers as close as possible
+    (workers first, then their samplers machine-greedily) — IFS only
+    guarantees feasibility; ETP improves quality afterwards."""
+    y = store_placement(workload, cluster)
+    slots_s: List[int] = []
+    slots_w: List[int] = []
+    slots_p: List[int] = []
+    for (m, qs, qw, qp) in assign:
+        slots_s += [m] * qs
+        slots_w += [m] * qw
+        slots_p += [m] * qp
+    for j, m in zip(groups[WORKER], slots_w):
+        y[j] = m
+    # samplers: try to give each worker its samplers on the worker's machine
+    remaining = list(slots_s)
+    for w in groups[WORKER]:
+        for s in workload.sampler_of_worker.get(w, []):
+            wm = int(y[w])
+            if wm in remaining:
+                remaining.remove(wm)
+                y[s] = wm
+    unplaced = [s for s in groups[SAMPLER] if y[s] < 0]
+    for s, m in zip(unplaced, remaining):
+        y[s] = m
+    for j, m in zip(groups[PS], slots_p):
+        y[j] = m
+    assert np.all(y >= 0)
+    return Placement(y)
+
+
+# ---------------------------------------------------------------------------
+# DistDGL baseline placement (§VI-A)
+# ---------------------------------------------------------------------------
+def distdgl_placement(workload: Workload, cluster: ClusterSpec) -> Placement:
+    """Maximally colocate each worker with its samplers (and its 'home'
+    graph partition, round-robin), spilling to the least-loaded feasible
+    machine when resources run out — mirroring the paper's description of
+    DistDGL, including the forced worker/sampler separations it suffers."""
+    y = store_placement(workload, cluster)
+    groups = _group_indices(workload)
+    demands = cluster.demand_matrix(workload.tasks)
+    usage = np.zeros((cluster.M, cluster.R))
+    for j, m in enumerate(y):
+        if m >= 0:
+            usage[m] += demands[j]
+
+    def fits_on(j: int, m: int) -> bool:
+        return bool(np.all(usage[m] + demands[j] <= cluster.cap[m] + 1e-9))
+
+    def place(j: int, pref: Sequence[int]) -> None:
+        for m in pref:
+            if fits_on(j, m):
+                usage[m] += demands[j]
+                y[j] = m
+                return
+        # least-loaded fallback by max fractional utilisation
+        with np.errstate(divide="ignore", invalid="ignore"):
+            frac = np.where(cluster.cap > 0, usage / np.maximum(cluster.cap, 1e-9), 0)
+        order = np.argsort(frac.max(axis=1))
+        for m in order:
+            if fits_on(j, int(m)):
+                usage[int(m)] += demands[j]
+                y[j] = int(m)
+                return
+        raise ValueError("DistDGL placement infeasible: cluster too small")
+
+    for i, w in enumerate(groups[WORKER]):
+        home = i % cluster.M
+        place(w, [home] + list(range(cluster.M)))
+        for s in workload.sampler_of_worker.get(w, []):
+            place(s, [int(y[w])])  # colocate with worker if at all possible
+    for p in groups[PS]:
+        place(p, [])
+    return Placement(y)
+
+
+# ---------------------------------------------------------------------------
+# ETP — Exploratory Task Placement (Alg. 3)
+# ---------------------------------------------------------------------------
+@dataclass
+class ETPResult:
+    placement: Placement
+    cost_trace: List[float]
+    best_makespan: float
+    evaluations: int
+    cache_hits: int
+    wall_time_s: float
+
+
+def etp_search(
+    workload: Workload,
+    cluster: ClusterSpec,
+    *,
+    budget: int = 2000,
+    mu: float = 1.0,
+    beta: float | str = "auto",
+    sim_iters: int = 20,
+    sim_draws: int = 1,
+    seed: int = 0,
+    init: Optional[Placement] = None,
+    policy: str = "oes",
+    cost_fn: Optional[Callable[[Placement], float]] = None,
+    time_budget_s: Optional[float] = None,
+    group_moves: float = 0.35,
+    anneal: bool = True,
+) -> ETPResult:
+    """MCMC search (Alg. 3). ``budget`` = I transitions; ``mu`` = relaxed
+    capacity factor (eq. 22); ``beta`` = temperature (eq. 23).
+
+    ``beta="auto"`` scales the paper's fixed 0.1 to the job's cost
+    magnitude: beta = 4 / (5% of the initial cost), i.e. a 5% makespan
+    change carries logit 4 regardless of whether makespans are seconds or
+    hours.  (The paper's 0.1 presumes makespans of O(100 s); a fixed value
+    degenerates to a uniform random walk on short-horizon simulations —
+    documented in EXPERIMENTS.md §Search.)
+
+    ``cost_fn`` may override the simulated-makespan cost (used by tests and
+    by the infeed planner); the default is the paper's eq. (21):
+    ``T'_Y * (1 + violation%)`` with T'_Y from OES simulation driven by the
+    workload's traffic profile.
+
+    Beyond-paper extensions, both ablatable back to Alg. 3 semantics
+    (``group_moves=0, anneal=False, beta=0.1``) and benchmarked in
+    EXPERIMENTS.md §Search:
+      * ``group_moves``: with this probability a selected *worker* drags its
+        dedicated samplers along — single-task moves cannot escape the
+        colocation basins that IFS starts in without crossing high-cost
+        valleys;
+      * ``anneal``: geometric beta ramp from beta/4 to 4*beta over the
+        budget (explore -> exploit)."""
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    groups = _group_indices(workload)
+    movable = groups[SAMPLER] + groups[WORKER] + groups[PS]
+    demands = cluster.demand_matrix(workload.tasks)
+
+    cur = (init or ifs_placement(workload, cluster, seed=seed)).copy()
+    cache: Dict[bytes, Tuple[float, float]] = {}
+    evals = hits = 0
+
+    def measure(p: Placement) -> Tuple[float, float]:
+        """(makespan T'_Y, cost) with memoisation."""
+        nonlocal evals, hits
+        k = p.key()
+        if k in cache:
+            hits += 1
+            return cache[k]
+        evals += 1
+        if cost_fn is not None:
+            t = cost_fn(p)
+        else:
+            t = expected_makespan(
+                workload, cluster, p, policy=policy, n_iters=sim_iters,
+                n_draws=sim_draws, seed=seed,
+            )
+        c = t * (1.0 + violation_fraction(cluster, demands, p))
+        cache[k] = (t, c)
+        return t, c
+
+    cur_t, cur_cost = measure(cur)
+    if beta == "auto":
+        beta = 4.0 / max(0.05 * cur_cost, 1e-9)
+    best = cur.copy() if is_feasible(cluster, demands, cur) else None
+    best_t = cur_t if best is not None else math.inf
+    trace = [cur_cost]
+
+    usage = np.zeros((cluster.M, cluster.R))
+    np.add.at(usage, cur.y, demands)
+
+    worker_ids = groups[WORKER]
+    for z in range(budget):
+        if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
+            break
+        beta_z = beta
+        if anneal and budget > 1:
+            beta_z = (beta / 4.0) * (16.0 ** (z / (budget - 1)))
+        j = int(rng.choice(movable))
+        move_set = [j]
+        if (
+            group_moves > 0
+            and j in workload.sampler_of_worker
+            and rng.random() < group_moves
+        ):
+            move_set = [j] + list(workload.sampler_of_worker[j])
+        d_move = demands[move_set].sum(axis=0)
+        m_old = int(cur.y[j])
+        # M_avail: other machines that can host the move under (1+mu) capacity
+        freed = np.zeros_like(d_move)
+        for jj in move_set:
+            if int(cur.y[jj]) == m_old:
+                freed += demands[jj]
+        cand = [
+            m
+            for m in range(cluster.M)
+            if m != m_old
+            and np.all(usage[m] + d_move <= cluster.cap[m] * (1 + mu) + 1e-9)
+        ]
+        if not cand:
+            trace.append(cur_cost)
+            continue
+        m_new = int(rng.choice(cand))
+        prop = cur.copy()
+        for jj in move_set:
+            prop.y[jj] = m_new
+        prop_t, prop_cost = measure(prop)
+        accept_p = min(1.0, math.exp(min(50.0, beta_z * (cur_cost - prop_cost))))
+        if rng.random() <= accept_p:
+            for jj in move_set:
+                usage[int(cur.y[jj])] -= demands[jj]
+                usage[m_new] += demands[jj]
+            cur, cur_t, cur_cost = prop, prop_t, prop_cost
+            if prop_t < best_t and is_feasible(cluster, demands, prop):
+                best, best_t = prop.copy(), prop_t
+        trace.append(cur_cost)
+
+    if best is None:
+        # fall back to the feasible IFS start (always feasible by Theorem 2)
+        best = init or ifs_placement(workload, cluster, seed=seed)
+        best_t, _ = measure(best)
+    return ETPResult(
+        placement=best,
+        cost_trace=trace,
+        best_makespan=best_t,
+        evaluations=evals,
+        cache_hits=hits,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+def etp_multichain(
+    workload: Workload,
+    cluster: ClusterSpec,
+    *,
+    n_chains: int = 4,
+    budget: int = 2000,
+    seed: int = 0,
+    include_baseline_inits: bool = True,
+    **kw,
+) -> ETPResult:
+    """Beyond-paper: independent MCMC chains from diverse starts (random IFS
+    machine orders + the DistDGL colocation heuristic), best-of.  Chains are
+    embarrassingly parallel on a real cluster; here they run sequentially
+    with a shared per-chain budget so total simulation work matches a
+    single-chain run of ``budget`` transitions."""
+    per = max(1, budget // n_chains)
+    best: Optional[ETPResult] = None
+    for c in range(n_chains):
+        init = None
+        if include_baseline_inits and c == 1:
+            try:
+                init = distdgl_placement(workload, cluster)
+            except ValueError:
+                init = None
+        r = etp_search(
+            workload, cluster, budget=per, seed=seed + 7919 * c, init=init, **kw
+        )
+        if best is None or r.best_makespan < best.best_makespan:
+            best = r
+    assert best is not None
+    return best
+
+
+def replan_after_failure(
+    workload: Workload,
+    cluster: ClusterSpec,
+    placement: Placement,
+    failed_machine: int,
+    *,
+    budget: int = 300,
+    seed: int = 0,
+    **kw,
+) -> ETPResult:
+    """Fault-tolerance path: machine fails -> move its orphaned tasks to the
+    surviving machine with most residual capacity, then warm-start ETP from
+    that placement on the reduced cluster.
+
+    Note graph stores are re-pinned: the failed machine's partition is
+    re-hosted on the machine with the most free memory (in practice it is
+    restored from replicated storage); its tasks join the movable set."""
+    survivors = [m for m in range(cluster.M) if m != failed_machine]
+    remap = {m: i for i, m in enumerate(survivors)}
+    new_cluster = cluster.without_machine(failed_machine)
+    demands = new_cluster.demand_matrix(workload.tasks)
+    y = np.array([remap.get(int(m), -1) for m in placement.y], dtype=np.int64)
+    usage = np.zeros((new_cluster.M, new_cluster.R))
+    for j, m in enumerate(y):
+        if m >= 0:
+            usage[m] += demands[j]
+    for j in np.where(y < 0)[0]:
+        head = np.argsort((usage / np.maximum(new_cluster.cap, 1e-9)).max(axis=1))
+        placed = False
+        for m in head:
+            if np.all(usage[m] + demands[j] <= new_cluster.cap[m] * 2.0):
+                usage[m] += demands[j]
+                y[j] = int(m)
+                placed = True
+                break
+        if not placed:  # pragma: no cover - extreme overload
+            y[j] = int(head[0])
+            usage[int(head[0])] += demands[j]
+    warm = Placement(y)
+    return etp_search(
+        workload, new_cluster, budget=budget, seed=seed, init=warm, **kw
+    )

@@ -1,0 +1,4 @@
+from .graph import PartitionedGraph, sample_blocks, synthetic_graph
+from .pipeline import TokenPipeline
+
+__all__ = ["PartitionedGraph", "sample_blocks", "synthetic_graph", "TokenPipeline"]

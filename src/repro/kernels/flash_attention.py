@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention (forward) with causal / sliding-window masks
+and gemma2-style tanh softcapping.
+
+Blocking: grid (B, H, Sq/bq, Sk/bk); the KV axis is the innermost
+(sequential) dimension — the online-softmax running state (m, l, acc)
+lives in VMEM scratch and is flushed to the output block on the last KV
+step.  Q/K/V blocks stream HBM->VMEM via BlockSpec index maps; MXU-aligned
+defaults bq=bk=128, head_dim padded to 128 by the wrapper (ops.py).
+
+Per-(q,k) block mask is computed from iota position arithmetic — no S x S
+mask tensor ever materializes (cf. layers._attend_chunked, the XLA mirror).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: Optional[int],
+    softcap: Optional[float], bq: int, bk: int, nk: int, q_offset: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    iq = pl.program_id(2)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, H, Sq, D]
+    k: jnp.ndarray,  # [B, H, Sk, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = scale if scale is not None else d**-0.5
+
+    kern = functools.partial(
+        _kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=nk, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,77 @@
+"""Pallas TPU grouped GEMM for MoE expert FFNs (megablocks-style).
+
+Layout contract: token rows arrive sorted by expert and padded so every
+expert's segment is a multiple of the token block bt (ops.py builds this
+layout from arbitrary group_sizes).  Each token block then belongs to
+exactly ONE expert, whose id is scalar-prefetched ([nt] int32) and used by
+the weight BlockSpec index map — so expert weights stream HBM->VMEM only
+for blocks that actually have tokens routed to them.
+
+Grid (nt, nf, nk): K (d_model) is innermost/sequential with an f32 VMEM
+accumulator, flushed to the output block on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(be_ref, x_ref, w_ref, o_ref, acc, *, nkd: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ik == nkd - 1)
+    def _flush():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def moe_gemm_padded(
+    x: jnp.ndarray,  # [Tp, D] rows sorted by expert, bt-aligned segments
+    w: jnp.ndarray,  # [E, D, F]
+    block_expert: jnp.ndarray,  # [Tp/bt] int32 expert id per token block
+    *,
+    bt: int = 128,
+    bf: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    tp, d = x.shape
+    e, _, f = w.shape
+    bt = min(bt, tp)
+    bf = min(bf, f)
+    bk = min(bk, d)
+    assert tp % bt == 0 and f % bf == 0 and d % bk == 0, (tp, bt, f, bf, d, bk)
+    nt, nf, nkd = tp // bt, f // bf, d // bk
+    kern = functools.partial(_kernel, nkd=nkd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, nf, nkd),
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda it, jf, ik, be: (it, ik)),
+            pl.BlockSpec((1, bk, bf), lambda it, jf, ik, be: (be[it], ik, jf)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda it, jf, ik, be: (it, jf)),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((tp, f), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_expert, x, w)

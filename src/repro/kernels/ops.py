@@ -1,0 +1,98 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each wrapper: shape/padding plumbing + interpret-mode dispatch (CPU
+containers run the kernel bodies in Python via interpret=True; on TPU the
+same call sites compile to Mosaic).  ``use_pallas_default()`` checks the
+backend so model code can call these unconditionally.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .moe_gemm import moe_gemm_padded as _moe_gemm
+from .sage_aggregate import sage_aggregate as _sage
+from .ssd_scan import ssd_scan as _ssd
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale", "bq", "bk"))
+def flash_attention(
+    q, k, v, *, causal=True, window=None, softcap=None, scale=None, bq=128, bk=128
+):
+    """[B, H, S, D] attention; kv heads must be pre-broadcast to H."""
+    return _flash(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        bq=bq, bk=bk, interpret=use_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128):
+    """Mamba2 SSD over [B, S, H, hd] with group-shared B/C [B, S, ds]."""
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=use_interpret())
+
+
+def padded_group_layout(group_sizes: jnp.ndarray, t: int, bt: int):
+    """Build the bt-aligned segment layout for moe_gemm.
+
+    Returns (padded_len, block_expert [padded_len/bt], src_for_padded
+    [padded_len] (-1 = zero row), padded_pos_for_src [t]).
+    Shapes are static: padded_len = t rounded up + E*(bt-1) rounded up.
+    """
+    e = group_sizes.shape[0]
+    padded_len = ((t + e * (bt - 1)) + bt - 1) // bt * bt
+    gs = group_sizes.astype(jnp.int32)
+    off = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(gs)[:-1]])
+    pgs = (gs + bt - 1) // bt * bt
+    poff = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(pgs)[:-1]])
+    # expert per padded block
+    blocks = padded_len // bt
+    bstart = jnp.arange(blocks, dtype=jnp.int32) * bt
+    block_expert = jnp.clip(
+        jnp.searchsorted(jnp.cumsum(pgs), bstart, side="right"), 0, e - 1
+    ).astype(jnp.int32)
+    # src row for each padded row (or -1)
+    r = jnp.arange(padded_len, dtype=jnp.int32)
+    re = jnp.clip(jnp.searchsorted(jnp.cumsum(pgs), r, side="right"), 0, e - 1)
+    rank = r - poff[re]
+    src = jnp.where(rank < gs[re], off[re] + rank, -1)
+    # padded position of each source row
+    i = jnp.arange(t, dtype=jnp.int32)
+    ie = jnp.clip(jnp.searchsorted(jnp.cumsum(gs), i, side="right"), 0, e - 1)
+    ppos = poff[ie] + (i - off[ie])
+    return padded_len, block_expert, src, ppos
+
+
+@partial(jax.jit, static_argnames=("bt", "bf", "bk"))
+def moe_grouped_gemm(x, w, group_sizes, *, bt=128, bf=128, bk=128):
+    """ragged_dot-equivalent grouped GEMM: x [T, D] sorted by expert,
+    w [E, D, F], group_sizes [E] -> [T, F] (rows beyond sum(gs) are zero)."""
+    t, d = x.shape
+    _, block_expert, src, ppos = padded_group_layout(group_sizes, t, bt)
+    xp = jnp.where((src >= 0)[:, None], x[jnp.maximum(src, 0)], 0)
+    out_p = _moe_gemm(
+        xp, w, block_expert, bt=bt, bf=bf, bk=bk, interpret=use_interpret()
+    )
+    valid = jnp.arange(t) < group_sizes.sum()
+    return jnp.where(valid[:, None], out_p[ppos], 0).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("bm",))
+def sage_aggregate(x, idx, *, bm=128):
+    """Mean of sampled neighbor rows: x [N, F], idx [M, K] (-1 pad) -> [M, F]."""
+    m = idx.shape[0]
+    pad = (-m) % bm
+    if pad:
+        idx = jnp.concatenate(
+            [idx, jnp.full((pad, idx.shape[1]), -1, idx.dtype)], axis=0
+        )
+    out = _sage(x, idx.astype(jnp.int32), bm=bm, interpret=use_interpret())
+    return out[:m]

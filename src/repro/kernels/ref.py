@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each function is the mathematically transparent implementation the kernels
+are validated against (tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, H, Sq, D]
+    k: jnp.ndarray,  # [B, H, Sk, D]
+    v: jnp.ndarray,  # [B, H, Sk, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, sk = q.shape[2], k.shape[2]
+    iq = jnp.arange(sq)[:, None] + q_offset
+    jk = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= jk <= iq
+    if window is not None:
+        mask &= jk > iq - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jnp.ndarray,  # [B, S, H, P]
+    dt: jnp.ndarray,  # [B, S, H] (post softplus)
+    A: jnp.ndarray,  # [H] negative
+    Bm: jnp.ndarray,  # [B, S, H, N]
+    Cm: jnp.ndarray,  # [B, S, H, N]
+) -> jnp.ndarray:
+    """Sequential (exact) SSD recurrence:
+    h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t . h_t"""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+
+    def step(hst, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        decay = jnp.exp(A * dtt)  # [B,H]
+        hst = hst * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt.astype(jnp.float32), bt.astype(jnp.float32), dtt
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", ct.astype(jnp.float32), hst)
+        return hst, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        Bm.swapaxes(0, 1),
+        Cm.swapaxes(0, 1),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)  # [B, S, H, P]
+
+
+def grouped_gemm_ref(
+    x: jnp.ndarray,  # [T, D] rows sorted/padded by expert
+    w: jnp.ndarray,  # [E, D, F]
+    group_sizes: jnp.ndarray,  # [E] int32, sum <= T
+) -> jnp.ndarray:
+    return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
+
+
+def sage_aggregate_ref(
+    x: jnp.ndarray,  # [N, F] node features
+    idx: jnp.ndarray,  # [M, K] neighbor ids, -1 = padding
+) -> jnp.ndarray:
+    """Masked mean of sampled neighbor features per output node."""
+    mask = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    feats = x[safe]  # [M, K, F]
+    feats = jnp.where(mask[..., None], feats, 0.0)
+    denom = jnp.maximum(mask.sum(-1, keepdims=True), 1)
+    return (feats.sum(1) / denom).astype(x.dtype)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid (B, H, S/Q) with the chunk axis innermost & sequential: the carried
+state h [hd, ds] lives in VMEM scratch across chunk steps (exactly the
+recurrence the XLA mirror models/ssm.ssd_chunked implements with
+lax.scan).  Per chunk, the kernel computes the intra-chunk masked
+quadratic form on the MXU plus the inter-chunk contribution of the carried
+state, then advances the state:
+
+  y   = (tril(C B^T * decay) * dt) x  +  C (exp(seg) .) h
+  h' = exp(total) h  +  sum_j exp(total - seg_j) dt_j B_j x_j^T
+
+B/C are shared across heads (n_groups=1), so their BlockSpec ignores the
+head grid index — they stream once per (batch, chunk) and are reused for
+all heads from VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_scr, *, q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = a_ref[0]  # scalar for this head
+    x = x_ref[0, :, 0].astype(jnp.float32)  # [q, hd]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [q]
+    bb = b_ref[0].astype(jnp.float32)  # [q, ds]
+    cc = c_ref[0].astype(jnp.float32)  # [q, ds]
+
+    a = A * dt  # [q]
+    seg = jnp.cumsum(a)
+    total = seg[-1]
+    rel = seg[:, None] - seg[None, :]  # [q_i, q_j]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    )
+    decay = jnp.exp(jnp.where(mask, rel, -jnp.inf))
+    cb = jax.lax.dot_general(
+        cc, bb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [q_i, q_j]
+    w = cb * decay * dt[None, :]
+    y_intra = jax.lax.dot(w, x, preferred_element_type=jnp.float32)  # [q, hd]
+    y_inter = jnp.exp(seg)[:, None] * jax.lax.dot(
+        cc, h_scr[...].T, preferred_element_type=jnp.float32
+    )  # [q, hd]
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    carry = jnp.exp(total - seg) * dt  # [q]
+    h_new = jnp.exp(total) * h_scr[...] + jax.lax.dot_general(
+        x, bb * carry[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [hd, ds]
+    h_scr[...] = h_new
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # [B, S, H, hd]
+    dt: jnp.ndarray,  # [B, S, H] post-softplus, f32
+    A: jnp.ndarray,  # [H] negative
+    Bm: jnp.ndarray,  # [B, S, ds]  (n_groups=1: shared across heads)
+    Cm: jnp.ndarray,  # [B, S, ds]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, h, hd = x.shape
+    ds = Bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    kern = functools.partial(_kernel, q=q)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, q, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, q, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, q, ds), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, q, ds), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(A, x, dt, Bm, Cm)

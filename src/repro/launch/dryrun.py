@@ -1,0 +1,245 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step).lower(**ShapeDtypeStructs).compile()
+on the production meshes (16x16 single-pod, 2x16x16 multi-pod), printing
+``compiled.memory_analysis()`` (fits-per-device proof) and
+``compiled.cost_analysis()`` (FLOPs/bytes for the roofline), plus a parse
+of the optimized HLO summing operand bytes of every collective op.
+
+Results are cached as JSON under results/dryrun/ — benchmarks and the
+roofline report read from there.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh pod            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--force]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "u1": 1, "s1": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?([%\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\((.*)$"
+)
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Two-pass: record every instruction's result-type bytes, then for each
+    collective sum its operands' bytes (all-gather counts its (smaller)
+    inputs; reduce-scatter its (larger) inputs — per the assignment's
+    definition).  ``*-start`` variants are counted; ``*-done`` skipped so
+    async pairs are not double-counted.
+    """
+    shapes = {}
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        shapes[name] = _shape_bytes(type_str)
+        base = op.replace("-start", "")
+        if base in COLLECTIVES and not op.endswith("-done"):
+            # operand names: %foo or plain foo tokens before any attr kwargs
+            arg_str = rest.split(")")[0]
+            operands = re.findall(r"([%\w.\-]+)", arg_str)
+            ops.append((name, base, operands, line))
+    per_kind = {k: 0 for k in COLLECTIVES}
+    count = {k: 0 for k in COLLECTIVES}
+    for name, base, operands, line in ops:
+        b = sum(shapes.get(o, 0) for o in operands if o in shapes)
+        if b == 0:  # operand not found (e.g. constants): fall back to result
+            b = shapes.get(name, 0)
+        per_kind[base] += b
+        count[base] += 1
+    return {
+        "total_bytes": int(sum(per_kind.values())),
+        "bytes_by_kind": {k: int(v) for k, v in per_kind.items() if v},
+        "count_by_kind": {k: int(v) for k, v in count.items() if v},
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose: bool = True) -> dict:
+    import jax
+
+    from .. import configs as cfgs
+    from ..launch.mesh import make_production_mesh
+    from ..models.model import build_model
+    from ..sharding import ctx_for_mesh
+    from ..train.train_loop import TrainStepBuilder
+
+    cfg = cfgs.get_config(arch)
+    sh = cfgs.SHAPES[shape_name]
+    status = cfgs.cell_status(cfg, shape_name)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": status,
+        "kind": sh["kind"],
+        "seq_len": sh["seq_len"],
+        "global_batch": sh["global_batch"],
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if status != "run":
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    ctx = ctx_for_mesh(mesh)
+    model = build_model(cfg, ctx)
+    builder = TrainStepBuilder(model)
+    t0 = time.perf_counter()
+    with mesh:
+        if sh["kind"] == "train":
+            lowered = builder.lower_train(sh["global_batch"], sh["seq_len"])
+        elif sh["kind"] == "prefill":
+            lowered = builder.lower_prefill(sh["global_batch"], sh["seq_len"])
+        else:  # decode: one token against a seq_len cache
+            lowered = builder.lower_decode(sh["global_batch"], sh["seq_len"])
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"[{arch} / {shape_name} / {mesh_kind}] memory_analysis:")
+        print(" ", mem)
+        print(f"[{arch} / {shape_name} / {mesh_kind}] cost_analysis (flops/bytes):",
+              {k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from .hlo_cost import analyze
+
+    try:
+        scan_aware = analyze(hlo)
+    except Exception as e:  # noqa: BLE001 - counter is best-effort
+        scan_aware = {"error": f"{type(e).__name__}: {e}"}
+    rec.update(
+        {
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "n_devices": int(mesh.size),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "cost": {
+                "flops": float(cost.get("flops", -1)),
+                "transcendentals": float(cost.get("transcendentals", -1)),
+                "bytes_accessed": float(cost.get("bytes accessed", -1)),
+            },
+            "collectives": coll,
+            "scan_aware": scan_aware,
+        }
+    )
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> Path:
+    return RESULTS / f"{arch}__{shape}__{mesh}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from .. import configs as cfgs
+
+    archs = [args.arch] if args.arch else cfgs.ARCH_IDS
+    shapes = [args.shape] if args.shape else list(cfgs.SHAPES)
+    meshes = [args.mesh] if args.mesh else ["pod", "multipod"]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                out = cell_path(arch, shape, mesh)
+                if out.exists() and not args.force:
+                    rec = json.loads(out.read_text())
+                    print(f"cached  {arch:24s} {shape:12s} {mesh:9s} {rec['status']}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mesh)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh,
+                        "status": f"FAILED: {type(e).__name__}: {e}",
+                    }
+                    failures.append((arch, shape, mesh))
+                out.write_text(json.dumps(rec, indent=1))
+                extra = ""
+                if "compile_s" in rec:
+                    extra = (
+                        f"compile={rec['compile_s']:.0f}s "
+                        f"temp/dev={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                        f"coll={rec['collectives']['total_bytes']/2**20:.0f}MiB"
+                    )
+                print(f"done    {arch:24s} {shape:12s} {mesh:9s} {rec['status']} {extra}")
+    if failures:
+        print(f"\n{len(failures)} FAILED cells: {failures}")
+        sys.exit(1)
+    print("\nall requested dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Scan-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies
+ONCE, which under-reports layer-scanned transformers by ~n_layers x.  The
+optimized HLO, however, annotates every while with
+``backend_config={"known_trip_count":{"n":"24"}}`` — so we parse the module,
+build the call graph (while bodies/conditions, fusions, conditionals),
+propagate execution multipliers from ENTRY, and accumulate:
+
+  * dot_flops     — 2 * prod(result_dims) * prod(contracted lhs dims)
+                    per dot/ragged-dot, times the computation's multiplier
+                    (the MFU convention: matmul FLOPs only);
+  * hbm_bytes     — per *materialized* instruction (instructions in
+                    non-fusion computations): result bytes + operand bytes.
+                    Fusion internals never touch HBM; the fusion call
+                    itself is counted by its operands/result — matching how
+                    XLA:TPU accounts "bytes accessed" post-fusion;
+  * collective_bytes — operand bytes of all-gather / all-reduce /
+                    reduce-scatter / all-to-all / collective-permute,
+                    times multiplier, split by kind.
+
+All numbers are per-device (the SPMD module is the per-device program).
+Validated against analytic 6ND in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT = re.compile(r"/\*.*?\*/")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_OP_CALL = re.compile(r"\s*([\w\-]+)\(")
+_TRIP = re.compile(r'known_trip_count[\\":{\s]+n[\\":\s]+(\d+)')
+_CALLEE = re.compile(r"(%[\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_TOKEN.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in m.group(2).split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _balanced_prefix(s: str) -> int:
+    """Index just past the closing paren matching s[0] == '('."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: List[_Instr] = field(default_factory=list)
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        end = _balanced_prefix(rest)
+        type_str, rest = rest[:end], rest[end:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    om = _OP_CALL.match(rest)
+    if not om:
+        return None
+    op = om.group(1)
+    args = rest[om.end() - 1:]
+    end = _balanced_prefix(args)
+    operand_str, attrs = args[1 : end - 1], args[end:]
+    operands = _CALLEE.findall(operand_str)
+    return _Instr(name, type_str, op, operands, attrs)
+
+
+def _parse(hlo: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for raw in hlo.splitlines():
+        line = _COMMENT.sub("", raw)
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("(")[0]:
+            hm = _CALLEE.search(stripped.split("(")[0])
+            if hm:
+                cur = _Comp(hm.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        inst = _parse_instr(line)
+        if inst:
+            cur.instrs.append(inst)
+    return comps, entry
+
+
+def _dot_flops(instr: _Instr, shapes: Dict[str, str]) -> float:
+    """2 * prod(result) * prod(lhs contracting dims)."""
+    result = _shape_dims(instr.type_str)
+    if not result:
+        return 0.0
+    rn = 1
+    for d in result[0][1]:
+        rn *= d
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    if m and instr.operands:
+        dims = _shape_dims(shapes.get(instr.operands[0], ""))
+        if dims:
+            lhs_dims = dims[0][1]
+            for idx in m.group(1).split(","):
+                if idx != "" and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+    return 2.0 * rn * k
+
+
+def analyze(hlo: str) -> Dict:
+    comps, entry = _parse(hlo)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for i in c.instrs:
+            shapes[i.name] = i.type_str
+
+    # call edges with multipliers
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    fusion_bodies = set()
+    for c in comps.values():
+        for i in c.instrs:
+            trip = 1.0
+            if i.op == "while":
+                tm = _TRIP.search(i.attrs)
+                trip = float(tm.group(1)) if tm else 1.0
+            bm = _BRANCHES.search(i.attrs)
+            if bm:
+                for callee in _CALLEE.findall(bm.group(1)):
+                    if callee in comps:
+                        edges[c.name].append((callee, 1.0))
+            for attr in ("calls=", "body=", "condition=", "to_apply=",
+                         "true_computation=", "false_computation="):
+                pos = i.attrs.find(attr)
+                if pos < 0:
+                    continue
+                cm = _CALLEE.match(i.attrs[pos + len(attr):])
+                if cm and cm.group(1) in comps:
+                    t = trip if attr in ("body=", "condition=") else 1.0
+                    edges[c.name].append((cm.group(1), t))
+                    if attr == "calls=" and i.op == "fusion":
+                        fusion_bodies.add(cm.group(1))
+
+    # propagate over the (acyclic) call graph, topological via repeated relax
+    order = [entry]
+    seen = {entry}
+    qi = 0
+    while qi < len(order):
+        c = order[qi]
+        qi += 1
+        for callee, t in edges[c]:
+            mult[callee] += mult[c] * t
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+
+    dot_flops = 0.0
+    ragged_flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    coll_n = {k: 0 for k in COLLECTIVES}
+    for c in comps.values():
+        m = mult[c.name]
+        if m <= 0:
+            continue
+        is_fusion_body = c.name in fusion_bodies
+        for i in c.instrs:
+            if i.op in ("dot", "ragged-dot"):
+                f = _dot_flops(i, shapes) * m
+                dot_flops += f
+                if i.op == "ragged-dot":
+                    ragged_flops += f
+            base = i.op.replace("-start", "")
+            if base in COLLECTIVES and not i.op.endswith("-done"):
+                b = sum(_shape_bytes(shapes.get(n, "")) for n in i.operands)
+                if b == 0:
+                    b = _shape_bytes(i.type_str)
+                coll[base] += b * m
+                coll_n[base] += int(m)
+            if not is_fusion_body and i.op not in _SKIP_BYTES_OPS:
+                b = _shape_bytes(i.type_str) + sum(
+                    _shape_bytes(shapes.get(n, "")) for n in i.operands
+                )
+                hbm_bytes += b * m
+    return {
+        "dot_flops": dot_flops,
+        "ragged_dot_flops": ragged_flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": {k: v for k, v in coll.items() if v},
+        "collective_count": {k: v for k, v in coll_n.items() if v},
+        "collective_total_bytes": sum(coll.values()),
+        "n_computations": len(comps),
+    }

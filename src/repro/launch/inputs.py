@@ -1,0 +1,76 @@
+"""Input construction: concrete batches (smoke tests / real training) and
+ShapeDtypeStruct stand-ins (dry-run) from one source of truth, so the
+lowered shapes always match what the pipeline feeds.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..sharding import ShardCtx
+
+
+def train_shapes(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Tuple]:
+    """name -> (shape, dtype) for one training batch."""
+    if cfg.frontend == "frames":
+        return {
+            "frames": ((batch, seq, cfg.d_model), jnp.bfloat16),
+            "labels": ((batch, seq), jnp.int32),
+        }
+    if cfg.frontend == "patches":
+        text = seq - cfg.n_patches
+        assert text > 0, f"seq {seq} <= patch prefix {cfg.n_patches}"
+        return {
+            "tokens": ((batch, text), jnp.int32),
+            "patches": ((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            "labels": ((batch, text), jnp.int32),
+        }
+    return {
+        "tokens": ((batch, seq), jnp.int32),
+        "labels": ((batch, seq), jnp.int32),
+    }
+
+
+def train_structs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        k: jax.ShapeDtypeStruct(shape, dt)
+        for k, (shape, dt) in train_shapes(cfg, batch, seq).items()
+    }
+
+
+def batch_specs(cfg: ModelConfig, ctx: ShardCtx, batch: int) -> Dict[str, P]:
+    probe_seq = cfg.n_patches + 8  # seq value irrelevant for specs
+    shapes = train_shapes(cfg, batch, probe_seq)
+    out = {}
+    for k, (shape, _) in shapes.items():
+        out[k] = ctx.batch_spec(batch, len(shape) - 1)
+    return out
+
+
+def train_batch(
+    cfg: ModelConfig, batch: int, seq: int, key: jax.Array
+) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch (smoke tests, micro-training)."""
+    ks = jax.random.split(key, 3)
+    out: Dict[str, jnp.ndarray] = {}
+    for name, (shape, dt) in train_shapes(cfg, batch, seq).items():
+        if name == "labels":
+            out[name] = jax.random.randint(ks[0], shape, 0, cfg.vocab, jnp.int32)
+        elif name == "tokens":
+            out[name] = jax.random.randint(ks[1], shape, 0, cfg.vocab, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(ks[2], shape) * 0.02).astype(dt)
+    return out
+
+
+def decode_inputs_structs(batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "token": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,45 @@
+"""Production meshes (DESIGN §5).
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis extends data parallelism across the DCN/ICI-superpod boundary
+(its collectives are what core/infeed_planner schedules at the host level).
+
+These are FUNCTIONS, not module constants: importing this module never
+touches jax device state, so smoke tests keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ..sharding import ShardCtx, ctx_for_mesh
+
+# TPU v5e hardware constants used by the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — used by the
+    multi-device CPU tests (XLA_FLAGS=--xla_force_host_platform_device_count)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def production_ctx(*, multi_pod: bool = False) -> ShardCtx:
+    return ctx_for_mesh(make_production_mesh(multi_pod=multi_pod))

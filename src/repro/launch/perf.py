@@ -1,0 +1,166 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Perf hillclimb runner (EXPERIMENTS §Perf).
+
+Recompiles a chosen (arch x shape) cell with named optimization variants
+and reports the three roofline terms vs the cached baseline
+(results/dryrun).  Variants are applied via config/builder knobs:
+
+  attn_mode=pad    layers.py pad_heads TP layout (vs head_dim psums)
+  accum=K          gradient accumulation over K microbatches
+  opt8             m_dtype=bfloat16 + factored_v (12 B/param -> ~6 B/param)
+  chunk=N          SSD chunk size
+
+Results land in results/perf/<arch>__<shape>__<variant>.json.
+
+  PYTHONPATH=src python -m repro.launch.perf --cell llama4 --variant pad
+  PYTHONPATH=src python -m repro.launch.perf --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+PERF_DIR = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+# The three hillclimb cells (chosen per EXPERIMENTS §Roofline):
+#   worst-roofline/most-collective-bound: llama4 prefill (head_dim psums)
+#   memory-infeasible + MoE flagship:     kimi train_4k
+#   dense-train flagship (paper-technique tie-in): gemma2 train_4k
+CELLS = {
+    "llama4": ("llama4-scout-17b-a16e", "prefill_32k"),
+    "kimi": ("kimi-k2-1t-a32b", "train_4k"),
+    "gemma2": ("gemma2-27b", "train_4k"),
+}
+
+VARIANTS = {
+    "llama4": {
+        "pad": dict(attn_mode="pad"),
+    },
+    "kimi": {
+        "accum4": dict(accum=4),
+        "accum4_opt8": dict(accum=4, opt8=True),
+        "accum8_opt8": dict(accum=8, opt8=True),
+        "pad_opt8_accum4": dict(accum=4, opt8=True, attn_mode="pad"),
+    },
+    "gemma2": {
+        "accum4": dict(accum=4),
+        "accum8": dict(accum=8),
+    },
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, knobs: dict, mesh_kind="pod"):
+    import jax
+
+    from .. import configs as cfgs
+    from ..launch.hlo_cost import analyze
+    from ..launch.mesh import make_production_mesh
+    from ..models.model import build_model
+    from ..sharding import ctx_for_mesh
+    from ..train.optimizer import AdamWConfig
+    from ..train.train_loop import TrainStepBuilder
+
+    cfg = cfgs.get_config(arch)
+    if "attn_mode" in knobs:
+        cfg = dataclasses.replace(cfg, attn_mode=knobs["attn_mode"])
+    if "chunk" in knobs and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=knobs["chunk"])
+        )
+    opt = AdamWConfig()
+    if knobs.get("opt8"):
+        opt = dataclasses.replace(opt, m_dtype="bfloat16", factored_v=True)
+    sh = cfgs.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    ctx = ctx_for_mesh(mesh)
+    builder = TrainStepBuilder(
+        build_model(cfg, ctx), opt, accum_steps=knobs.get("accum", 1)
+    )
+    t0 = time.perf_counter()
+    with mesh:
+        if sh["kind"] == "train":
+            lowered = builder.lower_train(sh["global_batch"], sh["seq_len"])
+        elif sh["kind"] == "prefill":
+            lowered = builder.lower_prefill(sh["global_batch"], sh["seq_len"])
+        else:
+            lowered = builder.lower_decode(sh["global_batch"], sh["seq_len"])
+        compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    sa = analyze(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "variant": variant,
+        "knobs": {k: v for k, v in knobs.items()},
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+        },
+        "scan_aware": sa,
+    }
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    out = PERF_DIR / f"{arch}__{shape}__{variant}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def compare(arch: str, shape: str, rec: dict):
+    from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    from ..roofline import load_cell
+
+    base = load_cell(arch, shape, "pod")
+    bs, vs = base["scan_aware"], rec["scan_aware"]
+
+    def terms(sa, mem):
+        return (
+            sa["dot_flops"] / PEAK_FLOPS_BF16,
+            sa["hbm_bytes"] / HBM_BW,
+            sa["collective_total_bytes"] / ICI_BW,
+            (mem["temp_bytes"] + mem["argument_bytes"]) / 2**30,
+        )
+
+    b = terms(bs, base["memory"])
+    v = terms(vs, rec["memory"])
+    names = ("compute_s", "memory_s", "collective_s", "live_GiB")
+    print(f"\n== {arch} / {shape} / {rec['variant']} ==")
+    for n, bb, vv in zip(names, b, v):
+        delta = (vv / bb - 1) * 100 if bb > 0 else float("inf")
+        print(f"  {n:13s} {bb:10.3f} -> {vv:10.3f}  ({delta:+.1f}%)")
+    return dict(zip(names, zip(b, v)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), default=None)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    cells = [args.cell] if args.cell else list(CELLS)
+    for c in cells:
+        arch, shape = CELLS[c]
+        variants = VARIANTS[c]
+        if args.variant:
+            variants = {args.variant: variants[args.variant]}
+        for vname, knobs in variants.items():
+            out = PERF_DIR / f"{arch}__{shape}__{vname}.json"
+            if out.exists() and not args.force:
+                rec = json.loads(out.read_text())
+            else:
+                print(f"compiling {arch}/{shape}/{vname} ...", flush=True)
+                rec = run_variant(arch, shape, vname, knobs)
+            compare(arch, shape, rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Serving driver: batched decode with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --smoke --requests 16 --slots 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from .. import configs as cfgs
+from ..models.model import build_model
+from ..serve.engine import Request, ServeEngine
+from ..sharding import single_device_ctx
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=cfgs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--smax", type=int, default=128)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    args = ap.parse_args()
+    cfg = cfgs.get_smoke_config(args.arch) if args.smoke else cfgs.get_config(args.arch)
+    if cfg.is_encoder:
+        raise SystemExit("encoder-only archs have no decode path")
+    model = build_model(cfg, single_device_ctx())
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, n_slots=args.slots, smax=args.smax)
+    for i in range(args.requests):
+        engine.submit(
+            Request(rid=i, prompt=[1 + i % 13, 2, 3], max_tokens=args.max_tokens)
+        )
+    stats = engine.run()
+    print(
+        f"{cfg.name}: {stats['tokens']} tokens over {stats['ticks']} ticks "
+        f"({stats['tok_per_s']:.1f} tok/s, {args.slots} slots)"
+    )
+
+
+if __name__ == "__main__":
+    main()

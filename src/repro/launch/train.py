@@ -1,0 +1,120 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --smoke --steps 20 --batch 4 --seq 128 --ckpt-dir /tmp/run1
+
+On a real TPU deployment the same entrypoint runs the full config on the
+production mesh (--mesh pod|multipod); on this CPU container use --smoke
+(reduced config, single device).  Features exercised: DGTP infeed planning,
+deterministic sharded data pipeline, AdamW + optional grad accumulation and
+8-bit-ish optimizer state, periodic checkpointing with exact resume,
+straggler tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs as cfgs
+from ..core.infeed_planner import LMJobSpec, plan_infeed
+from ..data.pipeline import TokenPipeline
+from ..models.model import build_model
+from ..sharding import ctx_for_mesh, single_device_ctx
+from ..train.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from ..train.fault_tolerance import StragglerPolicy
+from ..train.optimizer import AdamWConfig
+from ..train.train_loop import TrainStepBuilder
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=cfgs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt8", action="store_true", help="bf16 m + factored v")
+    ap.add_argument("--mesh", default="none", choices=["none", "host", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--plan-infeed", action="store_true")
+    args = ap.parse_args()
+
+    cfg = cfgs.get_smoke_config(args.arch) if args.smoke else cfgs.get_config(args.arch)
+    if cfg.frontend is not None:
+        raise SystemExit("frontend-stub archs train via inputs.train_batch; "
+                         "use the dry-run for their full shapes")
+    if args.mesh == "none":
+        ctx, mesh = single_device_ctx(), None
+    else:
+        mesh = (
+            make_host_mesh()
+            if args.mesh == "host"
+            else make_production_mesh(multi_pod=(args.mesh == "multipod"))
+        )
+        ctx = ctx_for_mesh(mesh)
+
+    if args.plan_infeed:
+        spec = LMJobSpec(cfg=cfg, global_batch=256, seq_len=4096, n_pods=2)
+        print("infeed plan:", plan_infeed(spec, budget=150).summary())
+
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                      total_steps=args.steps)
+    if args.opt8:
+        opt = dataclasses.replace(opt, m_dtype="bfloat16", factored_v=True)
+    model = build_model(cfg, ctx)
+    builder = TrainStepBuilder(model, opt, accum_steps=args.accum)
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, mesh={args.mesh}")
+
+    state = builder.init_state(jax.random.key(0))
+    start = 0
+    if args.ckpt_dir:
+        latest = latest_checkpoint(args.ckpt_dir)
+        if latest is not None:
+            state, start = restore_checkpoint(latest, state)
+            print(f"resumed from step {start}")
+    pipe = TokenPipeline(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch, seed=0
+    )
+    step_fn = builder.jit_train_step(args.batch) if mesh else jax.jit(builder.train_step)
+    straggler = StragglerPolicy()
+
+    ctx_mgr = mesh if mesh is not None else _null()
+    with ctx_mgr:
+        for step in range(start, args.steps):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            slow = straggler.observe(dt)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(
+                    f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.2f} "
+                    f"{dt*1e3:.0f}ms{'  STRAGGLER' if slow else ''}"
+                )
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, state, step + 1)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, state, args.steps)
+        print(f"final checkpoint at {args.ckpt_dir}")
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model substrate: JAX definitions for the assigned architectures.
+
+Everything is pure JAX (no flax): a model is (init_fn, apply_fn, spec_fn)
+over an explicit parameter pytree; layers are stacked [L, ...] and consumed
+with jax.lax.scan so HLO size / compile time are depth-independent.
+"""
+from .config import ModelConfig, MoEConfig, SSMConfig
+from .model import TransformerLM, build_model
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "TransformerLM", "build_model"]

@@ -1,0 +1,161 @@
+"""Model configuration dataclasses shared by all architectures."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    # capacity factor only used by the Pallas grouped-GEMM path; the default
+    # ragged_dot path is dropless.
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. ``block_pattern`` selects the layer stack:
+
+    dense        — uniform attention+MLP blocks
+    gemma2       — alternating local(sliding)/global attention, softcaps,
+                   sandwich norms, GeGLU
+    moe          — attention + top-k MoE MLP every layer
+    mamba2       — pure SSD blocks (attention-free)
+    zamba2       — mamba2 backbone, one *shared* attention block applied
+                   every ``hybrid_every`` layers
+    encoder      — bidirectional attention (no causal mask, no decode)
+    """
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    block_pattern: str = "dense"
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm: str = "rmsnorm"  # or "layernorm"
+    mlp: str = "swiglu"  # or "geglu", "gelu"
+    causal: bool = True
+    tie_embeddings: bool = False
+    sliding_window: Optional[int] = None  # gemma2 local layers / mistral
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    q_scale: Optional[float] = None  # default head_dim**-0.5
+    embed_scale: bool = False  # gemma2 multiplies embeds by sqrt(d_model)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid_every: int = 6  # zamba2: shared attn after every k-th mamba block
+    # attention TP layout when n_heads doesn't divide TP:
+    #   "head_dim" — shard the head_dim axis (baseline; psums partial scores)
+    #   "pad"      — zero-pad query heads per KV group to a TP-divisible
+    #                count (beyond-paper optimization, see EXPERIMENTS §Perf)
+    attn_mode: str = "head_dim"
+    # modality frontend stub: inputs are precomputed embeddings of this many
+    # positions (hubert frames = full seq; llava patch prefix)
+    frontend: Optional[str] = None  # None | "frames" | "patches"
+    n_patches: int = 0  # llava: patch prefix length
+    max_seq: int = 524_288
+    dtype: str = "bfloat16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.block_pattern == "mamba2"
+
+    @property
+    def is_encoder(self) -> bool:
+        return self.block_pattern == "encoder"
+
+    @property
+    def full_attention(self) -> bool:
+        """True if any layer does unwindowed attention over the whole
+        sequence — such archs skip long_500k (see DESIGN §4)."""
+        if self.block_pattern in ("mamba2",):
+            return False
+        if self.block_pattern == "zamba2":
+            return False  # attention is applied sparsely w/ small KV budget
+        return True
+
+    def q_scaling(self) -> float:
+        return self.q_scale if self.q_scale is not None else self.hd**-0.5
+
+    def kv_repeat_for(self, tp: int) -> int:
+        """Replication factor so the effective KV-head count is shardable
+        over ``tp`` (Megatron-style KV replication for kv_heads < tp)."""
+        if self.n_kv_heads >= tp:
+            return 1
+        rep = tp // math.gcd(self.n_kv_heads, tp)
+        return rep
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+        if self.mlp in ("swiglu", "geglu"):
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        per_layer = 0
+        if self.block_pattern == "mamba2":
+            s = self.ssm
+            di = s.d_inner(d)
+            nh_s = s.n_heads(d)
+            in_proj = d * (2 * di + 2 * s.n_groups * s.d_state + nh_s)
+            per_layer = in_proj + di * d + s.d_conv * (di + 2 * s.n_groups * s.d_state) + 2 * nh_s + di
+            total_blocks = self.n_layers * per_layer
+        elif self.block_pattern == "zamba2":
+            s = self.ssm
+            di = s.d_inner(d)
+            nh_s = s.n_heads(d)
+            in_proj = d * (2 * di + 2 * s.n_groups * s.d_state + nh_s)
+            mamba_layer = in_proj + di * d + s.d_conv * (di + 2 * s.n_groups * s.d_state) + 2 * nh_s + di
+            shared = attn + mlp  # one shared block
+            total_blocks = self.n_layers * mamba_layer + shared
+        elif self.block_pattern == "moe":
+            e = self.moe
+            expert_mlp = 3 * d * e.d_ff_expert * e.n_experts + d * e.n_experts
+            total_blocks = self.n_layers * (attn + expert_mlp)
+        else:
+            total_blocks = self.n_layers * (attn + mlp)
+        embeds = v * d * (1 if self.tie_embeddings else 2)
+        if self.frontend == "frames":
+            embeds = v * d  # encoder: output head only (input embeds stubbed)
+        return int(total_blocks + embeds)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, e = self.d_model, self.moe
+        dense_total = self.param_count()
+        all_experts = 3 * d * e.d_ff_expert * e.n_experts * self.n_layers
+        active = 3 * d * e.d_ff_expert * e.top_k * self.n_layers
+        return int(dense_total - all_experts + active)

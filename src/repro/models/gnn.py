@@ -1,0 +1,79 @@
+"""GraphSAGE (mean aggregator) — the paper's own training workload.
+
+Mini-batches are fixed-fanout sampled blocks (data/graph.py): layer l
+consumes nodes_l features and an index matrix idx_l [n_{l-1}, K_l] mapping
+each layer-(l-1) node to its sampled neighbors among layer-l nodes
+(-1 = padding).  The aggregation (the hot spot the Pallas kernel
+kernels/sage_aggregate.py implements) is a masked neighbor mean:
+
+    h_N(v) = mean_{u in N(v)} h_u
+    h'(v)  = relu(W [h(v) ; h_N(v)])        (+ l2-normalize, final linear)
+
+Same structure as DGL's GraphSAGE training script (3 layers, hidden 256).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from ..kernels.ref import sage_aggregate_ref
+
+
+@dataclass(frozen=True)
+class SageConfig:
+    in_dim: int
+    hidden: int = 256
+    n_classes: int = 47
+    n_layers: int = 3
+    use_pallas: bool = False  # route aggregation through the Pallas kernel
+
+
+def init_sage(key: jax.Array, cfg: SageConfig) -> Dict:
+    params = {}
+    dims = [cfg.in_dim] + [cfg.hidden] * cfg.n_layers
+    for l in range(cfg.n_layers):
+        k1, k2, key = jax.random.split(key, 3)
+        s = 1.0 / math.sqrt(2 * dims[l])
+        params[f"w{l}"] = jax.random.normal(k1, (2 * dims[l], dims[l + 1])) * s
+        params[f"b{l}"] = jnp.zeros((dims[l + 1],))
+    k1, _ = jax.random.split(key)
+    params["head"] = jax.random.normal(k1, (cfg.hidden, cfg.n_classes)) / math.sqrt(
+        cfg.hidden
+    )
+    return params
+
+
+def sage_forward(
+    params: Dict,
+    feats: jnp.ndarray,  # [n_L, in_dim] features of the outermost block
+    blocks: List[jnp.ndarray],  # idx_l [n_{l-1}, K] into layer-l nodes
+    cfg: SageConfig,
+) -> jnp.ndarray:
+    """blocks[0] maps seed nodes; blocks[-1] maps the innermost layer."""
+    h = feats
+    for l in range(cfg.n_layers):
+        idx = blocks[cfg.n_layers - 1 - l]  # consume outermost first
+        agg = (
+            kops.sage_aggregate(h, idx)
+            if cfg.use_pallas
+            else sage_aggregate_ref(h, idx)
+        )
+        self_h = h[: idx.shape[0]]  # block layout: targets are a prefix
+        z = jnp.concatenate([self_h, agg], axis=-1) @ params[f"w{l}"] + params[f"b{l}"]
+        h = jax.nn.relu(z)
+    return h @ params["head"]
+
+
+def sage_loss(params: Dict, batch: Dict, cfg: SageConfig) -> Tuple[jnp.ndarray, Dict]:
+    logits = sage_forward(params, batch["feats"], batch["blocks"], cfg)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = (lse - gold).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "acc": acc}

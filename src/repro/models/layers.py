@@ -1,0 +1,501 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, gated MLPs.
+
+Conventions:
+  * params are plain dicts of jnp arrays, stacked over layers on axis 0
+    ([L, ...]) and consumed inside jax.lax.scan — compile time is
+    depth-independent;
+  * every init function has a sibling ``*_specs`` returning a matching
+    pytree of PartitionSpec for the dry-run / production mesh;
+  * TP shards the head axis when (n_heads and effective kv heads) divide
+    the TP size; otherwise the head_dim axis (starcoder2's 24 heads,
+    llama4's 40 heads).  GQA KV heads are repeated post-projection up to a
+    TP-shardable count (Megatron-style KV replication);
+  * attention logits/softmax run in fp32; matmuls accumulate fp32 via
+    preferred_element_type.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import ShardCtx
+from .config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, L: int, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((L, d), dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((L, d), dtype=jnp.float32)
+    return p
+
+
+def norm_specs(cfg: ModelConfig, ctx: ShardCtx) -> Params:
+    p = {"scale": P(None, None)}
+    if cfg.norm == "layernorm":
+        p["bias"] = P(None, None)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (rotate-half convention)
+# ---------------------------------------------------------------------------
+def rope_cos_sin(positions: jnp.ndarray, hd: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [...,] -> cos/sin [..., hd/2] in fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, H, hd]; cos/sin [S, hd/2] (broadcast over batch/heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # [S, 1, hd/2] broadcasting over head axis
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attn_shard_mode(cfg: ModelConfig, ctx: ShardCtx) -> str:
+    """'heads' when the (replicated) head axes divide TP; otherwise
+    'head_dim' (baseline) or 'pad_heads' (cfg.attn_mode='pad': zero-pad
+    query heads per KV group until TP-divisible — EXPERIMENTS §Perf)."""
+    tp = ctx.tp_size
+    if tp <= 1:
+        return "heads"
+    rep = cfg.kv_repeat_for(tp)
+    kv_eff = cfg.n_kv_heads * rep
+    if cfg.n_heads % tp == 0 and kv_eff % tp == 0 and cfg.n_heads % kv_eff == 0:
+        return "heads"
+    if cfg.attn_mode == "pad":
+        return "pad_heads"
+    assert cfg.hd % tp == 0, (
+        f"{cfg.name}: neither heads ({cfg.n_heads}) nor head_dim ({cfg.hd}) "
+        f"shardable over tp={tp}"
+    )
+    return "head_dim"
+
+
+def padded_head_layout(cfg: ModelConfig, tp: int):
+    """(q_per_kv, q_per_kv_padded, kv_eff) for the 'pad_heads' mode.
+
+    Query heads are padded *per original KV group* so each padded group
+    splits evenly across the replicated KV heads; padded heads carry zero
+    queries and their outputs are sliced away — math is exact."""
+    nkv = cfg.n_kv_heads
+    qpg = cfg.n_heads // nkv
+    step = tp // math.gcd(nkv, tp)
+    qpg_pad = ((qpg + step - 1) // step) * step
+    rep = cfg.kv_repeat_for(tp)
+    kv_eff = nkv * rep
+    assert (nkv * qpg_pad) % tp == 0 and (nkv * qpg_pad) % kv_eff == 0
+    return qpg, qpg_pad, kv_eff
+
+
+def kv_eff_heads(cfg: ModelConfig, ctx: ShardCtx) -> int:
+    mode = attn_shard_mode(cfg, ctx)
+    if mode == "heads":
+        return cfg.n_kv_heads * cfg.kv_repeat_for(ctx.tp_size)
+    if mode == "pad_heads":
+        return padded_head_layout(cfg, ctx.tp_size)[2]
+    return cfg.n_kv_heads
+
+
+def init_attn(key: jax.Array, cfg: ModelConfig, L: int, dtype) -> Params:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(2 * max(L, 1) * nh * hd)
+    return {
+        "wq": (jax.random.normal(k1, (L, d, nh, hd)) * s_in).astype(dtype),
+        "wk": (jax.random.normal(k2, (L, d, nkv, hd)) * s_in).astype(dtype),
+        "wv": (jax.random.normal(k3, (L, d, nkv, hd)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k4, (L, nh, hd, d)) * s_out).astype(dtype),
+    }
+
+
+def attn_specs(cfg: ModelConfig, ctx: ShardCtx) -> Params:
+    fsdp, tp = ctx.fsdp_axis(), ctx.tp_axis()
+    mode = attn_shard_mode(cfg, ctx)
+    if mode == "heads":
+        kv_tp = tp if (cfg.n_kv_heads % max(ctx.tp_size, 1) == 0) else None
+        return {
+            "wq": P(None, fsdp, tp, None),
+            "wk": P(None, fsdp, kv_tp, None),
+            "wv": P(None, fsdp, kv_tp, None),
+            "wo": P(None, tp, None, fsdp),
+        }
+    return {
+        "wq": P(None, fsdp, None, tp),
+        "wk": P(None, fsdp, None, tp),
+        "wv": P(None, fsdp, None, tp),
+        "wo": P(None, None, tp, fsdp),
+    }
+
+
+def _qkv(
+    p: Params,
+    x: jnp.ndarray,
+    cos: jnp.ndarray,
+    sin: jnp.ndarray,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    batch: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Project + rope q/k/v. Returns q [B,S,Nh,hd], k/v [B,S,KVeff,hd]."""
+    mode = attn_shard_mode(cfg, ctx)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if cfg.rope_theta > 0 and not cfg.is_encoder:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    bspec = ctx.batch_spec(batch, 0)[0]
+    if mode in ("heads", "pad_heads"):
+        if mode == "pad_heads":
+            qpg, qpg_pad, kv_eff = padded_head_layout(cfg, ctx.tp_size)
+            b, s = q.shape[:2]
+            q = q.reshape(b, s, cfg.n_kv_heads, qpg, cfg.hd)
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, qpg_pad - qpg), (0, 0)))
+            q = q.reshape(b, s, cfg.n_kv_heads * qpg_pad, cfg.hd)
+            rep = kv_eff // cfg.n_kv_heads
+        else:
+            rep = cfg.kv_repeat_for(ctx.tp_size)
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        q = ctx.shard(q, P(bspec, None, ctx.tp, None))
+        k = ctx.shard(k, P(bspec, None, ctx.tp, None))
+        v = ctx.shard(v, P(bspec, None, ctx.tp, None))
+    else:
+        q = ctx.shard(q, P(bspec, None, None, ctx.tp))
+        k = ctx.shard(k, P(bspec, None, None, ctx.tp))
+        v = ctx.shard(v, P(bspec, None, None, ctx.tp))
+    return q, k, v
+
+
+def _unpad_heads(out: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx) -> jnp.ndarray:
+    """Drop zero-query padded heads before the output projection."""
+    if attn_shard_mode(cfg, ctx) != "pad_heads":
+        return out
+    qpg, qpg_pad, _ = padded_head_layout(cfg, ctx.tp_size)
+    b, s = out.shape[:2]
+    out = out.reshape(b, s, cfg.n_kv_heads, qpg_pad, cfg.hd)[:, :, :, :qpg]
+    return out.reshape(b, s, cfg.n_heads, cfg.hd)
+
+
+def _attend(
+    q: jnp.ndarray,  # [B, Sq, Nh, hd]
+    k: jnp.ndarray,  # [B, Sk, KV, hd]
+    v: jnp.ndarray,
+    mask: Optional[jnp.ndarray],  # broadcastable to [B, G, Qg, Sq, Sk] or None
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Grouped-query attention core; returns [B, Sq, Nh, hd]."""
+    b, sq, nh, hd = q.shape
+    kv = k.shape[2]
+    qg = nh // kv
+    qq = q.reshape(b, sq, kv, qg, hd)
+    scores = jnp.einsum(
+        "bsgqh,btgh->bgqst", qq, k, preferred_element_type=jnp.float32
+    )
+    scores = scores * cfg.q_scaling()
+    if cfg.attn_softcap:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgqst,btgh->bsgqh", w, v)
+    return out.reshape(b, sq, nh, hd)
+
+
+def _attend_chunked(
+    q: jnp.ndarray,  # [B, Sq, Nh, hd]
+    k: jnp.ndarray,  # [B, Sk, KV, hd]
+    v: jnp.ndarray,
+    cfg: ModelConfig,
+    window,  # int | traced int32 scalar (>= Sk means "no window")
+    causal: bool,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Streaming (online-softmax) attention — O(Sq*kv_chunk) memory instead
+    of O(Sq*Sk).  This is the XLA mirror of kernels/flash_attention.py: same
+    two-level blocking, running (max, sum, acc) carried over KV blocks.
+    ``window`` may be a traced scalar so gemma2's local/global alternation
+    stays inside one scanned layer body."""
+    b, sq, nh, hd = q.shape
+    kv = k.shape[2]
+    qg = nh // kv
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = cfg.q_scaling()
+    win = jnp.asarray(window, jnp.int32)
+
+    qq = q.reshape(b, nq, q_chunk, kv, qg, hd).transpose(1, 0, 3, 4, 2, 5)
+    # -> [nq, B, KV, Qg, qc, hd]
+    kk = k.reshape(b, nk, kv_chunk, kv, hd).transpose(1, 0, 3, 2, 4)
+    vv = v.reshape(b, nk, kv_chunk, kv, hd).transpose(1, 0, 3, 2, 4)
+    # -> [nk, B, KV, kc, hd]
+
+    def q_block(iq, qb):
+        # qb: [B, KV, Qg, qc, hd]
+        q_pos = iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ik, kb, vb = inp
+            k_pos = ik * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bgqch,bgkh->bgqck", qb, kb, preferred_element_type=jnp.float32
+            ) * scale
+            if cfg.attn_softcap:
+                s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            mask &= k_pos[None, :] > q_pos[:, None] - win
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgqck,bgkh->bgqch", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, qg, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, qg, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, qg, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kk, vv)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # [B, KV, Qg, qc, hd]
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qq))
+    # [nq, B, KV, Qg, qc, hd] -> [B, Sq, Nh, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, nh, hd)
+    return out.astype(q.dtype)
+
+
+CHUNKED_ATTN_THRESHOLD = 4096  # use streaming attention at/above this length
+
+
+def causal_mask(sq: int, sk: int, window: Optional[int], offset: int = 0) -> jnp.ndarray:
+    """[1,1,1,Sq,Sk] boolean mask. ``offset`` = absolute position of query 0
+    minus position of key 0 (for decode: offset = pos)."""
+    iq = jnp.arange(sq)[:, None] + offset
+    jk = jnp.arange(sk)[None, :]
+    m = jk <= iq
+    if window is not None:
+        m &= jk > iq - window
+    return m[None, None, None]
+
+
+def apply_attn(
+    p: Params,
+    x: jnp.ndarray,
+    cos: jnp.ndarray,
+    sin: jnp.ndarray,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    window,  # None | int | traced int32 (gemma2 local/global inside scan)
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). x: [B, S, D].
+
+    Long sequences (or traced windows) take the streaming chunked path;
+    short ones the naive masked path (also the test oracle)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cos, sin, cfg, ctx, b)
+    causal = cfg.causal and not cfg.is_encoder
+    traced_window = isinstance(window, jnp.ndarray)
+    if s >= CHUNKED_ATTN_THRESHOLD or traced_window:
+        win = window if window is not None else s + 1
+        out = _attend_chunked(q, k, v, cfg, win, causal)
+    else:
+        mask = None
+        if causal or window is not None:
+            mask = causal_mask(s, s, window)
+        out = _attend(q, k, v, mask, cfg)
+    out = _unpad_heads(out, cfg, ctx)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return y.astype(x.dtype)
+
+
+def decode_attn(
+    p: Params,
+    x: jnp.ndarray,  # [B, 1, D]
+    cache_k: jnp.ndarray,  # [B, Smax, KVstore, hd]
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,  # scalar int32: index of the new token
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    window: Optional[int],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a KV cache; returns (y, new_k, new_v).
+
+    The cache stores *effective* (replication-expanded) KV heads so decode
+    never re-expands — the roofline's HBM traffic for decode is exactly the
+    cache read, which is the quantity we optimize.
+    """
+    b = x.shape[0]
+    cos, sin = rope_cos_sin(pos[None], cfg.hd, cfg.rope_theta)
+    q, k, v = _qkv(p, x, cos, sin, cfg, ctx, b)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    smax = cache_k.shape[1]
+    mask = causal_mask(1, smax, window, offset=pos)
+    out = _attend(q, cache_k, cache_v, mask, cfg)
+    out = _unpad_heads(out, cfg, ctx)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return y.astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key: jax.Array, cfg: ModelConfig, L: int, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(2 * max(L, 1) * f)
+    if cfg.mlp in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": (jax.random.normal(k1, (L, d, f)) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (L, d, f)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (L, f, d)) * s_out).astype(dtype),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": (jax.random.normal(k1, (L, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (L, f, d)) * s_out).astype(dtype),
+    }
+
+
+def mlp_specs(cfg: ModelConfig, ctx: ShardCtx) -> Params:
+    fsdp, tp = ctx.fsdp_axis(), ctx.tp_axis()
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": P(None, fsdp, tp),
+            "w_up": P(None, fsdp, tp),
+            "w_down": P(None, tp, fsdp),
+        }
+    return {"w_up": P(None, fsdp, tp), "w_down": P(None, tp, fsdp)}
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx) -> jnp.ndarray:
+    if cfg.mlp in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        act = jax.nn.silu(g) if cfg.mlp == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / gemma2 blocks
+# ---------------------------------------------------------------------------
+def init_dense_block(key: jax.Array, cfg: ModelConfig, L: int, dtype) -> Params:
+    ka, km, kn = jax.random.split(key, 3)
+    p: Params = {
+        "attn": init_attn(ka, cfg, L, dtype),
+        "mlp": init_mlp(km, cfg, L, dtype),
+        "ln_attn": init_norm(cfg, L),
+        "ln_mlp": init_norm(cfg, L),
+    }
+    if cfg.block_pattern == "gemma2":  # sandwich norms
+        p["ln_attn_post"] = init_norm(cfg, L)
+        p["ln_mlp_post"] = init_norm(cfg, L)
+    return p
+
+
+def dense_block_specs(cfg: ModelConfig, ctx: ShardCtx) -> Params:
+    p: Params = {
+        "attn": attn_specs(cfg, ctx),
+        "mlp": mlp_specs(cfg, ctx),
+        "ln_attn": norm_specs(cfg, ctx),
+        "ln_mlp": norm_specs(cfg, ctx),
+    }
+    if cfg.block_pattern == "gemma2":
+        p["ln_attn_post"] = norm_specs(cfg, ctx)
+        p["ln_mlp_post"] = norm_specs(cfg, ctx)
+    return p
+
+
+def apply_dense_block(
+    p: Params,
+    x: jnp.ndarray,
+    cos: jnp.ndarray,
+    sin: jnp.ndarray,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    window: Optional[int],
+    mlp_fn=None,
+) -> jnp.ndarray:
+    """Pre-norm block; gemma2 adds post-norms (sandwich)."""
+    h = apply_norm(p["ln_attn"], x, cfg)
+    h = apply_attn(p["attn"], h, cos, sin, cfg, ctx, window)
+    if "ln_attn_post" in p:
+        h = apply_norm(p["ln_attn_post"], h, cfg)
+    x = x + h
+    h = apply_norm(p["ln_mlp"], x, cfg)
+    h = (mlp_fn or (lambda q: apply_mlp(p["mlp"], q, cfg, ctx)))(h)
+    if "ln_mlp_post" in p:
+        h = apply_norm(p["ln_mlp_post"], h, cfg)
+    return x + h
+
+
+def decode_dense_block(
+    p: Params,
+    x: jnp.ndarray,
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    window: Optional[int],
+    mlp_fn=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    h = apply_norm(p["ln_attn"], x, cfg)
+    h, cache_k, cache_v = decode_attn(p["attn"], h, cache_k, cache_v, pos, cfg, ctx, window)
+    if "ln_attn_post" in p:
+        h = apply_norm(p["ln_attn_post"], h, cfg)
+    x = x + h
+    h = apply_norm(p["ln_mlp"], x, cfg)
+    h = (mlp_fn or (lambda q: apply_mlp(p["mlp"], q, cfg, ctx)))(h)
+    if "ln_mlp_post" in p:
+        h = apply_norm(p["ln_mlp_post"], h, cfg)
+    return x + h, cache_k, cache_v

@@ -1,0 +1,425 @@
+"""TransformerLM: assembles block stacks into trainable/servable models.
+
+One class covers all ten assigned architectures via cfg.block_pattern:
+dense / gemma2 / moe / mamba2 / zamba2 / encoder (+ the llava frontend stub
+through cfg.frontend="patches").  Layers are scanned ([L, ...] stacked
+params, jax.checkpoint around the body) so compile time is depth-
+independent; vocab is padded to a multiple of 2048 (TP x MXU aligned) with
+padded logits masked out of the loss.
+
+Public surface:
+  init(key)                 -> params pytree (bf16 weights, f32 norms)
+  param_specs()             -> matching PartitionSpec pytree
+  loss_fn(params, batch)    -> (loss, metrics)     [train]
+  prefill(params, batch)    -> (cache, last_logits) [serve]
+  decode_step(params, cache, token, pos) -> (cache, logits)
+  cache_struct(batch, smax) -> ShapeDtypeStruct pytree + specs
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import ShardCtx
+from . import layers as ly
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+VOCAB_PAD = 2048
+
+
+def padded_vocab(v: int) -> int:
+    return (v + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD
+
+
+@dataclass
+class TransformerLM:
+    cfg: ModelConfig
+    ctx: ShardCtx
+
+    # ------------------------------------------------------------------ init
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    @property
+    def vp(self) -> int:
+        return padded_vocab(self.cfg.vocab)
+
+    def init(self, key: jax.Array) -> Params:
+        cfg, L, dt = self.cfg, self.cfg.n_layers, self.dtype
+        ks = jax.random.split(key, 6)
+        p: Params = {}
+        if cfg.frontend != "frames":
+            p["embed"] = (
+                jax.random.normal(ks[0], (self.vp, cfg.d_model)) / math.sqrt(cfg.d_model)
+            ).astype(dt)
+        if cfg.block_pattern in ("dense", "gemma2", "encoder"):
+            p["blocks"] = ly.init_dense_block(ks[1], cfg, L, dt)
+        elif cfg.block_pattern == "moe":
+            p["blocks"] = {
+                "attn": ly.init_attn(ks[1], cfg, L, dt),
+                "ln_attn": ly.init_norm(cfg, L),
+                "ln_mlp": ly.init_norm(cfg, L),
+                "moe": moe_mod.init_moe(ks[2], cfg, L, dt),
+            }
+        elif cfg.block_pattern == "mamba2":
+            p["blocks"] = ssm_mod.init_mamba_block(ks[1], cfg, L, dt)
+        elif cfg.block_pattern == "zamba2":
+            p["blocks"] = ssm_mod.init_mamba_block(ks[1], cfg, L, dt)
+            p["shared"] = ly.init_dense_block(ks[2], cfg, 1, dt)
+        else:  # pragma: no cover
+            raise ValueError(cfg.block_pattern)
+        p["final_norm"] = ly.init_norm(cfg, 1)
+        if not cfg.tie_embeddings:
+            p["head"] = (
+                jax.random.normal(ks[3], (self.vp, cfg.d_model)) / math.sqrt(cfg.d_model)
+            ).astype(dt)
+        return p
+
+    def param_specs(self) -> Params:
+        cfg, ctx = self.cfg, self.ctx
+        fsdp, tp = ctx.fsdp_axis(), ctx.tp_axis()
+        vocab_tp = tp if self.vp % max(ctx.tp_size, 1) == 0 else None
+        p: Params = {}
+        if cfg.frontend != "frames":
+            p["embed"] = P(vocab_tp, fsdp)
+        if cfg.block_pattern in ("dense", "gemma2", "encoder"):
+            p["blocks"] = ly.dense_block_specs(cfg, ctx)
+        elif cfg.block_pattern == "moe":
+            p["blocks"] = {
+                "attn": ly.attn_specs(cfg, ctx),
+                "ln_attn": ly.norm_specs(cfg, ctx),
+                "ln_mlp": ly.norm_specs(cfg, ctx),
+                "moe": moe_mod.moe_specs(cfg, ctx),
+            }
+        elif cfg.block_pattern == "mamba2":
+            p["blocks"] = ssm_mod.mamba_block_specs(cfg, ctx)
+        elif cfg.block_pattern == "zamba2":
+            p["blocks"] = ssm_mod.mamba_block_specs(cfg, ctx)
+            p["shared"] = ly.dense_block_specs(cfg, ctx)
+        p["final_norm"] = ly.norm_specs(cfg, ctx)
+        if not cfg.tie_embeddings:
+            p["head"] = P(vocab_tp, fsdp)
+        return p
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        if self.cfg.embed_scale:
+            x = x * math.sqrt(self.cfg.d_model)
+        return x
+
+    def _window_for(self, idx: jnp.ndarray):
+        """Per-layer attention window (traced: stays inside the scan)."""
+        cfg = self.cfg
+        big = jnp.int32(1_000_000_000)
+        if cfg.block_pattern == "gemma2":
+            return jnp.where(idx % 2 == 0, jnp.int32(cfg.sliding_window), big)
+        if cfg.sliding_window is not None:
+            return jnp.int32(cfg.sliding_window)
+        return big
+
+    # ----------------------------------------------------------- train stack
+    def _apply_stack(self, params: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg, ctx = self.cfg, self.ctx
+        L = cfg.n_layers
+        s = x.shape[1]
+        cos, sin = ly.rope_cos_sin(jnp.arange(s), cfg.hd, cfg.rope_theta)
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if cfg.block_pattern in ("dense", "gemma2", "encoder"):
+
+            def body(carry, inp):
+                h, aux = carry
+                p_l, idx = inp
+                w = self._window_for(idx)
+                h = ly.apply_dense_block(p_l, h, cos, sin, cfg, ctx, w)
+                return (h, aux), None
+
+        elif cfg.block_pattern == "moe":
+
+            def body(carry, inp):
+                h, aux = carry
+                p_l, idx = inp
+                w = self._window_for(idx)
+                a = ly.apply_norm(p_l["ln_attn"], h, cfg)
+                a = ly.apply_attn(p_l["attn"], a, cos, sin, cfg, ctx, w)
+                h = h + a
+                m = ly.apply_norm(p_l["ln_mlp"], h, cfg)
+                m, a_loss = moe_mod.apply_moe(p_l["moe"], m, cfg, ctx)
+                return (h + m, aux + a_loss), None
+
+        elif cfg.block_pattern == "mamba2":
+
+            def body(carry, inp):
+                h, aux = carry
+                p_l, idx = inp
+                h = ssm_mod.apply_mamba_block(p_l, h, cfg, ctx)
+                return (h, aux), None
+
+        elif cfg.block_pattern == "zamba2":
+            # Super-block structure (no cond-in-scan: exact HLO cost
+            # accounting + no dead branch): G groups of [hybrid_every x
+            # mamba + shared attn], then the trailing mamba layers.
+            shared = jax.tree.map(lambda a: a[0], params["shared"])
+            g, k = L // cfg.hybrid_every, cfg.hybrid_every
+            head = jax.tree.map(
+                lambda a: a[: g * k].reshape(g, k, *a.shape[1:]), params["blocks"]
+            )
+            tail = jax.tree.map(lambda a: a[g * k :], params["blocks"])
+
+            def mamba_body(carry, p_l):
+                h, aux = carry
+                return (ssm_mod.apply_mamba_block(p_l, h, cfg, ctx), aux), None
+
+            mamba_body_r = jax.checkpoint(mamba_body)
+
+            def group_body(carry, p_g):
+                carry = jax.lax.scan(mamba_body_r, carry, p_g)[0]
+                h, aux = carry
+                h = jax.checkpoint(
+                    lambda q: ly.apply_dense_block(
+                        shared, q, cos, sin, cfg, ctx, None
+                    )
+                )(h)
+                return (h, aux), None
+
+            carry, _ = jax.lax.scan(group_body, (x, aux0), head)
+            if L - g * k > 0:
+                carry, _ = jax.lax.scan(mamba_body_r, carry, tail)
+            return carry
+
+        (x, aux), _ = jax.lax.scan(
+            jax.checkpoint(body), (x, aux0), (params["blocks"], jnp.arange(L))
+        )
+        return x, aux
+
+    # ------------------------------------------------------------------ loss
+    def _logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, head, preferred_element_type=jnp.float32
+        )
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        # mask padded vocab entries
+        if self.vp != cfg.vocab:
+            bias = jnp.where(jnp.arange(self.vp) < cfg.vocab, 0.0, -1e30)
+            logits = logits + bias
+        dspec = self.ctx.batch_spec(x.shape[0], 0)[0]
+        return self.ctx.shard(logits, P(dspec, None, self.ctx.tp_axis()))
+
+    def _inputs(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.frontend == "frames":
+            return batch["frames"].astype(self.dtype)
+        x = self._embed(params, batch["tokens"])
+        if cfg.frontend == "patches":
+            patches = batch["patches"].astype(self.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        x = self._inputs(params, batch)
+        dspec = self.ctx.batch_spec(x.shape[0], 2)
+        x = self.ctx.shard(x, dspec)
+        x, aux = self._apply_stack(params, x)
+        fn = jax.tree.map(lambda a: a[0], params["final_norm"])
+        x = ly.apply_norm(fn, x, self.cfg)
+        return x, aux
+
+    def loss_fn(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Causal-LM (or per-frame classification) cross entropy.
+
+        labels < 0 are ignored.  For frontend="patches" the patch prefix
+        carries no labels (the pipeline supplies label = -1 there)."""
+        x, aux = self.forward(params, batch)
+        logits = self._logits(params, x)
+        labels = batch["labels"]
+        if self.cfg.frontend == "patches":
+            npatch = batch["patches"].shape[1]
+            pad = jnp.full(
+                (labels.shape[0], npatch), -1, labels.dtype
+            )
+            labels = jnp.concatenate([pad, labels], axis=1)
+        mask = labels >= 0
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], axis=-1
+        )[..., 0]
+        per_tok = jnp.where(mask, lse - gold, 0.0)
+        ntok = jnp.maximum(mask.sum(), 1)
+        loss = per_tok.sum() / ntok
+        metrics = {
+            "loss": loss,
+            "aux_loss": aux / max(self.cfg.n_layers, 1),
+            "tokens": ntok,
+        }
+        total = loss + 0.01 * metrics["aux_loss"]
+        return total, metrics
+
+    # ------------------------------------------------------------- serving
+    def cache_struct(self, batch: int, smax: int):
+        """(ShapeDtypeStruct pytree, PartitionSpec pytree) for decode."""
+        cfg, ctx = self.cfg, self.ctx
+        L = cfg.n_layers
+        dt = self.dtype
+        kv = ly.kv_eff_heads(cfg, ctx)
+        hd = cfg.hd
+        bspec = ctx.batch_spec(batch, 0)[0]
+        # batch=1 long-context: shard the sequence axis over dp instead
+        seq_ax = ctx.dp_axis() if (bspec is None and ctx.dp) else None
+        kv_tp = ctx.tp_axis() if ly.attn_shard_mode(cfg, ctx) == "heads" else None
+
+        def attn_cache(n_layers):
+            shape = (n_layers, batch, smax, kv, hd)
+            spec = P(None, bspec, seq_ax, kv_tp, None)
+            return (
+                {
+                    "k": jax.ShapeDtypeStruct(shape, dt),
+                    "v": jax.ShapeDtypeStruct(shape, dt),
+                },
+                {"k": spec, "v": spec},
+            )
+
+        if cfg.block_pattern in ("dense", "gemma2", "moe"):
+            return attn_cache(L)
+        if cfg.block_pattern == "mamba2":
+            st = ssm_mod.init_mamba_cache  # shapes only, via eval_shape
+            struct = jax.eval_shape(lambda: st(cfg, L, batch, dt))
+            specs = ssm_mod.mamba_cache_specs(cfg, ctx, batch)
+            return struct, specs
+        if cfg.block_pattern == "zamba2":
+            n_apps = cfg.n_layers // cfg.hybrid_every
+            m_struct = jax.eval_shape(
+                lambda: ssm_mod.init_mamba_cache(cfg, L, batch, dt)
+            )
+            m_specs = ssm_mod.mamba_cache_specs(cfg, ctx, batch)
+            a_struct, a_specs = attn_cache(n_apps)
+            return (
+                {"mamba": m_struct, "attn": a_struct},
+                {"mamba": m_specs, "attn": a_specs},
+            )
+        raise ValueError(f"{cfg.name}: encoder has no decode cache")
+
+    def decode_step(
+        self,
+        params: Params,
+        cache,
+        token: jnp.ndarray,  # [B] int32
+        pos: jnp.ndarray,  # scalar int32
+    ):
+        """One-token decode. Returns (new_cache, logits [B, vocab_padded])."""
+        cfg, ctx = self.cfg, self.ctx
+        x = self._embed(params, token[:, None])
+        L = cfg.n_layers
+
+        if cfg.block_pattern in ("dense", "gemma2", "moe"):
+
+            def body(h, inp):
+                p_l, ck, cv, idx = inp
+                w = self._window_for(idx)
+                if cfg.block_pattern == "moe":
+                    a = ly.apply_norm(p_l["ln_attn"], h, cfg)
+                    a, ck, cv = ly.decode_attn(
+                        p_l["attn"], a, ck, cv, pos, cfg, ctx, w
+                    )
+                    h = h + a
+                    m = ly.apply_norm(p_l["ln_mlp"], h, cfg)
+                    m, _ = moe_mod.apply_moe(p_l["moe"], m, cfg, ctx)
+                    h = h + m
+                else:
+                    h, ck, cv = ly.decode_dense_block(
+                        p_l, h, ck, cv, pos, cfg, ctx, w
+                    )
+                return h, (ck, cv)
+
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["blocks"], cache["k"], cache["v"], jnp.arange(L))
+            )
+            new_cache = {"k": nk, "v": nv}
+
+        elif cfg.block_pattern == "mamba2":
+
+            def body(h, inp):
+                p_l, c_l = inp
+                h, c_new = ssm_mod.decode_mamba_block(p_l, h, c_l, cfg, ctx)
+                return h, c_new
+
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+        elif cfg.block_pattern == "zamba2":
+            # mirror the train-side super-block structure
+            shared = jax.tree.map(lambda a: a[0], params["shared"])
+            g, k = L // cfg.hybrid_every, cfg.hybrid_every
+            head_p = jax.tree.map(
+                lambda a: a[: g * k].reshape(g, k, *a.shape[1:]), params["blocks"]
+            )
+            tail_p = jax.tree.map(lambda a: a[g * k :], params["blocks"])
+            head_c = jax.tree.map(
+                lambda a: a[: g * k].reshape(g, k, *a.shape[1:]), cache["mamba"]
+            )
+            tail_c = jax.tree.map(lambda a: a[g * k :], cache["mamba"])
+
+            def mamba_body(h, inp):
+                p_l, c_l = inp
+                h, c_new = ssm_mod.decode_mamba_block(p_l, h, c_l, cfg, ctx)
+                return h, c_new
+
+            def group_body(h, inp):
+                p_g, c_g, ck, cv = inp
+                h, c_new = jax.lax.scan(mamba_body, h, (p_g, c_g))
+                h, ck, cv = ly.decode_dense_block(
+                    shared, h, ck, cv, pos, cfg, ctx, None
+                )
+                return h, (c_new, ck, cv)
+
+            x, (m_head, nk, nv) = jax.lax.scan(
+                group_body,
+                x,
+                (head_p, head_c, cache["attn"]["k"], cache["attn"]["v"]),
+            )
+            if L - g * k > 0:
+                x, m_tail = jax.lax.scan(mamba_body, x, (tail_p, tail_c))
+                m_new = jax.tree.map(
+                    lambda a, b: jnp.concatenate(
+                        [a.reshape(g * k, *a.shape[2:]), b], axis=0
+                    ),
+                    m_head,
+                    m_tail,
+                )
+            else:
+                m_new = jax.tree.map(
+                    lambda a: a.reshape(g * k, *a.shape[2:]), m_head
+                )
+            new_cache = {"mamba": m_new, "attn": {"k": nk, "v": nv}}
+        else:
+            raise ValueError(f"{cfg.name}: no decode for {cfg.block_pattern}")
+
+        fn = jax.tree.map(lambda a: a[0], params["final_norm"])
+        x = ly.apply_norm(fn, x, cfg)
+        logits = self._logits(params, x)[:, 0]
+        return new_cache, logits
+
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Full-sequence forward returning last-position logits (the KV/state
+        cache produced here is exercised separately via decode_step in the
+        dry-run, which is what the decode_* shapes lower)."""
+        x, _ = self.forward(params, batch)
+        logits = self._logits(params, x[:, -1:, :])
+        return logits[:, 0]
+
+
+def build_model(cfg: ModelConfig, ctx: ShardCtx) -> TransformerLM:
+    return TransformerLM(cfg=cfg, ctx=ctx)

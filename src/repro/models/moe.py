@@ -1,0 +1,188 @@
+"""Top-k MoE with expert parallelism (EP) over the "model" mesh axis.
+
+Design (DESIGN.md §5): experts are sharded over TP ("model"); activations
+entering the block are replicated across TP (sharded over dp only), so each
+TP device routes the *same* per-dp-shard token block and computes only the
+tokens that picked one of its local experts:
+
+  1. router logits / top-k on every device (router weights all-gathered
+     over the FSDP axis inside the block — they are small);
+  2. flatten (token, slot) pairs, sort by expert id -> the local expert
+     segment is contiguous; rotate it to row 0 (jnp.roll with a traced
+     shift) and keep a static ``capacity``-bounded prefix;
+  3. grouped GEMMs via jax.lax.ragged_dot over the local experts;
+  4. scatter-add weighted expert outputs back to token slots, then psum
+     over "model" combines contributions from all expert shards.
+
+Per-device compute is balanced in expectation; tokens beyond
+capacity_factor * (T*k / EP) are dropped (GShard-style), which the
+single-device path (no mesh / tp=1) never does — that path is the exact
+dropless oracle used by tests.  A Pallas grouped-GEMM kernel
+(kernels/moe_gemm.py) implements step 3 for the TPU target.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import ShardCtx
+from .config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, L: int, dtype) -> Params:
+    e = cfg.moe
+    d, fe, ne = cfg.d_model, e.d_ff_expert, e.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(2 * max(L, 1) * fe)
+    return {
+        "router": (jax.random.normal(k1, (L, d, ne)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (L, ne, d, fe)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k3, (L, ne, d, fe)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k4, (L, ne, fe, d)) * s_out).astype(dtype),
+    }
+
+
+def moe_specs(cfg: ModelConfig, ctx: ShardCtx) -> Params:
+    fsdp, tp = ctx.fsdp_axis(), ctx.tp_axis()
+    return {
+        "router": P(None, fsdp, None),
+        "w_gate": P(None, tp, fsdp, None),
+        "w_up": P(None, tp, fsdp, None),
+        "w_down": P(None, tp, None, fsdp),
+    }
+
+
+def _route(xt: jnp.ndarray, router: jnp.ndarray, cfg: ModelConfig):
+    """Top-k routing. Returns (expert_ids [t,k], weights [t,k], probs [t,E])."""
+    k = cfg.moe.top_k
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    if k == 1:
+        # llama4-style: sigmoid gate value of the chosen expert
+        chosen = jnp.take_along_axis(logits, topi, axis=-1)
+        weights = jax.nn.sigmoid(chosen)
+    else:
+        weights = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    return topi, weights, probs
+
+
+def load_balance_loss(probs: jnp.ndarray, expert_ids: jnp.ndarray, n_experts: int):
+    """Switch-style aux loss: E * sum_e mean_prob_e * mean_assign_e."""
+    me = probs.mean(axis=0)  # [E]
+    assign = jnp.zeros((n_experts,), jnp.float32).at[expert_ids.ravel()].add(1.0)
+    ce = assign / jnp.maximum(expert_ids.size, 1)
+    return n_experts * jnp.sum(me * ce)
+
+
+def _expert_compute(
+    x_rows: jnp.ndarray,  # [C, D] gathered token rows (sorted by expert)
+    gs: jnp.ndarray,  # [E_local] group sizes, sum <= C
+    wg: jnp.ndarray,  # [E_local, D, Fe]
+    wu: jnp.ndarray,
+    wd: jnp.ndarray,
+) -> jnp.ndarray:
+    g = jax.lax.ragged_dot(x_rows, wg, gs)
+    u = jax.lax.ragged_dot(x_rows, wu, gs)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u).astype(x_rows.dtype)
+    return jax.lax.ragged_dot(h, wd, gs)
+
+
+def _moe_local(
+    xt: jnp.ndarray,  # [t, D] local tokens
+    router: jnp.ndarray,  # [D, E] (full)
+    wg: jnp.ndarray,  # [E_local, D, Fe] local experts
+    wu: jnp.ndarray,
+    wd: jnp.ndarray,
+    cfg: ModelConfig,
+    e0,
+    capacity: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared body: route all tokens, compute local experts' contribution."""
+    t, d = xt.shape
+    k = cfg.moe.top_k
+    e_local = wg.shape[0]
+    topi, weights, probs = _route(xt, router, cfg)
+    aux = load_balance_loss(probs, topi, cfg.moe.n_experts)
+    eids = topi.reshape(-1)
+    wts = weights.reshape(-1)
+    tids = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(eids)
+    se, st, sw = eids[order], tids[order], wts[order]
+    m = t * k
+    lo = jnp.searchsorted(se, e0)  # start of local segment
+    idxr = (jnp.arange(capacity) + lo) % m
+    re = se[idxr]
+    valid = (re >= e0) & (re < e0 + e_local)
+    rows_idx = st[idxr]
+    x_rows = xt[rows_idx]
+    # group sizes: per-local-expert counts, truncated at capacity
+    counts = jnp.bincount(jnp.clip(re - e0, 0, e_local - 1) * valid, weights=valid.astype(jnp.int32), length=e_local)
+    cum = jnp.cumsum(counts)
+    gs = (jnp.minimum(cum, capacity) - jnp.minimum(cum - counts, capacity)).astype(jnp.int32)
+    out_rows = _expert_compute(x_rows, gs, wg, wu, wd)
+    scale = (sw[idxr] * valid).astype(out_rows.dtype)
+    y = jnp.zeros((t, d), out_rows.dtype).at[rows_idx].add(out_rows * scale[:, None])
+    return y, aux
+
+
+def apply_moe(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE FFN. x [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
+    b, s, d = x.shape
+    e = cfg.moe
+    xt = x.reshape(b * s, d)
+    if ctx.mesh is None or ctx.tp_size <= 1:
+        # single-device / no-TP: exact dropless path (capacity == t*k)
+        y, aux = _moe_local(
+            xt, p["router"], p["w_gate"], p["w_up"], p["w_down"], cfg,
+            e0=0, capacity=xt.shape[0] * e.top_k,
+        )
+        return y.reshape(b, s, d).astype(x.dtype), aux
+
+    tp = ctx.tp_size
+    dp = ctx.dp_axis()
+    t_local = xt.shape[0] // max(ctx.dp_size, 1) if dp else xt.shape[0]
+    capacity = int(CAPACITY_FACTOR * t_local * e.top_k / tp + 127) // 128 * 128
+    e_per = e.n_experts // tp
+
+    def body(xt_l, router_l, wg_l, wu_l, wd_l):
+        # router arrives FSDP-sharded on D: gather it (it is small)
+        if dp:
+            router = jax.lax.all_gather(router_l, dp, axis=0, tiled=True)
+        else:
+            router = router_l
+        e0 = jax.lax.axis_index(ctx.tp) * e_per
+        y, aux = _moe_local(xt_l, router, wg_l, wu_l, wd_l, cfg, e0, capacity)
+        y = jax.lax.psum(y, ctx.tp)
+        aux = jax.lax.psum(aux, ctx.tp) / tp
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return y, aux
+
+    dspec = P(dp, None)
+    y, aux = jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=(
+            dspec,  # tokens: dp-sharded, replicated over tp
+            P(dp, None),  # router [D, E] fsdp-sharded
+            P(ctx.tp, None, None),
+            P(ctx.tp, None, None),
+            P(ctx.tp, None, None),
+        ),
+        out_specs=(dspec, P()),
+        check_vma=False,
+    )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y.reshape(b, s, d).astype(x.dtype), aux

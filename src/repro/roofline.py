@@ -1,0 +1,164 @@
+"""Roofline analysis (deliverable (g)) from the dry-run's compiled artifacts.
+
+Per (arch x shape) cell on the single-pod mesh (v5e constants from
+launch/mesh.py):
+
+  compute term    = dot_flops / PEAK_FLOPS_BF16          [s, per device]
+  memory term     = hbm_bytes / HBM_BW                   [s, per device]
+  collective term = collective_bytes / ICI_BW            [s, per device]
+
+All three use the scan-aware HLO counter (launch/hlo_cost.py) — XLA's own
+cost_analysis undercounts lax.scan bodies by ~n_layers (documented in
+EXPERIMENTS.md §Roofline).  MODEL_FLOPS uses the assignment's definition
+(6*N*D dense / 6*N_active*D MoE for training; 2*N*tokens for inference),
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPS flags remat/redundancy
+waste.  ``python -m repro.roofline`` regenerates the markdown tables.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from .launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = Path(__file__).resolve().parents[2] / "results" / "dryrun"
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    hlo_flops_global: float = 0.0
+    useful_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+    temp_gib: float = 0.0
+    fits: bool = True
+    note: str = ""
+
+
+def model_flops_for(rec: Dict) -> float:
+    """Assignment definition, global across the pod."""
+    n_active = rec["active_params"]
+    tokens = rec["global_batch"] * rec["seq_len"]
+    if rec["kind"] == "train":
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * rec["global_batch"]
+
+
+def _note_for(dom: str, cell: "CellRoofline", rec: Dict) -> str:
+    if not cell.fits:
+        return (
+            "does not fit 16 GiB/chip: shrink live set first (microbatch, "
+            "smaller MoE capacity, 8-bit optimizer or more pods)"
+        )
+    if dom == "collective":
+        return (
+            "cut TP collective volume: avoid partial-sum resharding "
+            "(pad heads to a TP-divisible count / reduce-scatter instead of "
+            "all-reduce / larger per-device batch)"
+        )
+    if dom == "memory":
+        return (
+            "raise arithmetic intensity: fuse/bf16 intermediates, larger "
+            "blocks, avoid re-streaming the KV cache or expert weights"
+        )
+    return (
+        "compute-bound (good): reduce non-model FLOPs (remat share, "
+        "dispatch overhead) and overlap the residual collectives"
+    )
+
+
+def load_cell(arch: str, shape: str, mesh: str = "pod") -> Optional[Dict]:
+    p = RESULTS / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def cell_roofline(rec: Dict) -> CellRoofline:
+    cell = CellRoofline(arch=rec["arch"], shape=rec["shape"], status=rec["status"])
+    if rec["status"] != "run":
+        cell.note = rec["status"]
+        return cell
+    sa = rec.get("scan_aware") or {}
+    if "dot_flops" not in sa:
+        cell.note = "scan-aware analysis missing"
+        return cell
+    n_dev = rec.get("n_devices", 256)
+    cell.compute_s = sa["dot_flops"] / PEAK_FLOPS_BF16
+    cell.memory_s = sa["hbm_bytes"] / HBM_BW
+    cell.collective_s = sa["collective_total_bytes"] / ICI_BW
+    terms = {
+        "compute": cell.compute_s,
+        "memory": cell.memory_s,
+        "collective": cell.collective_s,
+    }
+    cell.dominant = max(terms, key=terms.get)
+    cell.model_flops = model_flops_for(rec)
+    cell.hlo_flops_global = sa["dot_flops"] * n_dev
+    cell.useful_ratio = cell.model_flops / max(cell.hlo_flops_global, 1e-9)
+    # achievable step time >= max(terms); the fraction of peak you would hit
+    t_star = max(terms.values())
+    cell.roofline_fraction = cell.compute_s / max(t_star, 1e-12)
+    mem = rec["memory"]
+    live = mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]
+    cell.temp_gib = mem["temp_bytes"] / 2**30
+    cell.fits = live <= HBM_PER_CHIP
+    cell.note = _note_for(cell.dominant, cell, rec)
+    return cell
+
+
+def full_table(mesh: str = "pod") -> List[CellRoofline]:
+    from .configs import ARCH_IDS, SHAPES
+
+    out = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape, mesh)
+            if rec is None:
+                continue
+            out.append(cell_roofline(rec))
+    return out
+
+
+def markdown_table(cells: List[CellRoofline]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful % | roofline frac | temp GiB/dev | fits | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.status != "run":
+            lines.append(
+                f"| {c.arch} | {c.shape} | — | — | — | — | — | — | — | — | — | {c.status} |"
+            )
+            continue
+        lines.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.3g} | {c.memory_s:.3g} | "
+            f"{c.collective_s:.3g} | **{c.dominant}** | {c.model_flops:.3g} | "
+            f"{100*c.useful_ratio:.0f}% | {c.roofline_fraction:.2f} | "
+            f"{c.temp_gib:.1f} | {'yes' if c.fits else 'NO'} | {c.note} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    cells = full_table("pod")
+    print(markdown_table(cells))
+
+
+if __name__ == "__main__":
+    main()

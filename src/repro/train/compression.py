@@ -1,0 +1,95 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two compressors usable as a transform on the gradient pytree before the
+optimizer (and before the PS/all-reduce flows the DGTP planner schedules —
+compressed volumes shrink d_{w->ps} in the cluster model, which
+core/infeed_planner passes to the scheduler):
+
+  * int8 stochastic-rounding quantization (per-leaf scale), ~4x volume;
+  * top-k magnitude sparsification (k as a fraction), with the residual
+    carried to the next step (error feedback keeps convergence unbiased —
+    property-tested: mean compressed gradient -> true gradient).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "int8"  # "int8" | "topk" | "none"
+    topk_frac: float = 0.05
+
+
+def init_error_state(grads_like: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def _int8_compress(g: jnp.ndarray, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    scaled = g / scale
+    noise = jax.random.uniform(key, g.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(g: jnp.ndarray, frac: float) -> jnp.ndarray:
+    k = max(1, int(g.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(g).reshape(-1), k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_grads(
+    cfg: CompressionConfig,
+    grads: Pytree,
+    error: Pytree,
+    key: jax.Array,
+) -> Tuple[Pytree, Pytree, Dict[str, jnp.ndarray]]:
+    """Returns (decompressed grads as the optimizer sees them, new error
+    state, metrics incl. compressed_bytes vs raw_bytes)."""
+    if cfg.kind == "none":
+        zero = jax.tree.map(lambda e: e, error)
+        raw = sum(g.size * 4 for g in jax.tree.leaves(grads))
+        return grads, zero, {
+            "raw_bytes": jnp.float32(raw), "compressed_bytes": jnp.float32(raw)
+        }
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error)
+    keys = jax.random.split(key, len(leaves))
+    out, new_err = [], []
+    comp_bytes = 0.0
+    raw_bytes = 0.0
+    for g, e, k in zip(leaves, err_leaves, keys):
+        gf = g.astype(jnp.float32) + e
+        raw_bytes += g.size * 4
+        if cfg.kind == "int8":
+            q, scale = _int8_compress(gf, k)
+            d = _int8_decompress(q, scale)
+            comp_bytes += g.size * 1 + 4
+        elif cfg.kind == "topk":
+            mask = _topk_mask(gf, cfg.topk_frac)
+            d = gf * mask
+            comp_bytes += g.size * cfg.topk_frac * 8  # value + index
+        else:  # pragma: no cover
+            raise ValueError(cfg.kind)
+        out.append(d)
+        new_err.append(gf - d)
+    return (
+        jax.tree.unflatten(treedef, out),
+        jax.tree.unflatten(treedef, new_err),
+        {
+            "raw_bytes": jnp.float32(raw_bytes),
+            "compressed_bytes": jnp.float32(comp_bytes),
+        },
+    )

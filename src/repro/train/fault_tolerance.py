@@ -1,0 +1,97 @@
+"""Fault tolerance & elasticity for long multi-pod runs (DESIGN §5).
+
+Pieces (all exercised by tests/test_fault_tolerance.py):
+
+  * checkpoint/restart — train/checkpoint.py (atomic manifest-last
+    publish; resume-exactness asserted in tests);
+  * failure handling — ``FailureController`` wraps the training loop:
+    on a (simulated or real) host failure it (1) restores the latest
+    checkpoint, (2) re-plans task placement on the surviving machines via
+    core.placement.replan_after_failure (warm-started ETP — orders of
+    magnitude fewer transitions than planning from scratch), (3) resumes;
+  * straggler mitigation — at the flow level OES's degree-based rate
+    sharing already prevents one slow transfer from starving a NIC
+    (Lemma 1); at the step level ``StragglerPolicy`` tracks a robust
+    (median + k*MAD) step-time envelope and flags hosts whose sampler
+    feeds should be re-provisioned (over-provisioned backup samplers are
+    the paper's sampler:worker ratio knob);
+  * elastic scaling — ``rescale_plan`` re-runs the planner for a new
+    machine set while training is paused at a checkpoint boundary.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core.cluster import ClusterSpec, Placement
+from ..core.placement import etp_search, replan_after_failure
+from ..core.workload import Workload
+from . import checkpoint as ckpt_mod
+
+
+@dataclass
+class StragglerPolicy:
+    window: int = 50
+    k_mad: float = 4.0
+    history: List[float] = field(default_factory=list)
+
+    def observe(self, step_time_s: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        h = self.history
+        h.append(step_time_s)
+        if len(h) > self.window:
+            del h[0]
+        if len(h) < 8:
+            return False
+        med = float(np.median(h))
+        mad = float(np.median(np.abs(np.asarray(h) - med))) + 1e-9
+        return step_time_s > med + self.k_mad * mad
+
+
+@dataclass
+class FailureController:
+    """Drives restore -> re-plan -> resume on machine failure."""
+
+    workload: Workload
+    cluster: ClusterSpec
+    placement: Placement
+    ckpt_dir: str
+    replan_budget: int = 300
+
+    failures: List[int] = field(default_factory=list)
+
+    def on_failure(self, machine: int, seed: int = 0):
+        """Returns (new_cluster, new_placement, replan_result)."""
+        self.failures.append(machine)
+        res = replan_after_failure(
+            self.workload,
+            self.cluster,
+            self.placement,
+            machine,
+            budget=self.replan_budget,
+            seed=seed,
+        )
+        self.cluster = self.cluster.without_machine(machine)
+        self.placement = res.placement
+        return self.cluster, self.placement, res
+
+    def restore(self, like_state):
+        latest = ckpt_mod.latest_checkpoint(self.ckpt_dir)
+        if latest is None:
+            return like_state, 0
+        return ckpt_mod.restore_checkpoint(latest, like_state)
+
+
+def rescale_plan(
+    workload: Workload,
+    new_cluster: ClusterSpec,
+    *,
+    budget: int = 500,
+    seed: int = 0,
+):
+    """Elastic scale-up/down: full re-plan on the new machine set (called
+    at a checkpoint boundary; the data pipeline reshards by step count)."""
+    return etp_search(workload, new_cluster, budget=budget, seed=seed)

@@ -1,0 +1,195 @@
+"""Train-step builder: jit-compiled, sharding-annotated train/eval steps.
+
+TrainState = (params bf16, AdamW state fp32, step).  Sharding:
+  * params + all optimizer moments: the model's param_specs (FSDP x TP);
+  * batch: dp-sharded on the leading axis;
+  * step/metrics: replicated.
+
+The same builder produces the dry-run lowerable (`.lower(**structs)`) and
+the real executable (examples/train_lm_100m.py runs it on CPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..launch import inputs as inputs_mod
+from ..models.config import ModelConfig
+from ..models.model import TransformerLM
+from ..sharding import ShardCtx
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+
+Pytree = Any
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "opt", "step"],
+    meta_fields=[],
+)
+@dataclass
+class TrainState:
+    params: Pytree
+    opt: Dict[str, Pytree]
+    step: jnp.ndarray
+
+
+class TrainStepBuilder:
+    def __init__(
+        self,
+        model: TransformerLM,
+        opt_cfg: Optional[AdamWConfig] = None,
+        accum_steps: int = 1,
+    ):
+        self.model = model
+        self.cfg = model.cfg
+        self.ctx = model.ctx
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.accum_steps = accum_steps
+
+    # ---------------------------------------------------------------- specs
+    def state_specs(self) -> TrainState:
+        ps = self.model.param_specs()
+        pstruct = jax.eval_shape(lambda: self.model.init(jax.random.key(0)))
+        return TrainState(
+            params=ps,
+            opt=opt_state_specs(self.opt_cfg, pstruct, ps),
+            step=P(),
+        )
+
+    def state_shardings(self) -> Optional[TrainState]:
+        if self.ctx.mesh is None:
+            return None
+        named = lambda spec: NamedSharding(self.ctx.mesh, spec)
+        sp = self.state_specs()
+        return TrainState(
+            params=jax.tree.map(named, sp.params),
+            opt=jax.tree.map(named, sp.opt),
+            step=named(P()),
+        )
+
+    def batch_shardings(self, batch: int):
+        if self.ctx.mesh is None:
+            return None
+        specs = inputs_mod.batch_specs(self.cfg, self.ctx, batch)
+        return jax.tree.map(lambda s: NamedSharding(self.ctx.mesh, s), specs)
+
+    # ----------------------------------------------------------------- init
+    def init_state(self, key: jax.Array) -> TrainState:
+        params = self.model.init(key)
+        return TrainState(
+            params=params,
+            opt=adamw_init(params, self.opt_cfg),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def state_structs(self) -> TrainState:
+        """abstract TrainState (dry-run input): eval_shape of init."""
+        return jax.eval_shape(lambda: self.init_state(jax.random.key(0)))
+
+    # ----------------------------------------------------------------- step
+    def train_step(self, state: TrainState, batch: Dict[str, jnp.ndarray]):
+        grad_fn = jax.grad(self.model.loss_fn, has_aux=True)
+        k = self.accum_steps
+        if k <= 1:
+            grads, metrics = grad_fn(state.params, batch)
+        else:
+            # gradient accumulation: scan over k microbatches; the live
+            # activation set shrinks by k (EXPERIMENTS §Perf)
+            micro = jax.tree.map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch
+            )
+
+            def mb(carry, mbatch):
+                g, metrics_sum = carry
+                gi, mi = grad_fn(state.params, mbatch)
+                g = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype) / k, g, gi
+                )
+                metrics_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / k, metrics_sum, mi
+                )
+                return (g, metrics_sum), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            met0 = jax.eval_shape(lambda: grad_fn(state.params, jax.tree.map(lambda x: x[0], micro)))[1]
+            met0 = jax.tree.map(lambda s: jnp.zeros((), jnp.float32), met0)
+            (grads, metrics), _ = jax.lax.scan(mb, (g0, met0), micro)
+        new_params, new_opt, opt_metrics = adamw_update(
+            self.opt_cfg, state.params, state.opt, grads, state.step
+        )
+        metrics = {**metrics, **opt_metrics}
+        return (
+            TrainState(params=new_params, opt=new_opt, step=state.step + 1),
+            metrics,
+        )
+
+    def eval_step(self, state: TrainState, batch: Dict[str, jnp.ndarray]):
+        loss, metrics = self.model.loss_fn(state.params, batch)
+        return metrics
+
+    # ------------------------------------------------------------- compiled
+    def jit_train_step(self, batch: int):
+        kw = {}
+        if self.ctx.mesh is not None:
+            ss = self.state_shardings()
+            kw = dict(
+                in_shardings=(ss, self.batch_shardings(batch)),
+                out_shardings=(ss, NamedSharding(self.ctx.mesh, P())),
+            )
+        return jax.jit(self.train_step, **kw)
+
+    def lower_train(self, batch: int, seq: int):
+        """Lower (no execution) for the dry-run: abstract state + batch."""
+        structs = inputs_mod.train_structs(self.cfg, batch, seq)
+        return self.jit_train_step(batch).lower(self.state_structs(), structs)
+
+    # ------------------------------------------------------------- serving
+    def jit_decode_step(self, batch: int, smax: int):
+        model = self.model
+        kw = {}
+        if self.ctx.mesh is not None:
+            named = lambda spec: NamedSharding(self.ctx.mesh, spec)
+            pspec = jax.tree.map(named, model.param_specs())
+            _, cspec = model.cache_struct(batch, smax)
+            cshard = jax.tree.map(named, cspec)
+            bshard = named(model.ctx.batch_spec(batch, 0))
+            kw = dict(
+                in_shardings=(pspec, cshard, bshard, named(P())),
+                out_shardings=(cshard, named(P(model.ctx.batch_spec(batch, 0)[0], None))),
+            )
+        return jax.jit(model.decode_step, **kw)
+
+    def lower_decode(self, batch: int, smax: int):
+        model = self.model
+        pstructs = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        cstructs, _ = model.cache_struct(batch, smax)
+        dec = inputs_mod.decode_inputs_structs(batch)
+        return self.jit_decode_step(batch, smax).lower(
+            pstructs, cstructs, dec["token"], dec["pos"]
+        )
+
+    def jit_prefill(self, batch: int, seq: int):
+        model = self.model
+        kw = {}
+        if self.ctx.mesh is not None:
+            named = lambda spec: NamedSharding(self.ctx.mesh, spec)
+            pspec = jax.tree.map(named, model.param_specs())
+            bshard = dict(self.batch_shardings(batch))
+            bshard.pop("labels", None)  # prefill consumes inputs only
+            kw = dict(in_shardings=(pspec, bshard))
+        return jax.jit(model.prefill, **kw)
+
+    def lower_prefill(self, batch: int, seq: int):
+        pstructs = jax.eval_shape(lambda: self.model.init(jax.random.key(0)))
+        structs = inputs_mod.train_structs(self.cfg, batch, seq)
+        structs.pop("labels", None)
+        return self.jit_prefill(batch, seq).lower(pstructs, structs)

@@ -1,0 +1,10 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout without install
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# Smoke tests must see exactly ONE device (the dry-run sets its own flags
+# in a separate process); keep XLA quiet and single-threaded.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,95 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import (
+    flash_attention_ref,
+    grouped_gemm_ref,
+    sage_aggregate_ref,
+    ssd_ref,
+)
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.key(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,sq,sk,d,causal,window,softcap",
+    [
+        (1, 2, 256, 256, 64, True, None, None),
+        (2, 1, 128, 256, 128, True, 64, None),
+        (1, 2, 256, 256, 64, True, None, 30.0),
+        (1, 1, 128, 128, 64, False, None, None),
+        (2, 2, 384, 384, 32, True, 128, 50.0),
+    ],
+)
+def test_flash_attention_sweep(b, h, sq, sk, d, causal, window, softcap, dtype):
+    q = rand(1, (b, h, sq, d), dtype)
+    k = rand(2, (b, h, sk, d), dtype)
+    v = rand(3, (b, h, sk, d), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        bq=64, bk=64, interpret=True,
+    )
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max() < tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,hd,ds,chunk", [(2, 128, 4, 32, 16, 32), (1, 256, 2, 64, 64, 64)]
+)
+def test_ssd_sweep(b, s, h, hd, ds, chunk, dtype):
+    x = rand(4, (b, s, h, hd), dtype)
+    dt = jax.nn.softplus(rand(5, (b, s, h), jnp.float32))
+    A = -jnp.exp(rand(6, (h,), jnp.float32) * 0.5)
+    Bm = rand(7, (b, s, ds), dtype)
+    Cm = rand(8, (b, s, ds), dtype)
+    Bh = jnp.repeat(Bm[:, :, None, :], h, 2)
+    Ch = jnp.repeat(Cm[:, :, None, :], h, 2)
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref = ssd_ref(x, dt, A, Bh, Ch)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    assert jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max() < tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,f,e,bt", [(256, 128, 128, 4, 64), (512, 256, 256, 8, 128)])
+def test_moe_gemm_sweep(t, d, f, e, bt, dtype):
+    x = rand(9, (t, d), dtype)
+    w = rand(10, (e, d, f), dtype) * 0.1
+    gs = jax.random.dirichlet(jax.random.key(11), jnp.ones(e)) * (t * 0.9)
+    gs = jnp.floor(gs).astype(jnp.int32)
+    out = ops.moe_grouped_gemm(x, w, gs, bt=bt)
+    ref = grouped_gemm_ref(x, w, gs)
+    tot = int(gs.sum())
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-3
+    assert jnp.abs(
+        out[:tot].astype(jnp.float32) - ref[:tot].astype(jnp.float32)
+    ).max() < tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,f,m,k", [(500, 64, 128, 8), (300, 128, 64, 16)])
+def test_sage_sweep(n, f, m, k, dtype):
+    x = rand(12, (n, f), dtype)
+    idx = jax.random.randint(jax.random.key(13), (m, k), -1, n, jnp.int32)
+    out = ops.sage_aggregate(x, idx, bm=64)
+    ref = sage_aggregate_ref(x, idx)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    assert jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max() < tol
+
+
+def test_sage_all_padding_row():
+    x = rand(14, (32, 16), jnp.float32)
+    idx = jnp.full((8, 4), -1, jnp.int32)
+    out = ops.sage_aggregate(x, idx, bm=8)
+    assert jnp.all(out == 0)

@@ -1,0 +1,62 @@
+"""Multi-job joint planning (paper conclusion's extension)."""
+import numpy as np
+
+from repro.core import (
+    etp_search,
+    heterogeneous_cluster,
+    ifs_placement,
+    max_degree,
+    simulate,
+)
+from repro.core.multijob import merge_workloads, per_job_makespans, realize_merged
+from repro.core.profiles import OGBN_PRODUCTS, REDDIT, build_workload_from_profile
+
+
+def two_jobs():
+    j1 = build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=3, samplers_per_worker=2,
+        n_ps=1, n_iters=12,
+    )
+    j2 = build_workload_from_profile(
+        REDDIT, n_stores=4, n_workers=2, samplers_per_worker=2,
+        n_ps=1, n_iters=8,
+    )
+    return j1, j2
+
+
+def test_merge_and_schedule():
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    assert mj.workload.J == j1.J + j2.J
+    assert mj.workload.E == j1.E + j2.E
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p = ifs_placement(mj.workload, cluster, seed=0)
+    r = realize_merged(mj, [j1, j2], seed=0)
+    res = simulate(mj.workload, cluster, p, r, policy="oes", record=True)
+    spans = per_job_makespans(mj, res)
+    assert len(spans) == 2
+    assert all(np.isfinite(s) and s > 0 for s in spans)
+    # each job's span bounded by the global makespan
+    assert max(spans) <= res.makespan + 1e-6
+    # the merged Delta covers both jobs' flows on shared NICs
+    assert max_degree(mj.workload, p, cluster) >= max(
+        max_degree(j1, ifs_placement(j1, cluster, seed=0), cluster), 1
+    )
+
+
+def test_joint_search_improves_fairly():
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    r = realize_merged(mj, [j1, j2], seed=0)
+    p0 = ifs_placement(mj.workload, cluster, seed=0)
+    base = simulate(mj.workload, cluster, p0, r, policy="oes").makespan
+
+    def cost(p):
+        return simulate(mj.workload, cluster, p, r, policy="oes").makespan
+
+    res = etp_search(
+        mj.workload, cluster, budget=120, seed=0, cost_fn=cost
+    )
+    tuned = simulate(mj.workload, cluster, res.placement, r, policy="oes").makespan
+    assert tuned <= base * 1.001

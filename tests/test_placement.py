@@ -1,0 +1,115 @@
+"""IFS / ETP / DistDGL placement tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_gnn_workload,
+    distdgl_placement,
+    etp_search,
+    heterogeneous_cluster,
+    ifs_placement,
+    is_feasible,
+    replan_after_failure,
+    simulate,
+    testbed_cluster,
+)
+from repro.core.placement import etp_multichain
+from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
+
+
+def paper_job(n_iters=20):
+    return build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=6, samplers_per_worker=2,
+        n_ps=1, n_iters=n_iters,
+    )
+
+
+def test_ifs_feasible_on_testbed():
+    wl = paper_job()
+    cluster = testbed_cluster()
+    p = ifs_placement(wl, cluster, seed=0)
+    demands = cluster.demand_matrix(wl.tasks)
+    assert is_feasible(cluster, demands, p)
+    # stores pinned: store g on machine g (constraint (3))
+    for g, name in enumerate(wl.task_names()[:4]):
+        assert name.startswith("store") and p.y[g] == g
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000))
+def test_ifs_feasible_random_clusters(seed):
+    wl = paper_job()
+    cluster = heterogeneous_cluster(4, seed=seed, cpu_range=(12, 32))
+    try:
+        p = ifs_placement(wl, cluster, seed=seed)
+    except ValueError:
+        return  # genuinely infeasible cluster: acceptable outcome
+    demands = cluster.demand_matrix(wl.tasks)
+    assert is_feasible(cluster, demands, p)
+
+
+def test_ifs_raises_when_infeasible():
+    wl = paper_job()
+    cluster = heterogeneous_cluster(
+        4, seed=0, cpu_range=(2, 3), gpu_range=(1, 1), mem_range=(8.0, 10.0)
+    )
+    with pytest.raises(ValueError):
+        ifs_placement(wl, cluster, seed=0)
+
+
+def test_distdgl_colocates_when_possible():
+    wl = paper_job()
+    cluster = testbed_cluster()
+    p = distdgl_placement(wl, cluster)
+    demands = cluster.demand_matrix(wl.tasks)
+    assert is_feasible(cluster, demands, p)
+    colocated = sum(
+        int(all(p.y[s] == p.y[w] for s in wl.sampler_of_worker[w]))
+        for w in wl.sampler_of_worker
+    )
+    assert colocated >= len(wl.sampler_of_worker) - 2  # paper: 2 forced splits
+
+
+def test_etp_improves_over_ifs():
+    wl = paper_job()
+    cluster = testbed_cluster()
+    r = wl.realize(seed=0)
+    p0 = ifs_placement(wl, cluster, seed=0)
+    base = simulate(wl, cluster, p0, r, policy="oes").makespan
+    res = etp_search(wl, cluster, budget=400, sim_iters=15, seed=0)
+    tuned = simulate(wl, cluster, res.placement, r, policy="oes").makespan
+    demands = cluster.demand_matrix(wl.tasks)
+    assert is_feasible(cluster, demands, res.placement)
+    assert tuned <= base * 1.001  # never worse than the IFS start
+
+
+def test_etp_paper_faithful_mode_runs():
+    """Alg. 3 exactly: single moves, fixed beta=0.1, no annealing."""
+    wl = paper_job(n_iters=10)
+    cluster = testbed_cluster()
+    res = etp_search(
+        wl, cluster, budget=60, beta=0.1, group_moves=0.0, anneal=False, seed=1
+    )
+    demands = cluster.demand_matrix(wl.tasks)
+    assert is_feasible(cluster, demands, res.placement)
+
+
+def test_etp_multichain_best_of():
+    wl = paper_job(n_iters=10)
+    cluster = testbed_cluster()
+    res = etp_multichain(wl, cluster, n_chains=2, budget=80, sim_iters=10, seed=0)
+    assert np.isfinite(res.best_makespan)
+
+
+def test_replan_after_failure():
+    wl = paper_job(n_iters=10)
+    cluster = heterogeneous_cluster(6, seed=7)
+    p = ifs_placement(wl, cluster, seed=0)
+    res = replan_after_failure(wl, cluster, p, failed_machine=2, budget=50, seed=0)
+    new_cluster = cluster.without_machine(2)
+    assert new_cluster.M == 5
+    assert res.placement.y.max() < new_cluster.M
+    r = wl.realize(seed=0)
+    mk = simulate(wl, new_cluster, res.placement, r, policy="oes").makespan
+    assert np.isfinite(mk)

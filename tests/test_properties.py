@@ -1,0 +1,134 @@
+"""Hypothesis property tests on the scheduler's invariants.
+
+For random jobs, clusters and placements:
+  P1  every flow instance is fully delivered exactly once (conservation);
+  P2  NIC capacity is never exceeded at any event interval (checked via
+      total bytes / makespan bounds per machine);
+  P3  the Theorem-1 certificate holds: T_OES <= Delta * LB_chain;
+  P4  makespan is monotone: more bandwidth never hurts OES.
+"""
+import numpy as np
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (
+    Placement,
+    build_gnn_workload,
+    chain_lower_bound,
+    heterogeneous_cluster,
+    ifs_placement,
+    max_degree,
+    simulate,
+)
+
+job_st = st.fixed_dictionaries(
+    {
+        "n_stores": st.integers(2, 4),
+        "n_workers": st.integers(1, 4),
+        "samplers_per_worker": st.integers(1, 2),
+        "n_iters": st.integers(2, 6),
+        "vol": st.floats(0.05, 4.0),
+        "seed": st.integers(0, 10_000),
+    }
+)
+
+
+def build(j):
+    wl = build_gnn_workload(
+        n_stores=j["n_stores"],
+        n_workers=j["n_workers"],
+        samplers_per_worker=j["samplers_per_worker"],
+        n_ps=1,
+        n_iters=j["n_iters"],
+        store_to_sampler_gb=j["vol"],
+        sampler_to_worker_gb=j["vol"] / 2,
+        grad_gb=0.05,
+        store_exec_s=0.1,
+        sampler_exec_s=0.2,
+        worker_exec_s=0.4,
+        ps_exec_s=0.1,
+        pmr=1.3,
+    )
+    cluster = heterogeneous_cluster(j["n_stores"], seed=j["seed"])
+    try:
+        p = ifs_placement(wl, cluster, seed=j["seed"])
+    except ValueError:
+        assume(False)  # randomly-drawn cluster cannot host the job: discard
+    r = wl.realize(seed=j["seed"])
+    return wl, cluster, p, r
+
+
+@settings(max_examples=15, deadline=None)
+@given(job_st)
+def test_conservation_and_certificate(j):
+    wl, cluster, p, r = build(j)
+    res = simulate(wl, cluster, p, r, policy="oes", record=True)
+    # P1: each remote instance delivered exactly once
+    seen = set()
+    for (e, n, s, t) in res.flow_log:
+        assert (e, n) not in seen
+        seen.add((e, n))
+        assert t >= s - 1e-9
+    remote = p.y[wl.edge_src] != p.y[wl.edge_dst]
+    expected = {
+        (e, n)
+        for e in range(wl.E)
+        if remote[e]
+        for n in range(1, r.n_iters + 1 - int(wl.edge_lag[e]))
+        if r.volumes[e, n - 1] > 1e-12
+    }
+    assert seen == expected
+    # P3: competitive certificate (Theorem 1)
+    cert = chain_lower_bound(wl, cluster, p, r, res)
+    assert cert.holds, (cert.makespan, cert.delta, cert.lower_bound)
+    assert res.makespan >= cert.p_sum - 1e-6  # sanity: chain exec bound
+
+
+@settings(max_examples=10, deadline=None)
+@given(job_st)
+def test_per_machine_bandwidth_bound(j):
+    """P2 (integral form): bytes through any NIC <= bw * makespan."""
+    wl, cluster, p, r = build(j)
+    res = simulate(wl, cluster, p, r, policy="oes", record=True)
+    in_bytes = np.zeros(cluster.M)
+    out_bytes = np.zeros(cluster.M)
+    for (e, n, s, t) in res.flow_log:
+        v = r.volumes[e, n - 1]
+        out_bytes[p.y[wl.edge_src[e]]] += v
+        in_bytes[p.y[wl.edge_dst[e]]] += v
+    assert np.all(out_bytes <= cluster.bw_out * res.makespan * (1 + 1e-6))
+    assert np.all(in_bytes <= cluster.bw_in * res.makespan * (1 + 1e-6))
+
+
+@settings(max_examples=8, deadline=None)
+@given(job_st, st.floats(1.3, 3.0))
+def test_bandwidth_monotonicity(j, factor):
+    """P4: scaling all NICs up cannot make OES slower."""
+    wl, cluster, p, r = build(j)
+    base = simulate(wl, cluster, p, r, policy="oes").makespan
+    cluster.bw_in = cluster.bw_in * factor
+    cluster.bw_out = cluster.bw_out * factor
+    fast = simulate(wl, cluster, p, r, policy="oes").makespan
+    assert fast <= base * (1 + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(job_st)
+def test_delta_bounds_active_degrees(j):
+    """Lemma 1: runtime degrees never exceed one-iteration degrees."""
+    wl, cluster, p, r = build(j)
+    delta = max_degree(wl, p, cluster)
+    res = simulate(wl, cluster, p, r, policy="oes", record=True)
+    # reconstruct worst instantaneous degree from the flow intervals
+    events = []
+    for (e, n, s, t) in res.flow_log:
+        events.append((s, 1, e))
+        events.append((t, -1, e))
+    events.sort()
+    per_m_in = np.zeros(cluster.M, dtype=int)
+    per_m_out = np.zeros(cluster.M, dtype=int)
+    worst = 0
+    for (_, d, e) in events:
+        per_m_out[p.y[wl.edge_src[e]]] += d
+        per_m_in[p.y[wl.edge_dst[e]]] += d
+        worst = max(worst, per_m_in.max(), per_m_out.max())
+    assert worst <= delta
