@@ -31,13 +31,18 @@ from .engine import (
     POLICIES,
     ScheduleResult,
     expected_makespan,
+    expected_makespan_many,
+    mean_batch_makespans,
     simulate,
+    simulate_batch,
 )
 from .oes_slotted import simulate_slotted
 from .placement import (
     ETPResult,
     distdgl_placement,
+    etp_multichain,
     etp_search,
+    group_move_candidates,
     ifs_placement,
     replan_after_failure,
 )

@@ -53,7 +53,10 @@ def plan(
     Default search is multi-chain: one chain from IFS, one warm-started
     from the DistDGL colocation heuristic — DGTP's placement is then at
     least as good as every baseline's under its own scheduler, for any
-    budget (the single-chain paper-faithful search is etp_search)."""
+    budget (the single-chain paper-faithful search is etp_search).  The
+    chains advance in lock-step with their candidate placements evaluated
+    in one batched simulation (engine.simulate_batch), so planning wall
+    time shrinks with the chain count at identical search semantics."""
     realization = realization or workload.realize(seed=seed)
     etp: Optional[ETPResult] = None
     if search:

@@ -22,13 +22,16 @@ Implementation notes: because constraint (11) serialises a logical edge's
 instances, *at most one instance per edge is ever in flight* — the active
 flow set is a boolean mask over the E logical edges, and all per-event work
 is vectorised numpy over that mask.  This is the engine used by ETP's inner
-loop, so constant factors matter (see benchmarks/bench_etp.py).
+loop, so constant factors matter: ``simulate_batch`` advances many
+independent (placement, realization) instances in lock-step so the
+per-event numpy overhead is amortised across the whole batch
+(benchmarks/bench_etp.py measures the resulting planning-loop throughput).
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -400,6 +403,462 @@ def simulate(
     )
 
 
+# ---------------------------------------------------------------------------
+# Batched engine: many independent (placement, realization) instances advance
+# in lock-step.  Each lock-step iteration moves every unfinished instance to
+# its own next event, so the per-event numpy overhead (rate computation, time
+# stepping) is paid once per iteration instead of once per instance — the
+# planning loop's evaluations/sec scale with the batch width.
+#
+# Exactness contract: for every instance the batched path performs the exact
+# same floating-point operations as ``simulate`` run on that instance alone,
+# so makespans / schedules are bit-identical (certified by
+# tests/test_batch_engine.py).  The rate policies decompose because instances
+# never share NICs: machine ids are offset per instance (``b*M + m``) and all
+# built-in policies act component-locally on the resulting disjoint union —
+# except OES progressive filling, whose global water level is replaced by a
+# per-instance level advanced in lock-step (same per-instance increment
+# sequence as the scalar loop).
+# ---------------------------------------------------------------------------
+def _batch_rates_factory(
+    policy: RatePolicy, B: int, cluster: ClusterSpec, group_stride: int
+) -> Callable[..., np.ndarray]:
+    """Return ``f(inst, src, dst, remaining, release, group) -> rates`` for
+    flows pooled from up to ``B`` instances (``inst`` sorted ascending).
+    ``src`` / ``dst`` / ``group`` are instance-local; the pool is compacted
+    to the distinct instances actually present (rate caching usually leaves
+    only one or two dirty), and a single-instance pool short-circuits to the
+    scalar policy — exact by definition.  Callers must run inside an
+    ``np.errstate(divide/invalid ignored)`` context."""
+    M = cluster.M
+    bw_in, bw_out = cluster.bw_in, cluster.bw_out
+    bw_in_t = np.tile(bw_in, B)
+    bw_out_t = np.tile(bw_out, B)
+
+    if policy.name == "oes_strict":
+
+        def strict_pool(nb, src, dst, remaining, release, group):
+            d_out = np.bincount(src, minlength=nb * M)
+            d_in = np.bincount(dst, minlength=nb * M)
+            return np.minimum(
+                bw_in_t[: nb * M][dst] / d_in[dst],
+                bw_out_t[: nb * M][src] / d_out[src],
+            )
+
+        pool_rates = strict_pool
+
+    elif policy.name in ("fifo", "mrtf"):
+        # Sequential waterfill: a stable sort keeps each instance's internal
+        # priority order, and capacity updates are per-NIC, so interleaving
+        # instances changes nothing within any one of them.
+        def waterfill_pool(nb, src, dst, remaining, release, group):
+            rem_in = bw_in_t[: nb * M].copy()
+            rem_out = bw_out_t[: nb * M].copy()
+            r = np.zeros(len(src))
+            order = policy.order(src, dst, remaining, release, rem_in, rem_out)
+            for i in order:
+                give = min(rem_in[dst[i]], rem_out[src[i]])
+                if give > EPS:
+                    r[i] = give
+                    rem_in[dst[i]] -= give
+                    rem_out[src[i]] -= give
+            return r
+
+        pool_rates = waterfill_pool
+
+    elif policy.name == "omcoflow":
+        # The scalar rule's only global quantity, min(bw_in.max(), bw_out.max()),
+        # is identical for every instance (shared cluster), so pooling is exact.
+        bw_ref = min(bw_in.max(), bw_out.max())
+        rounds = policy.rounds
+
+        def omcoflow_pool(nb, src, dst, remaining, release, group):
+            bw_in_p = bw_in_t[: nb * M]
+            bw_out_p = bw_out_t[: nb * M]
+            pred = np.maximum(remaining, EPS) / np.minimum(bw_in_p[dst], bw_out_p[src])
+            w = 1.0 / pred
+            gsum = np.zeros(group.max() + 1)
+            np.add.at(gsum, group, w)
+            w = w / gsum[group]
+            r = w * bw_ref
+            for _ in range(rounds):
+                load_out = np.bincount(src, weights=r, minlength=nb * M)
+                load_in = np.bincount(dst, weights=r, minlength=nb * M)
+                s_out = bw_out_p / np.maximum(load_out, EPS)
+                s_in = bw_in_p / np.maximum(load_in, EPS)
+                r = r * np.minimum(1.0, np.minimum(s_out[src], s_in[dst]))
+            return r
+
+        pool_rates = omcoflow_pool
+
+    elif policy.name == "oes":
+        # Per-instance progressive filling in lock-step: every round, each
+        # still-filling instance raises its unfrozen flows by ITS OWN
+        # bottleneck increment (not a global water level), reproducing the
+        # scalar per-instance increment sequence exactly.  Ingress NICs
+        # occupy [0, nb*M) and egress NICs [nb*M, 2*nb*M) of one fused
+        # capacity array so each round costs one bincount / one where.
+        def oes_pool(nb, src, dst, remaining, release, group, inst):
+            # An instance whose flows all froze (or vanished) gets an
+            # all-zero NIC count, hence an infinite increment, hence is
+            # killed by the isfinite check — no separate emptiness pass
+            # needed (bitwise equivalent: no increment is applied either way).
+            n = len(src)
+            src2 = src + nb * M
+            idx2 = np.concatenate((dst, src2))
+            r = np.zeros(n)
+            rem2 = np.concatenate((bw_in_t[: nb * M], bw_out_t[: nb * M]))
+            unfrozen = np.ones(n, dtype=bool)
+            live = np.ones(nb, dtype=bool)  # instance still filling
+            flows = unfrozen.copy()
+            for _ in range(2 * (M + M)):
+                cnt2 = np.bincount(
+                    idx2[np.concatenate((flows, flows))], minlength=2 * nb * M
+                )
+                inc2 = np.where(cnt2 > 0, rem2 / np.maximum(cnt2, 1), np.inf)
+                inc_side = inc2.reshape(2 * nb, M).min(axis=1)
+                inc_b = np.minimum(inc_side[:nb], inc_side[nb:])
+                live &= np.isfinite(inc_b)
+                flows &= live[inst]
+                if not flows.any():
+                    break
+                r[flows] += inc_b[inst[flows]]
+                inc_f = np.where(live, inc_b, 0.0)
+                rem2.reshape(2, nb, M)[...] -= inc_f[None, :, None] * cnt2.reshape(2, nb, M)
+                sat2 = (rem2 <= EPS) & (cnt2 > 0)
+                newly = flows & (sat2[dst] | sat2[src2])
+                live &= np.bincount(inst[newly], minlength=nb) > 0
+                unfrozen &= ~newly
+                flows &= unfrozen & live[inst]
+                if not flows.any():
+                    break
+            return r
+
+        pool_rates = oes_pool
+
+    else:
+        pool_rates = None  # unknown/custom policy: per-segment scalar calls
+
+    def rates_fn(inst, src_l, dst_l, remaining, release, group):
+        # boundaries of the (sorted) instance segments in the pool
+        cut = np.empty(len(inst), dtype=bool)
+        cut[0] = True
+        np.not_equal(inst[1:], inst[:-1], out=cut[1:])
+        nb = int(cut.sum())
+        if nb == 1:
+            return policy.rates(
+                src_l, dst_l, remaining, release, group, bw_in, bw_out
+            )
+        if pool_rates is None:
+            r = np.empty(len(inst))
+            starts = np.nonzero(cut)[0].tolist() + [len(inst)]
+            for lo, hi in zip(starts[:-1], starts[1:]):
+                r[lo:hi] = policy.rates(
+                    src_l[lo:hi], dst_l[lo:hi], remaining[lo:hi],
+                    release[lo:hi], group[lo:hi], bw_in, bw_out,
+                )
+            return r
+        dense = np.cumsum(cut) - 1  # 0..nb-1 per flow
+        src = src_l + dense * M
+        dst = dst_l + dense * M
+        if policy.name == "oes":
+            return pool_rates(nb, src, dst, remaining, release, group, dense)
+        if policy.name == "omcoflow":
+            group = group + dense * group_stride
+        return pool_rates(nb, src, dst, remaining, release, group)
+
+    return rates_fn
+
+
+def simulate_batch(
+    workload: Workload,
+    cluster: ClusterSpec,
+    placements: Sequence[Placement],
+    realizations: Sequence[Realization],
+    policy: RatePolicy | str = "oes",
+    record: bool = False,
+    max_events: int = 50_000_000,
+) -> List[ScheduleResult]:
+    """Run ``B = len(placements)`` independent jobs to completion in
+    lock-step; instance ``b`` pairs ``placements[b]`` with
+    ``realizations[b]``.  Returns one ``ScheduleResult`` per instance,
+    bit-identical to ``simulate`` run on each instance alone.
+
+    All realizations must share ``n_iters`` (the batch is stacked into
+    ``[B, E, N]`` / ``[B, J, N]`` arrays); the cluster is shared."""
+    if isinstance(policy, str):
+        policy = POLICIES[policy]()
+    B = len(placements)
+    if B == 0:
+        return []
+    if len(realizations) != B:
+        raise ValueError("placements and realizations must have equal length")
+    N = realizations[0].n_iters
+    if any(r.n_iters != N for r in realizations):
+        raise ValueError("all realizations in a batch must share n_iters")
+    J, E = workload.J, workload.E
+    src_t, dst_t, lag = workload.edge_src, workload.edge_dst, workload.edge_lag
+    vol = np.stack([r.volumes for r in realizations])  # [B, E, N]
+    ex = np.stack([r.exec_times for r in realizations])  # [B, J, N]
+    src_m = np.stack([p.y[src_t] for p in placements])  # [B, E]
+    dst_m = np.stack([p.y[dst_t] for p in placements])
+    local = src_m == dst_m
+    last_instance = N - lag  # [E]
+
+    # coflow group ids are only consumed by omcoflow (and custom policies);
+    # the built-in oes / oes_strict / fifo / mrtf rules ignore them, so the
+    # per-event group computation (and the numpy `delivered` mirror it
+    # gathers from) is skipped for those.
+    needs_group = policy.name not in ("oes", "oes_strict", "fifo", "mrtf")
+    delivered_np = np.zeros((B, E), dtype=np.int64) if needs_group else None
+    sending = np.zeros((B, E), dtype=np.int64)
+    remaining = np.zeros((B, E), dtype=np.float64)
+    release = np.zeros((B, E), dtype=np.float64)
+    active = np.zeros((B, E), dtype=bool)
+
+    in_edges, out_edges = workload.in_edges, workload.out_edges
+    heaps: List[List[Tuple[float, int, int]]] = [[] for _ in range(B)]
+    events: List[List[TaskEvent]] = [[] for _ in range(B)]
+    flow_logs: List[List[Tuple[int, int, float, float]]] = [[] for _ in range(B)]
+    flow_starts: List[Dict[Tuple[int, int], float]] = [{} for _ in range(B)]
+    n_events = np.zeros(B, dtype=np.int64)
+    t = np.zeros(B, dtype=np.float64)
+
+    rates_fn = _batch_rates_factory(policy, B, cluster, group_stride=J * (N + 2))
+    # oes / oes_strict / fifo rates depend only on the active-flow TOPOLOGY
+    # (machine ids + release order), not on ``remaining`` — an instance's
+    # per-flow rates stay valid until a flow starts or completes, so only
+    # "dirty" instances re-enter the (expensive) rate computation.  mrtf /
+    # omcoflow read ``remaining`` and must be recomputed every event.
+    rates_cacheable = policy.name in ("oes", "oes_strict", "fifo")
+    rate_cache = np.zeros((B, E), dtype=np.float64)
+    dirty = np.ones(B, dtype=bool)
+    # oes / oes_strict rates are a pure function of the active EDGE SET
+    # (placement fixed per instance, bw shared) — and training iterations
+    # revisit the same flow frontiers over and over, so memoise per-instance
+    # rates by active-set key.  fifo additionally depends on release times,
+    # so it only gets the dirty-tracking cache above.
+    topo_cacheable = policy.name in ("oes", "oes_strict")
+    topo_caches: List[Dict[bytes, np.ndarray]] = [{} for _ in range(B)]
+
+    # Hot per-(b, e) lookups in the completion handlers go through plain
+    # Python lists — several times cheaper than numpy scalar indexing.
+    lag_l = lag.tolist()
+    src_t_l = src_t.tolist()
+    dst_t_l = dst_t.tolist()
+    last_l = last_instance.tolist()
+    local_l = [row.tolist() for row in local]
+    vol_l = [row.tolist() for row in vol]  # [B][E][N]
+    ex_l = [row.tolist() for row in ex]  # [B][J][N]
+    done_l = [[0] * J for _ in range(B)]
+    running_l = [[False] * J for _ in range(B)]
+    delivered = [[0] * E for _ in range(B)]
+    n_active = [0] * B  # active-flow count per instance
+
+    def can_start(b: int, j: int, n: int) -> bool:
+        if n > N or running_l[b][j] or done_l[b][j] != n - 1:
+            return False
+        loc = local_l[b]
+        done = done_l[b]
+        dlv = delivered[b]
+        for e in in_edges[j]:
+            need = n - lag_l[e]
+            if need <= 0:
+                continue
+            if loc[e]:
+                if done[src_t_l[e]] < need:
+                    return False
+            elif dlv[e] < need:
+                return False
+        return True
+
+    def start_task(b: int, j: int, n: int, tb: float) -> None:
+        running_l[b][j] = True
+        end = tb + ex_l[b][j][n - 1]
+        heapq.heappush(heaps[b], (end, j, n))
+        if record:
+            events[b].append(TaskEvent(j, n, tb, end))
+
+    def try_start_flow(b: int, e: int, tb: float) -> bool:
+        if local_l[b][e] or active[b, e]:
+            return False
+        got_zero = False
+        dlv = delivered[b]
+        ve = vol_l[b][e]
+        while True:
+            nxt = dlv[e] + 1
+            if nxt > last_l[e] or done_l[b][src_t_l[e]] < nxt:
+                return got_zero
+            if ve[nxt - 1] > EPS:
+                break
+            dlv[e] = nxt
+            if needs_group:
+                delivered_np[b, e] = nxt
+            got_zero = True
+        sending[b, e] = nxt
+        remaining[b, e] = ve[nxt - 1]
+        release[b, e] = tb
+        active[b, e] = True
+        n_active[b] += 1
+        dirty[b] = True
+        if record:
+            flow_starts[b][(e, nxt)] = tb
+        return got_zero
+
+    for b in range(B):
+        for j in range(J):
+            if can_start(b, j, 1):
+                start_task(b, j, 1, 0.0)
+
+    alive = np.array([bool(heaps[b]) or n_active[b] > 0 for b in range(B)])
+    iters = 0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        while alive.any():
+            n_events[alive] += 1
+            iters += 1
+            if iters > max_events:  # pragma: no cover
+                raise RuntimeError("event limit exceeded — dependency deadlock?")
+            # finished instances have no active flows and an empty heap, so
+            # ``active`` alone identifies every live flow
+            rows, cols = np.nonzero(active)  # row-major: sorted by instance
+            t_flow = np.full(B, np.inf)
+            if rows.size:
+                flat = rows * E + cols
+                rem_f = remaining.ravel()[flat]
+                if rates_cacheable:
+                    if dirty.any():
+                        dmask = dirty[rows]
+                        drows = rows[dmask]
+                        if drows.size and not topo_cacheable:
+                            dflat = flat[dmask]
+                            rate_cache.ravel()[dflat] = rates_fn(
+                                drows, src_m.ravel()[dflat],
+                                dst_m.ravel()[dflat], rem_f[dmask],
+                                release.ravel()[dflat], None,
+                            )
+                        elif drows.size:
+                            dflat = flat[dmask]
+                            dcols = cols[dmask]
+                            cut = np.empty(len(drows), dtype=bool)
+                            cut[0] = True
+                            np.not_equal(drows[1:], drows[:-1], out=cut[1:])
+                            bounds = np.nonzero(cut)[0].tolist()
+                            bounds.append(len(drows))
+                            miss: List[Tuple[int, int, int, bytes]] = []
+                            rc_flat = rate_cache.ravel()
+                            for lo, hi in zip(bounds[:-1], bounds[1:]):
+                                b = int(drows[lo])
+                                key = dcols[lo:hi].tobytes()
+                                got = topo_caches[b].get(key)
+                                if got is not None:
+                                    rc_flat[dflat[lo:hi]] = got
+                                else:
+                                    miss.append((b, lo, hi, key))
+                            if miss:
+                                sel = np.concatenate(
+                                    [np.arange(lo, hi) for _, lo, hi, _ in miss]
+                                )
+                                mflat = dflat[sel]
+                                rr = rates_fn(
+                                    drows[sel], src_m.ravel()[mflat],
+                                    dst_m.ravel()[mflat],
+                                    remaining.ravel()[mflat],
+                                    release.ravel()[mflat], None,
+                                )
+                                rc_flat[mflat] = rr
+                                k = 0
+                                for b, lo, hi, key in miss:
+                                    topo_caches[b][key] = rr[k : k + hi - lo].copy()
+                                    k += hi - lo
+                        dirty[:] = False
+                    rates = rate_cache.ravel()[flat]
+                else:
+                    grp = None
+                    if needs_group:
+                        grp = (
+                            dst_t[cols] * (N + 2)
+                            + delivered_np.ravel()[flat] + 1 + lag[cols]
+                        )
+                    rates = rates_fn(
+                        rows, src_m.ravel()[flat], dst_m.ravel()[flat], rem_f,
+                        release.ravel()[flat], grp,
+                    )
+                dt = np.where(rates > EPS, rem_f / np.maximum(rates, EPS), np.inf)
+                counts = np.bincount(rows, minlength=B)
+                seg = counts > 0
+                starts = np.zeros(B, dtype=np.int64)
+                np.cumsum(counts[:-1], out=starts[1:])
+                t_flow[seg] = np.minimum.reduceat(dt, starts[seg])
+            t_flow = t + t_flow
+            t_task = np.array(
+                [heaps[b][0][0] if heaps[b] else np.inf for b in range(B)]
+            )
+            t_next = np.minimum(t_task, t_flow)
+            if bool((alive & ~np.isfinite(t_next)).any()):  # pragma: no cover
+                raise RuntimeError("no progress: flows active but zero rates")
+
+            fins: Dict[int, List[int]] = {}
+            if rows.size:
+                rem_f = rem_f - rates * (t_next[rows] - t[rows])
+                remaining.ravel()[flat] = rem_f
+                vol_f = vol.ravel()[flat * N + sending.ravel()[flat] - 1]
+                fin_mask = rem_f <= EPS * np.maximum(1.0, vol_f)
+                for b, e in zip(rows[fin_mask].tolist(), cols[fin_mask].tolist()):
+                    fins.setdefault(b, []).append(e)
+            np.copyto(t, t_next, where=alive)
+
+            for b in np.nonzero(alive)[0].tolist():
+                tb = float(t_next[b])
+                heap = heaps[b]
+                touched: List[int] = []
+
+                while heap and heap[0][0] <= tb + EPS:
+                    _, j, n = heapq.heappop(heap)
+                    running_l[b][j] = False
+                    done_l[b][j] = n
+                    touched.append(j)
+                    for e in out_edges[j]:
+                        if local_l[b][e]:
+                            touched.append(dst_t_l[e])
+                        elif try_start_flow(b, e, tb):
+                            touched.append(dst_t_l[e])
+
+                for e in fins.get(b, ()):
+                    n = int(sending[b, e])
+                    delivered[b][e] = n
+                    if needs_group:
+                        delivered_np[b, e] = n
+                    sending[b, e] = 0
+                    active[b, e] = False
+                    remaining[b, e] = 0.0
+                    n_active[b] -= 1
+                    dirty[b] = True
+                    touched.append(dst_t_l[e])
+                    if record:
+                        flow_logs[b].append(
+                            (int(e), n, flow_starts[b].pop((int(e), n)), tb)
+                        )
+                    if try_start_flow(b, e, tb):
+                        touched.append(dst_t_l[e])
+
+                for j in set(touched):
+                    n = done_l[b][j] + 1
+                    if can_start(b, j, n):
+                        start_task(b, j, n, tb)
+                alive[b] = bool(heap) or n_active[b] > 0
+
+    return [
+        ScheduleResult(
+            makespan=float(t[b]),
+            task_events=events[b],
+            flow_log=flow_logs[b],
+            n_events=int(n_events[b]),
+            policy=policy.name,
+        )
+        for b in range(B)
+    ]
+
+
 def expected_makespan(
     workload: Workload,
     cluster: ClusterSpec,
@@ -408,11 +867,85 @@ def expected_makespan(
     n_iters: int = 20,
     n_draws: int = 3,
     seed: int = 0,
+    batch: Optional[bool] = None,
 ) -> float:
     """Monte-Carlo estimate of T'_Y (paper §V-B): simulate ``n_iters``
-    iterations a few times with fresh draws from the traffic profile."""
+    iterations a few times with fresh draws from the traffic profile.
+
+    With ``batch`` (default: whenever ``n_draws > 1``) all draws advance in
+    one fused ``simulate_batch`` call — bit-identical result, one event loop."""
+    if batch is None:
+        batch = n_draws > 1
+    reals = [
+        workload.realize(seed=seed + 1000 * d, n_iters=n_iters)
+        for d in range(n_draws)
+    ]
+    if batch:
+        results = simulate_batch(
+            workload, cluster, [placement] * n_draws, reals, policy=policy
+        )
+        makespans = [r.makespan for r in results]
+    else:
+        makespans = [
+            simulate(workload, cluster, placement, r, policy=policy).makespan
+            for r in reals
+        ]
     total = 0.0
-    for d in range(n_draws):
-        r = workload.realize(seed=seed + 1000 * d, n_iters=n_iters)
-        total += simulate(workload, cluster, placement, r, policy=policy).makespan
+    for m in makespans:
+        total += m
     return total / n_draws
+
+
+def mean_batch_makespans(
+    workload: Workload,
+    cluster: ClusterSpec,
+    groups: Sequence[Tuple[Placement, Sequence[Realization]]],
+    policy: RatePolicy | str = "oes",
+) -> List[float]:
+    """One ``simulate_batch`` over ``(placement, realizations)`` groups;
+    returns each group's mean makespan over its realizations (summed in
+    order — bit-identical to averaging per-group scalar simulations).
+    This is the shared batch-expansion used by ``expected_makespan_many``,
+    ETP's pooled chain evaluation and the merged-job objective."""
+    batch_p: List[Placement] = []
+    batch_r: List[Realization] = []
+    sizes: List[int] = []
+    for p, reals in groups:
+        batch_p += [p] * len(reals)
+        batch_r += list(reals)
+        sizes.append(len(reals))
+    results = simulate_batch(workload, cluster, batch_p, batch_r, policy=policy)
+    out: List[float] = []
+    k = 0
+    for s in sizes:
+        total = 0.0
+        for r in results[k : k + s]:
+            total += r.makespan
+        out.append(total / s)
+        k += s
+    return out
+
+
+def expected_makespan_many(
+    workload: Workload,
+    cluster: ClusterSpec,
+    placements: Sequence[Placement],
+    policy: str = "oes",
+    n_iters: int = 20,
+    n_draws: int = 3,
+    seed: int = 0,
+) -> List[float]:
+    """Fused T'_Y for many candidate placements sharing one draw seed: all
+    placements x draws run in ONE ``simulate_batch`` call.  Bit-identical
+    to per-placement ``expected_makespan``.  (ETP's multi-chain search
+    pools per-chain draws itself via ``mean_batch_makespans`` because its
+    chains use distinct seeds.)"""
+    if len(placements) == 0:
+        return []
+    reals = [
+        workload.realize(seed=seed + 1000 * d, n_iters=n_iters)
+        for d in range(n_draws)
+    ]
+    return mean_batch_makespans(
+        workload, cluster, [(p, reals) for p in placements], policy=policy
+    )

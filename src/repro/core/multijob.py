@@ -16,7 +16,8 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from .cluster import STORE, TaskSpec
+from .cluster import ClusterSpec, STORE, TaskSpec
+from .engine import mean_batch_makespans
 from .workload import Edge, Realization, TrafficModel, Workload
 
 EPS_EXEC = 1e-6
@@ -102,6 +103,61 @@ def realize_merged(mj: MergedJob, jobs: Sequence[Workload], seed: int = 0) -> Re
         volumes=np.concatenate(vol_parts, axis=0),
         exec_times=np.concatenate(ex_parts, axis=0),
     )
+
+
+def merged_batch_cost(
+    mj: MergedJob,
+    jobs: Sequence[Workload],
+    cluster: ClusterSpec,
+    *,
+    n_draws: int = 1,
+    seed: int = 0,
+    policy: str = "oes",
+):
+    """Batched merged-job objective for ETP: ``f(placements) -> makespans``.
+
+    The merged workload's makespan cannot use ``Workload.realize`` (shorter
+    jobs need the epsilon padding of ``realize_merged``), so the batch is
+    sized here: every candidate placement is simulated against the same
+    ``n_draws`` merged realizations in ONE ``simulate_batch`` call — batch
+    width = len(placements) x n_draws.  Plug into
+    ``etp_multichain(batch_cost_fn=...)``."""
+    reals = [realize_merged(mj, jobs, seed=seed + 1000 * d) for d in range(n_draws)]
+
+    def cost(placements) -> List[float]:
+        return mean_batch_makespans(
+            mj.workload, cluster, [(p, reals) for p in placements], policy=policy
+        )
+
+    return cost
+
+
+def joint_search(
+    jobs: Sequence[Workload],
+    cluster: ClusterSpec,
+    *,
+    n_chains: int = 4,
+    budget: int = 400,
+    n_draws: int = 1,
+    seed: int = 0,
+    policy: str = "oes",
+    **kw,
+):
+    """Joint multi-job DGTP placement search (paper conclusion): merge the
+    jobs, then run lock-step multi-chain ETP where every chain's proposal is
+    evaluated against shared-NIC merged realizations in one simulation
+    batch.  Returns ``(MergedJob, ETPResult)``."""
+    from .placement import etp_multichain  # local import: placement imports engine
+
+    mj = merge_workloads(jobs)
+    cost = merged_batch_cost(
+        mj, jobs, cluster, n_draws=n_draws, seed=seed, policy=policy
+    )
+    etp = etp_multichain(
+        mj.workload, cluster, n_chains=n_chains, budget=budget, seed=seed,
+        batch_cost_fn=cost, **kw,
+    )
+    return mj, etp
 
 
 def per_job_makespans(

@@ -14,6 +14,7 @@ Beyond-paper engineering (recorded in EXPERIMENTS.md §Search):
 """
 from __future__ import annotations
 
+import inspect
 import itertools
 import math
 import time
@@ -32,8 +33,8 @@ from .cluster import (
     is_feasible,
     violation_fraction,
 )
-from .engine import expected_makespan
-from .workload import Workload
+from .engine import expected_makespan, mean_batch_makespans
+from .workload import Realization, Workload
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +243,194 @@ class ETPResult:
     wall_time_s: float
 
 
+def group_move_candidates(
+    cluster: ClusterSpec,
+    demands: np.ndarray,
+    usage: np.ndarray,
+    y: np.ndarray,
+    move_set: Sequence[int],
+    mu: float,
+) -> List[int]:
+    """M_avail for an MCMC (group) move: machines that can host every task
+    in ``move_set`` under the relaxed ``(1+mu)`` capacity (eq. 22).
+
+    The post-move usage of candidate ``m`` is
+    ``usage[m] + d_move - on_m[m]``: members of the move set that already
+    reside on ``m`` contribute to ``usage[m]``, so their demand must not be
+    counted twice (a group move frequently drags samplers that already sit
+    on the destination).  The primary task's current machine is excluded,
+    matching Alg. 3's "move somewhere else" semantics."""
+    m_old = int(y[move_set[0]])
+    d_move = demands[list(move_set)].sum(axis=0)
+    on_m = np.zeros((cluster.M, demands.shape[1]))
+    for jj in move_set:
+        on_m[int(y[jj])] += demands[jj]
+    return [
+        m
+        for m in range(cluster.M)
+        if m != m_old
+        and np.all(usage[m] + d_move - on_m[m] <= cluster.cap[m] * (1 + mu) + 1e-9)
+    ]
+
+
+class _Chain:
+    """One MCMC chain of Alg. 3, step-decomposed (propose / settle) so that
+    independent chains can advance in lock-step with their candidate
+    placements evaluated in one simulation batch.  ``etp_search`` drives a
+    single chain sequentially; ``etp_multichain`` drives many."""
+
+    def __init__(
+        self,
+        workload: Workload,
+        cluster: ClusterSpec,
+        *,
+        budget: int,
+        mu: float,
+        beta: float | str,
+        sim_iters: int,
+        sim_draws: int,
+        seed: int,
+        init: Optional[Placement],
+        policy: str,
+        cost_fn: Optional[Callable[[Placement], float]],
+        group_moves: float,
+        anneal: bool,
+    ) -> None:
+        self.workload = workload
+        self.cluster = cluster
+        self.budget = budget
+        self.mu = mu
+        self.beta = beta
+        self.sim_iters = sim_iters
+        self.sim_draws = sim_draws
+        self.seed = seed
+        self.init_arg = init
+        self.policy = policy
+        self.cost_fn = cost_fn
+        self.group_moves = group_moves
+        self.anneal = anneal
+
+        self.rng = np.random.default_rng(seed)
+        groups = _group_indices(workload)
+        self.movable = groups[SAMPLER] + groups[WORKER] + groups[PS]
+        self.demands = cluster.demand_matrix(workload.tasks)
+        self.cur = (init or ifs_placement(workload, cluster, seed=seed)).copy()
+        self.cache: Dict[bytes, Tuple[float, float]] = {}
+        self.evals = 0
+        self.hits = 0
+        self.trace: List[float] = []
+        self.best: Optional[Placement] = None
+        self.best_t = math.inf
+        self.usage = np.zeros((cluster.M, cluster.R))
+        np.add.at(self.usage, self.cur.y, self.demands)
+        self.pending: Optional[Tuple[List[int], int, Placement]] = None
+        # The chain's Monte-Carlo draws are a pure function of (seed,
+        # sim_iters): realize once, reuse every evaluation (bit-identical to
+        # re-realizing inside expected_makespan each time).
+        self.reals: List[Realization] = (
+            [
+                workload.realize(seed=seed + 1000 * d, n_iters=sim_iters)
+                for d in range(sim_draws)
+            ]
+            if cost_fn is None
+            else []
+        )
+
+    # -- memoised cost ----------------------------------------------------
+    def lookup(self, p: Placement) -> Optional[Tuple[float, float]]:
+        got = self.cache.get(p.key())
+        if got is not None:
+            self.hits += 1
+        return got
+
+    def store(self, p: Placement, t: float) -> Tuple[float, float]:
+        self.evals += 1
+        c = t * (1.0 + violation_fraction(self.cluster, self.demands, p))
+        self.cache[p.key()] = (t, c)
+        return t, c
+
+    def measure_scalar(self, p: Placement) -> Tuple[float, float]:
+        got = self.lookup(p)
+        if got is not None:
+            return got
+        if self.cost_fn is not None:
+            t = self.cost_fn(p)
+        else:
+            t = expected_makespan(
+                self.workload, self.cluster, p, policy=self.policy,
+                n_iters=self.sim_iters, n_draws=self.sim_draws, seed=self.seed,
+            )
+        return self.store(p, t)
+
+    # -- MCMC steps -------------------------------------------------------
+    def begin(self, cur_tc: Tuple[float, float]) -> None:
+        self.cur_t, self.cur_cost = cur_tc
+        if self.beta == "auto":
+            self.beta = 4.0 / max(0.05 * self.cur_cost, 1e-9)
+        if is_feasible(self.cluster, self.demands, self.cur):
+            self.best = self.cur.copy()
+            self.best_t = self.cur_t
+        self.trace = [self.cur_cost]
+
+    def propose(self, z: int) -> Optional[Placement]:
+        """Draw step ``z``'s move; None when no machine can host it (the
+        step is then a self-loop, already recorded in the trace)."""
+        rng = self.rng
+        self.beta_z = self.beta
+        if self.anneal and self.budget > 1:
+            self.beta_z = (self.beta / 4.0) * (16.0 ** (z / (self.budget - 1)))
+        j = int(rng.choice(self.movable))
+        move_set = [j]
+        if (
+            self.group_moves > 0
+            and j in self.workload.sampler_of_worker
+            and rng.random() < self.group_moves
+        ):
+            move_set = [j] + list(self.workload.sampler_of_worker[j])
+        cand = group_move_candidates(
+            self.cluster, self.demands, self.usage, self.cur.y, move_set, self.mu
+        )
+        if not cand:
+            self.trace.append(self.cur_cost)
+            return None
+        m_new = int(rng.choice(cand))
+        prop = self.cur.copy()
+        for jj in move_set:
+            prop.y[jj] = m_new
+        self.pending = (move_set, m_new, prop)
+        return prop
+
+    def settle(self, prop_t: float, prop_cost: float) -> None:
+        move_set, m_new, prop = self.pending
+        self.pending = None
+        accept_p = min(1.0, math.exp(min(50.0, self.beta_z * (self.cur_cost - prop_cost))))
+        if self.rng.random() <= accept_p:
+            for jj in move_set:
+                self.usage[int(self.cur.y[jj])] -= self.demands[jj]
+                self.usage[m_new] += self.demands[jj]
+            self.cur, self.cur_t, self.cur_cost = prop, prop_t, prop_cost
+            if prop_t < self.best_t and is_feasible(self.cluster, self.demands, prop):
+                self.best, self.best_t = prop.copy(), prop_t
+        self.trace.append(self.cur_cost)
+
+    def result(self, wall_time_s: float) -> ETPResult:
+        best, best_t = self.best, self.best_t
+        if best is None:
+            # fall back to the feasible IFS start (always feasible, Thm. 2)
+            best = self.init_arg or ifs_placement(
+                self.workload, self.cluster, seed=self.seed
+            )
+            best_t, _ = self.measure_scalar(best)
+        return ETPResult(
+            placement=best,
+            cost_trace=self.trace,
+            best_makespan=best_t,
+            evaluations=self.evals,
+            cache_hits=self.hits,
+            wall_time_s=wall_time_s,
+        )
+
+
 def etp_search(
     workload: Workload,
     cluster: ClusterSpec,
@@ -272,7 +461,8 @@ def etp_search(
     ``cost_fn`` may override the simulated-makespan cost (used by tests and
     by the infeed planner); the default is the paper's eq. (21):
     ``T'_Y * (1 + violation%)`` with T'_Y from OES simulation driven by the
-    workload's traffic profile.
+    workload's traffic profile.  With ``sim_draws > 1`` the draws run in one
+    fused ``simulate_batch`` call.
 
     Beyond-paper extensions, both ablatable back to Alg. 3 semantics
     (``group_moves=0, anneal=False, beta=0.1``) and benchmarked in
@@ -284,102 +474,34 @@ def etp_search(
       * ``anneal``: geometric beta ramp from beta/4 to 4*beta over the
         budget (explore -> exploit)."""
     t0 = time.perf_counter()
-    rng = np.random.default_rng(seed)
-    groups = _group_indices(workload)
-    movable = groups[SAMPLER] + groups[WORKER] + groups[PS]
-    demands = cluster.demand_matrix(workload.tasks)
-
-    cur = (init or ifs_placement(workload, cluster, seed=seed)).copy()
-    cache: Dict[bytes, Tuple[float, float]] = {}
-    evals = hits = 0
-
-    def measure(p: Placement) -> Tuple[float, float]:
-        """(makespan T'_Y, cost) with memoisation."""
-        nonlocal evals, hits
-        k = p.key()
-        if k in cache:
-            hits += 1
-            return cache[k]
-        evals += 1
-        if cost_fn is not None:
-            t = cost_fn(p)
-        else:
-            t = expected_makespan(
-                workload, cluster, p, policy=policy, n_iters=sim_iters,
-                n_draws=sim_draws, seed=seed,
-            )
-        c = t * (1.0 + violation_fraction(cluster, demands, p))
-        cache[k] = (t, c)
-        return t, c
-
-    cur_t, cur_cost = measure(cur)
-    if beta == "auto":
-        beta = 4.0 / max(0.05 * cur_cost, 1e-9)
-    best = cur.copy() if is_feasible(cluster, demands, cur) else None
-    best_t = cur_t if best is not None else math.inf
-    trace = [cur_cost]
-
-    usage = np.zeros((cluster.M, cluster.R))
-    np.add.at(usage, cur.y, demands)
-
-    worker_ids = groups[WORKER]
+    chain = _Chain(
+        workload, cluster, budget=budget, mu=mu, beta=beta, sim_iters=sim_iters,
+        sim_draws=sim_draws, seed=seed, init=init, policy=policy, cost_fn=cost_fn,
+        group_moves=group_moves, anneal=anneal,
+    )
+    chain.begin(chain.measure_scalar(chain.cur))
     for z in range(budget):
         if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
             break
-        beta_z = beta
-        if anneal and budget > 1:
-            beta_z = (beta / 4.0) * (16.0 ** (z / (budget - 1)))
-        j = int(rng.choice(movable))
-        move_set = [j]
-        if (
-            group_moves > 0
-            and j in workload.sampler_of_worker
-            and rng.random() < group_moves
-        ):
-            move_set = [j] + list(workload.sampler_of_worker[j])
-        d_move = demands[move_set].sum(axis=0)
-        m_old = int(cur.y[j])
-        # M_avail: other machines that can host the move under (1+mu) capacity
-        freed = np.zeros_like(d_move)
-        for jj in move_set:
-            if int(cur.y[jj]) == m_old:
-                freed += demands[jj]
-        cand = [
-            m
-            for m in range(cluster.M)
-            if m != m_old
-            and np.all(usage[m] + d_move <= cluster.cap[m] * (1 + mu) + 1e-9)
-        ]
-        if not cand:
-            trace.append(cur_cost)
+        prop = chain.propose(z)
+        if prop is None:
             continue
-        m_new = int(rng.choice(cand))
-        prop = cur.copy()
-        for jj in move_set:
-            prop.y[jj] = m_new
-        prop_t, prop_cost = measure(prop)
-        accept_p = min(1.0, math.exp(min(50.0, beta_z * (cur_cost - prop_cost))))
-        if rng.random() <= accept_p:
-            for jj in move_set:
-                usage[int(cur.y[jj])] -= demands[jj]
-                usage[m_new] += demands[jj]
-            cur, cur_t, cur_cost = prop, prop_t, prop_cost
-            if prop_t < best_t and is_feasible(cluster, demands, prop):
-                best, best_t = prop.copy(), prop_t
-        trace.append(cur_cost)
+        prop_t, prop_cost = chain.measure_scalar(prop)
+        chain.settle(prop_t, prop_cost)
+    return chain.result(time.perf_counter() - t0)
 
-    if best is None:
-        # fall back to the feasible IFS start (always feasible by Theorem 2)
-        best = init or ifs_placement(workload, cluster, seed=seed)
-        best_t, _ = measure(best)
-    return ETPResult(
-        placement=best,
-        cost_trace=trace,
-        best_makespan=best_t,
-        evaluations=evals,
-        cache_hits=hits,
-        wall_time_s=time.perf_counter() - t0,
-    )
+
+def _chain_defaults() -> Dict[str, object]:
+    """The _Chain keyword defaults, read off ``etp_search``'s signature so
+    the batched and sequential multichain paths can never drift apart."""
+    sig = inspect.signature(etp_search)
+    return {
+        k: sig.parameters[k].default
+        for k in (
+            "mu", "beta", "sim_iters", "sim_draws", "policy", "cost_fn",
+            "group_moves", "anneal",
+        )
+    }
 
 
 def etp_multichain(
@@ -390,29 +512,116 @@ def etp_multichain(
     budget: int = 2000,
     seed: int = 0,
     include_baseline_inits: bool = True,
+    use_batch: bool = True,
+    batch_cost_fn: Optional[Callable[[Sequence[Placement]], List[float]]] = None,
+    time_budget_s: Optional[float] = None,
     **kw,
 ) -> ETPResult:
     """Beyond-paper: independent MCMC chains from diverse starts (random IFS
     machine orders + the DistDGL colocation heuristic), best-of.  Chains are
-    embarrassingly parallel on a real cluster; here they run sequentially
+    embarrassingly parallel, and with ``use_batch`` (default) they advance in
+    LOCK-STEP: each step, every chain's proposal is evaluated in ONE
+    ``simulate_batch`` call (batch width = pending chains x sim_draws), so
+    placement-evaluations/sec scale with the chain count while per-chain
+    semantics — rng streams, caches, accept rules — stay bit-identical to the
+    sequential path (benchmarks/bench_etp.py measures the speedup).
+
+    ``batch_cost_fn`` (many placements -> makespans) overrides the simulated
+    cost for externally-batched objectives, e.g. multi-job merged workloads
+    (core/multijob.py).  With ``use_batch=False`` chains run sequentially
     with a shared per-chain budget so total simulation work matches a
-    single-chain run of ``budget`` transitions."""
+    single-chain run of ``budget`` transitions; ``time_budget_s`` then
+    applies per chain rather than globally."""
     per = max(1, budget // n_chains)
-    best: Optional[ETPResult] = None
-    for c in range(n_chains):
-        init = None
+
+    def chain_init(c: int) -> Optional[Placement]:
         if include_baseline_inits and c == 1:
             try:
-                init = distdgl_placement(workload, cluster)
+                return distdgl_placement(workload, cluster)
             except ValueError:
-                init = None
-        r = etp_search(
-            workload, cluster, budget=per, seed=seed + 7919 * c, init=init, **kw
+                return None
+        return None
+
+    if not use_batch:
+        seq_kw = dict(kw)
+        if batch_cost_fn is not None and seq_kw.get("cost_fn") is None:
+            seq_kw["cost_fn"] = lambda p: batch_cost_fn([p])[0]
+        best: Optional[ETPResult] = None
+        for c in range(n_chains):
+            r = etp_search(
+                workload, cluster, budget=per, seed=seed + 7919 * c,
+                init=chain_init(c), time_budget_s=time_budget_s, **seq_kw,
+            )
+            if best is None or r.best_makespan < best.best_makespan:
+                best = r
+        assert best is not None
+        return best
+
+    t0 = time.perf_counter()
+    params = _chain_defaults()
+    params.update(kw)
+    explicit_cost_fn = params["cost_fn"]
+    if batch_cost_fn is not None and explicit_cost_fn is None:
+        params["cost_fn"] = lambda p: batch_cost_fn([p])[0]
+    chains = [
+        _Chain(
+            workload, cluster, budget=per, seed=seed + 7919 * c,
+            init=chain_init(c), **params,
         )
-        if best is None or r.best_makespan < best.best_makespan:
-            best = r
-    assert best is not None
-    return best
+        for c in range(n_chains)
+    ]
+
+    def measure_pooled(
+        pairs: List[Tuple[_Chain, Placement]]
+    ) -> List[Tuple[float, float]]:
+        """Memoised cost for many (chain, placement) pairs; all cache
+        misses share one ``simulate_batch`` call (or one ``batch_cost_fn``
+        call)."""
+        out: Dict[int, Tuple[float, float]] = {}
+        need: List[int] = []
+        for i, (ch, p) in enumerate(pairs):
+            got = ch.lookup(p)
+            if got is not None:
+                out[i] = got
+            else:
+                need.append(i)
+        if need:
+            # same objective precedence as the sequential path: an explicit
+            # scalar cost_fn beats batch_cost_fn beats simulation
+            if explicit_cost_fn is not None:
+                ts = [explicit_cost_fn(pairs[i][1]) for i in need]
+            elif batch_cost_fn is not None:
+                ts = batch_cost_fn([pairs[i][1] for i in need])
+            else:
+                ts = mean_batch_makespans(
+                    workload, cluster,
+                    [(pairs[i][1], pairs[i][0].reals) for i in need],
+                    policy=params["policy"],
+                )
+            for i, t in zip(need, ts):
+                ch, p = pairs[i]
+                out[i] = ch.store(p, t)
+        return [out[i] for i in range(len(pairs))]
+
+    for ch, tc in zip(chains, measure_pooled([(ch, ch.cur) for ch in chains])):
+        ch.begin(tc)
+    for z in range(per):
+        if time_budget_s is not None and time.perf_counter() - t0 > time_budget_s:
+            break
+        pending = [(ch, ch.propose(z)) for ch in chains]
+        pending = [(ch, p) for ch, p in pending if p is not None]
+        if not pending:
+            continue
+        for (ch, _), tc in zip(pending, measure_pooled(pending)):
+            ch.settle(*tc)
+    wall = time.perf_counter() - t0
+    best_r: Optional[ETPResult] = None
+    for ch in chains:
+        r = ch.result(wall)
+        if best_r is None or r.best_makespan < best_r.best_makespan:
+            best_r = r
+    assert best_r is not None
+    return best_r
 
 
 def replan_after_failure(

@@ -1,0 +1,123 @@
+"""Regression tests for ETP's group-move capacity accounting.
+
+The seed code's candidate-machine check added the whole move set's demand to
+the destination's usage without subtracting what the set already occupies
+there (its computed ``freed`` array was dead code).  A worker group-move
+whose samplers already live on the destination machine then double-counts
+the samplers' demand and wrongly rejects the very colocation moves
+``group_moves`` exists to make.
+"""
+import numpy as np
+
+from repro.core import (
+    ClusterSpec,
+    Machine,
+    build_gnn_workload,
+    etp_search,
+    group_move_candidates,
+    is_feasible,
+)
+from repro.core.cluster import Placement, placement_usage
+
+
+def two_machine_cluster(cpu=8.0, mem=32.0):
+    return ClusterSpec(
+        machines=[
+            Machine(f"m{i}", {"cpu": cpu, "mem": mem, "gpu": 2.0}, 1.25, 1.25)
+            for i in range(2)
+        ]
+    )
+
+
+def job():
+    # 1 store, 1 worker with 2 samplers, 1 PS
+    return build_gnn_workload(
+        n_stores=1, n_workers=1, samplers_per_worker=2, n_ps=1, n_iters=4,
+        store_to_sampler_gb=1.0, sampler_to_worker_gb=0.5, grad_gb=0.1,
+        store_exec_s=0.2, sampler_exec_s=0.3, worker_exec_s=0.6, ps_exec_s=0.1,
+        pmr=1.0,
+    )
+
+
+def test_group_move_no_double_count_on_destination():
+    """Worker on m0, its two samplers already on m1.  Moving the group to m1
+    must only charge m1 for the WORKER (the samplers already reside there).
+    With the double-count, m1 appears to need 2 extra samplers' demand and
+    fails the (1+mu) test; the fixed accounting admits the move."""
+    wl = job()
+    cluster = two_machine_cluster(cpu=8.0)
+    demands = cluster.demand_matrix(wl.tasks)
+    # tasks: store0, worker0, sampler0.0, sampler0.1, ps0
+    names = wl.task_names()
+    w = names.index("worker0")
+    s0, s1 = names.index("sampler0.0"), names.index("sampler0.1")
+    ps = names.index("ps0")
+    y = np.zeros(wl.J, dtype=np.int64)
+    y[w] = 0
+    y[s0] = y[s1] = 1
+    y[ps] = 0
+    p = Placement(y)
+    usage = placement_usage(cluster, demands, p)
+    move_set = [w] + list(wl.sampler_of_worker[w])
+
+    # mu=0: cpu on m1 = 8, samplers already use 2*2=4, worker adds 1 -> fits.
+    # The buggy check charges 4+1=5 ON TOP of the existing 4 -> 9 > 8 and
+    # rejects m1.
+    cand = group_move_candidates(cluster, demands, usage, y, move_set, mu=0.0)
+    assert cand == [1], cand
+
+    # Sanity: the fix must not admit machines that genuinely lack room.
+    tight = two_machine_cluster(cpu=5.9)  # resident samplers 4 + worker 1 = 5
+    tight_dem = tight.demand_matrix(wl.tasks)
+    tight_usage = placement_usage(tight, tight_dem, p)
+    assert group_move_candidates(tight, tight_dem, tight_usage, y, move_set, 0.0) == [1]
+    # make samplers NOT already resident: then m1 must reject (4+1 > 5.9 - 0)
+    y2 = np.zeros(wl.J, dtype=np.int64)
+    y2[w] = 0
+    y2[s0] = y2[s1] = 0
+    y2[ps] = 1
+    tight2 = two_machine_cluster(cpu=4.9)
+    d2 = tight2.demand_matrix(wl.tasks)
+    u2 = placement_usage(tight2, d2, Placement(y2))
+    # moving worker+samplers (cpu 5) onto m1 which has ps (cpu 1): 6 > 4.9
+    assert group_move_candidates(tight2, d2, u2, y2, [w, s0, s1], 0.0) == []
+
+
+def test_group_move_subtracts_freed_on_origin():
+    """A move set scattered across machines: members on the destination are
+    netted out exactly (the old ``freed`` on m_old is irrelevant to the
+    destination test but members ON the destination are)."""
+    wl = job()
+    cluster = two_machine_cluster(cpu=6.0, mem=64.0)
+    demands = cluster.demand_matrix(wl.tasks)
+    names = wl.task_names()
+    w = names.index("worker0")
+    s0, s1 = names.index("sampler0.0"), names.index("sampler0.1")
+    y = np.zeros(wl.J, dtype=np.int64)
+    y[s0] = 1  # one sampler already at the destination
+    p = Placement(y)
+    usage = placement_usage(cluster, demands, p)
+    # m1 usage: sampler (cpu 2).  Move needs worker(1)+s0(2)+s1(2)=5; net of
+    # the resident s0 it is 3 -> 2+3=5 <= 6 OK.  Double-counted: 2+5=7 > 6.
+    cand = group_move_candidates(cluster, demands, usage, y, [w, s0, s1], mu=0.0)
+    assert cand == [1], cand
+
+
+def test_etp_search_reaches_colocation_through_group_moves():
+    """End to end: starting from worker/sampler separation, ETP with group
+    moves finds a feasible placement at least as good as the split start —
+    the scenario the accounting bug used to block."""
+    wl = job()
+    cluster = two_machine_cluster(cpu=8.0)
+    demands = cluster.demand_matrix(wl.tasks)
+    names = wl.task_names()
+    y = np.zeros(wl.J, dtype=np.int64)
+    y[names.index("sampler0.0")] = 1
+    y[names.index("sampler0.1")] = 1
+    init = Placement(y)
+    res = etp_search(
+        wl, cluster, budget=120, seed=0, init=init, group_moves=1.0,
+        sim_iters=6, mu=0.0,
+    )
+    assert is_feasible(cluster, demands, res.placement)
+    assert res.best_makespan <= res.cost_trace[0] * 1.001

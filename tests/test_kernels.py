@@ -13,6 +13,9 @@ from repro.kernels.ref import (
 )
 from repro.kernels.ssd_scan import ssd_scan
 
+# multi-minute Pallas interpret-mode sweep: excluded from tier-1 (-m slow)
+pytestmark = pytest.mark.slow
+
 
 def rand(key, shape, dtype):
     x = jax.random.normal(jax.random.key(key), shape, jnp.float32)

@@ -15,6 +15,9 @@ from repro.sharding import single_device_ctx
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_loop import TrainStepBuilder
 
+# multi-minute JAX compile+run sweep: excluded from tier-1, run with -m slow
+pytestmark = pytest.mark.slow
+
 CTX = single_device_ctx()
 
 

@@ -8,7 +8,12 @@ from repro.core import (
     max_degree,
     simulate,
 )
-from repro.core.multijob import merge_workloads, per_job_makespans, realize_merged
+from repro.core.multijob import (
+    joint_search,
+    merge_workloads,
+    per_job_makespans,
+    realize_merged,
+)
 from repro.core.profiles import OGBN_PRODUCTS, REDDIT, build_workload_from_profile
 
 
@@ -60,3 +65,23 @@ def test_joint_search_improves_fairly():
     )
     tuned = simulate(mj.workload, cluster, res.placement, r, policy="oes").makespan
     assert tuned <= base * 1.001
+
+
+def test_joint_search_batched_path():
+    """joint_search: lock-step multi-chain ETP over the merged job with the
+    batched merged-realization cost — never worse than the IFS start."""
+    j1, j2 = two_jobs()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    mj, res = joint_search(
+        [j1, j2], cluster, n_chains=2, budget=60, n_draws=1, seed=0
+    )
+    r = realize_merged(mj, [j1, j2], seed=0)
+    p0 = ifs_placement(mj.workload, cluster, seed=0)
+    base = simulate(mj.workload, cluster, p0, r, policy="oes").makespan
+    tuned = simulate(mj.workload, cluster, res.placement, r, policy="oes").makespan
+    spans = per_job_makespans(
+        mj, simulate(mj.workload, cluster, res.placement, r, policy="oes", record=True)
+    )
+    assert len(spans) == 2 and all(np.isfinite(s) and s > 0 for s in spans)
+    assert np.isfinite(res.best_makespan)
+    assert tuned <= base * 1.05  # joint objective averages draws; allow slack

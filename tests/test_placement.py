@@ -1,6 +1,8 @@
 """IFS / ETP / DistDGL placement tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -12,8 +14,8 @@ from repro.core import (
     is_feasible,
     replan_after_failure,
     simulate,
-    testbed_cluster,
 )
+from repro.core.cluster import testbed_cluster as _testbed_cluster
 from repro.core.placement import etp_multichain
 from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
 
@@ -27,7 +29,7 @@ def paper_job(n_iters=20):
 
 def test_ifs_feasible_on_testbed():
     wl = paper_job()
-    cluster = testbed_cluster()
+    cluster = _testbed_cluster()
     p = ifs_placement(wl, cluster, seed=0)
     demands = cluster.demand_matrix(wl.tasks)
     assert is_feasible(cluster, demands, p)
@@ -60,7 +62,7 @@ def test_ifs_raises_when_infeasible():
 
 def test_distdgl_colocates_when_possible():
     wl = paper_job()
-    cluster = testbed_cluster()
+    cluster = _testbed_cluster()
     p = distdgl_placement(wl, cluster)
     demands = cluster.demand_matrix(wl.tasks)
     assert is_feasible(cluster, demands, p)
@@ -73,7 +75,7 @@ def test_distdgl_colocates_when_possible():
 
 def test_etp_improves_over_ifs():
     wl = paper_job()
-    cluster = testbed_cluster()
+    cluster = _testbed_cluster()
     r = wl.realize(seed=0)
     p0 = ifs_placement(wl, cluster, seed=0)
     base = simulate(wl, cluster, p0, r, policy="oes").makespan
@@ -87,7 +89,7 @@ def test_etp_improves_over_ifs():
 def test_etp_paper_faithful_mode_runs():
     """Alg. 3 exactly: single moves, fixed beta=0.1, no annealing."""
     wl = paper_job(n_iters=10)
-    cluster = testbed_cluster()
+    cluster = _testbed_cluster()
     res = etp_search(
         wl, cluster, budget=60, beta=0.1, group_moves=0.0, anneal=False, seed=1
     )
@@ -97,7 +99,7 @@ def test_etp_paper_faithful_mode_runs():
 
 def test_etp_multichain_best_of():
     wl = paper_job(n_iters=10)
-    cluster = testbed_cluster()
+    cluster = _testbed_cluster()
     res = etp_multichain(wl, cluster, n_chains=2, budget=80, sim_iters=10, seed=0)
     assert np.isfinite(res.best_makespan)
 

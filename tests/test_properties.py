@@ -8,6 +8,9 @@ For random jobs, clusters and placements:
   P4  makespan is monotone: more bandwidth never hurts OES.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import (
