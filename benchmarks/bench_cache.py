@@ -1,0 +1,164 @@
+"""Feature-cache sweeps: cache size x policy x dataset profile -> makespan.
+
+What the cache tier buys, measured through the full planning stack:
+
+  * ``size_policy_sweep`` — fixed placement, growing per-machine cache
+    budget: g2s volumes shrink by the trace-replayed hit rates and the OES
+    makespan falls monotonically with cache size (emitted per profile x
+    policy, with a monotonicity verdict in the derived column);
+  * ``aware_vs_oblivious`` — same search budget, two objectives: the
+    cache-aware ETP (repro.cache.planner) finds a placement that beats the
+    cache-oblivious winner when both are judged under their own
+    cache-adjusted traffic — placement and caching interact, which is the
+    subsystem's reason to exist;
+  * ``estimator_agreement`` — trace-replayed static hit rate vs the
+    closed-form hotness estimator (the thing capacity sweeps use to avoid
+    re-replaying per point).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only cache``
+or   ``PYTHONPATH=src python -m benchmarks.bench_cache``
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Timer, emit  # noqa: F401 (inserts src/ into sys.path)
+
+from repro.cache import (
+    CacheConfig,
+    build_hit_model,
+    cache_adjusted_realization,
+    cache_aware_etp,
+    cache_cost_fns,
+    cache_gb_for_capacity,
+    collect_profile_trace,
+    hit_model_for_profile,
+    replay,
+    samplers_per_machine,
+    static_hit_rate_estimate,
+)
+from repro.core import simulate, testbed_cluster
+from repro.core.placement import etp_multichain, ifs_placement
+from repro.core.profiles import OGBN_PRODUCTS, REDDIT, build_workload_from_profile
+
+N_SAMPLERS = 12  # 6 workers x 2 samplers, the paper's testbed job
+SIZE_FRACS = (0.0, 0.05, 0.1, 0.25, 0.5)  # of the dataset's feature bytes
+POLICIES = ("static", "lru", "prefetch")
+
+
+def job(profile, n_iters=20):
+    return build_workload_from_profile(
+        profile, n_stores=4, n_workers=6, samplers_per_worker=2,
+        n_ps=1, n_iters=n_iters,
+    )
+
+
+def feature_gb(profile) -> float:
+    return profile.n_nodes * profile.feature_len * 4 / 2**30
+
+
+def size_policy_sweep(profile, n_iters=20, seed=0):
+    wl = job(profile, n_iters)
+    cluster = testbed_cluster()
+    placement = ifs_placement(wl, cluster, seed=seed)
+    r = wl.realize(seed=seed)
+    base = simulate(wl, cluster, placement, r, policy="oes").makespan
+    with Timer() as t_trace:
+        trace = collect_profile_trace(
+            profile, n_samplers=N_SAMPLERS, n_iters=n_iters, seed=seed
+        )
+    emit(
+        f"cache_trace_{profile.name}", t_trace.us,
+        f"samplers={N_SAMPLERS} iters={n_iters} "
+        f"mean_set={np.mean([len(a) for s in trace.accesses for a in s]):.0f}",
+    )
+    total_gb = feature_gb(profile)
+    for policy in POLICIES:
+        makespans = []
+        for frac in SIZE_FRACS:
+            gb = frac * total_gb
+            model = hit_model_for_profile(
+                profile, cache_gb=gb, policy=policy,
+                n_samplers=N_SAMPLERS, n_iters=n_iters, trace=trace,
+            )
+            adj = cache_adjusted_realization(wl, cluster, placement, r, model)
+            mk = simulate(wl, cluster, placement, adj, policy="oes").makespan
+            makespans.append(mk)
+            emit(
+                f"cache_sweep_{profile.name}_{policy}_{int(100 * frac)}pct",
+                0.0,
+                f"gb={gb:.3f} mean_hit={model.mean_hit_rate(2):.3f} "
+                f"makespan={mk:.2f}s vs_uncached={mk / base:.3f}",
+            )
+        mono = all(b <= a * (1 + 1e-9) for a, b in zip(makespans, makespans[1:]))
+        emit(
+            f"cache_monotone_{profile.name}_{policy}", 0.0,
+            f"monotone_decreasing={'y' if mono else 'N'} "
+            f"span={makespans[0]:.2f}s->{makespans[-1]:.2f}s",
+        )
+
+
+def estimator_agreement(profile, seed=0):
+    trace = collect_profile_trace(
+        profile, n_samplers=4, n_iters=16, seed=seed
+    )
+    worst = 0.0
+    for frac in (0.05, 0.1, 0.25, 0.5):
+        cap = int(frac * trace.n_nodes)
+        measured = float(replay(trace, "static", cap, k=1).mean())
+        closed = static_hit_rate_estimate(trace, cap)
+        worst = max(worst, abs(measured - closed))
+    emit(
+        f"cache_estimator_{profile.name}", 0.0,
+        f"max_abs_err={worst:.4f} (trace replay vs closed form)",
+    )
+
+
+def aware_vs_oblivious(profile, seed=0, budget=480, n_iters=15):
+    """Same budget, two objectives; judged under cache-adjusted traffic."""
+    wl = job(profile, n_iters)
+    cluster = testbed_cluster()
+    trace = collect_profile_trace(
+        profile, n_samplers=N_SAMPLERS, n_iters=n_iters, seed=seed
+    )
+    model = build_hit_model(
+        trace, policy="lru", capacity_nodes=int(0.3 * trace.n_nodes)
+    )
+    # reserve exactly the memory the hit model assumes is resident
+    cfg = CacheConfig(
+        policy="lru",
+        cache_gb=cache_gb_for_capacity(
+            model.capacity_nodes, bytes_per_node=trace.bytes_per_node,
+            real_nodes=profile.n_nodes, proxy_nodes=trace.n_nodes,
+        ),
+    )
+    kw = dict(n_chains=8, budget=budget, sim_iters=12, seed=seed)
+    with Timer() as t_obl:
+        obl = etp_multichain(wl, cluster, **kw)
+    with Timer() as t_awr:
+        awr = cache_aware_etp(wl, cluster, model, cfg, sim_draws=1, **kw)
+    _, batch_cost, _ = cache_cost_fns(
+        wl, cluster, model, sim_iters=12, sim_draws=3, seed=seed + 123
+    )
+    mk_obl, mk_awr = batch_cost([obl.placement, awr.placement])
+    differs = not np.array_equal(obl.placement.y, awr.placement.y)
+    emit(
+        f"cache_aware_etp_{profile.name}", t_awr.us,
+        f"oblivious={mk_obl:.3f}s aware={mk_awr:.3f}s "
+        f"gain={100 * (1 - mk_awr / mk_obl):.1f}% differs={'y' if differs else 'N'} "
+        f"samplers/machine {samplers_per_machine(wl, cluster, obl.placement).tolist()}"
+        f"->{samplers_per_machine(wl, cluster, awr.placement).tolist()} "
+        f"(search {t_obl.dt:.1f}s vs {t_awr.dt:.1f}s)",
+    )
+
+
+def main():
+    for profile in (OGBN_PRODUCTS, REDDIT):
+        size_policy_sweep(profile)
+        estimator_agreement(profile)
+    aware_vs_oblivious(OGBN_PRODUCTS)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

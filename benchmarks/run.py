@@ -8,6 +8,8 @@ benches).  Prints ``name,us_per_call,derived`` CSV rows.
   fig7/9          papers100M 16-machine sim: batch-size + PMR sweeps
   competitive     Theorem-1 empirical certificate table
   etp_*           ETP ablation (paper-faithful vs enhanced) + 5-min claim
+  etp             batched-vs-scalar planning-loop throughput (bench_etp)
+  cache           feature-cache sweeps + cache-aware ETP (bench_cache)
   engine_*        event-engine throughput
   attn/ssd/flash  kernel-layer benches (XLA mirrors + interpret allclose)
   roofline_*      summary rows from the dry-run roofline table
@@ -20,7 +22,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from . import bench_algorithms, bench_figures, bench_kernels
+from . import bench_algorithms, bench_cache, bench_etp, bench_figures, bench_kernels
 from .common import emit
 
 
@@ -56,12 +58,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default=None,
-        choices=[None, "figures", "algorithms", "kernels", "roofline"],
+        choices=[None, "figures", "algorithms", "kernels", "roofline", "etp", "cache"],
     )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.only in (None, "algorithms"):
         bench_algorithms.main()
+    if args.only in (None, "etp"):
+        bench_etp.main()
+    if args.only in (None, "cache"):
+        bench_cache.main()
     if args.only in (None, "kernels"):
         bench_kernels.main()
     if args.only in (None, "roofline"):

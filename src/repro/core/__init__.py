@@ -33,6 +33,7 @@ from .engine import (
     expected_makespan,
     expected_makespan_many,
     mean_batch_makespans,
+    monte_carlo_draws,
     simulate,
     simulate_batch,
 )

@@ -859,6 +859,21 @@ def simulate_batch(
     ]
 
 
+def monte_carlo_draws(
+    workload: Workload, *, seed: int, n_iters: int, n_draws: int
+) -> List[Realization]:
+    """The canonical Monte-Carlo draw set for cost estimation: draw ``d``
+    realizes at ``seed + 1000 * d``.  Every consumer of 'the draws for
+    (seed, n_iters)' — expected_makespan(_many), ETP chains, the
+    cache-aware objective — MUST build them here so independently-built
+    draw sets for one seed are identical (apples-to-apples comparisons
+    depend on it)."""
+    return [
+        workload.realize(seed=seed + 1000 * d, n_iters=n_iters)
+        for d in range(n_draws)
+    ]
+
+
 def expected_makespan(
     workload: Workload,
     cluster: ClusterSpec,
@@ -876,10 +891,9 @@ def expected_makespan(
     one fused ``simulate_batch`` call — bit-identical result, one event loop."""
     if batch is None:
         batch = n_draws > 1
-    reals = [
-        workload.realize(seed=seed + 1000 * d, n_iters=n_iters)
-        for d in range(n_draws)
-    ]
+    reals = monte_carlo_draws(
+        workload, seed=seed, n_iters=n_iters, n_draws=n_draws
+    )
     if batch:
         results = simulate_batch(
             workload, cluster, [placement] * n_draws, reals, policy=policy
@@ -942,10 +956,9 @@ def expected_makespan_many(
     chains use distinct seeds.)"""
     if len(placements) == 0:
         return []
-    reals = [
-        workload.realize(seed=seed + 1000 * d, n_iters=n_iters)
-        for d in range(n_draws)
-    ]
+    reals = monte_carlo_draws(
+        workload, seed=seed, n_iters=n_iters, n_draws=n_draws
+    )
     return mean_batch_makespans(
         workload, cluster, [(p, reals) for p in placements], policy=policy
     )

@@ -33,7 +33,7 @@ from .cluster import (
     is_feasible,
     violation_fraction,
 )
-from .engine import expected_makespan, mean_batch_makespans
+from .engine import expected_makespan, mean_batch_makespans, monte_carlo_draws
 from .workload import Realization, Workload
 
 
@@ -241,6 +241,11 @@ class ETPResult:
     evaluations: int
     cache_hits: int
     wall_time_s: float
+    # True when the returned placement could not be certified feasible
+    # (search found nothing and even the IFS fallback fails an active
+    # check, e.g. a cache reservation); multi-chain best-of deprioritises
+    # such results
+    fallback: bool = False
 
 
 def group_move_candidates(
@@ -295,6 +300,7 @@ class _Chain:
         cost_fn: Optional[Callable[[Placement], float]],
         group_moves: float,
         anneal: bool,
+        extra_violation: Optional[Callable[[Placement], float]] = None,
     ) -> None:
         self.workload = workload
         self.cluster = cluster
@@ -309,6 +315,7 @@ class _Chain:
         self.cost_fn = cost_fn
         self.group_moves = group_moves
         self.anneal = anneal
+        self.extra_violation = extra_violation
 
         self.rng = np.random.default_rng(seed)
         groups = _group_indices(workload)
@@ -328,10 +335,9 @@ class _Chain:
         # sim_iters): realize once, reuse every evaluation (bit-identical to
         # re-realizing inside expected_makespan each time).
         self.reals: List[Realization] = (
-            [
-                workload.realize(seed=seed + 1000 * d, n_iters=sim_iters)
-                for d in range(sim_draws)
-            ]
+            monte_carlo_draws(
+                workload, seed=seed, n_iters=sim_iters, n_draws=sim_draws
+            )
             if cost_fn is None
             else []
         )
@@ -345,7 +351,10 @@ class _Chain:
 
     def store(self, p: Placement, t: float) -> Tuple[float, float]:
         self.evals += 1
-        c = t * (1.0 + violation_fraction(self.cluster, self.demands, p))
+        v = violation_fraction(self.cluster, self.demands, p)
+        if self.extra_violation is not None:
+            v += self.extra_violation(p)
+        c = t * (1.0 + v)
         self.cache[p.key()] = (t, c)
         return t, c
 
@@ -362,12 +371,21 @@ class _Chain:
             )
         return self.store(p, t)
 
+    def feasible(self, p: Placement) -> bool:
+        """Capacity feasibility for best-placement gating: base demands AND
+        (when the hook is set) a clean extra-violation bill — a candidate
+        whose cache reservation overflows memory must not win best-of even
+        if its raw makespan is lowest."""
+        if not is_feasible(self.cluster, self.demands, p):
+            return False
+        return self.extra_violation is None or self.extra_violation(p) <= 1e-12
+
     # -- MCMC steps -------------------------------------------------------
     def begin(self, cur_tc: Tuple[float, float]) -> None:
         self.cur_t, self.cur_cost = cur_tc
         if self.beta == "auto":
             self.beta = 4.0 / max(0.05 * self.cur_cost, 1e-9)
-        if is_feasible(self.cluster, self.demands, self.cur):
+        if self.feasible(self.cur):
             self.best = self.cur.copy()
             self.best_t = self.cur_t
         self.trace = [self.cur_cost]
@@ -403,24 +421,40 @@ class _Chain:
     def settle(self, prop_t: float, prop_cost: float) -> None:
         move_set, m_new, prop = self.pending
         self.pending = None
+        # best-placement bookkeeping is independent of acceptance: the
+        # candidate is already measured, so a feasible improvement counts
+        # even when Metropolis rejects the move (the paper's Alg. 3 only
+        # recorded accepted states, discarding evaluated optima for free)
+        if prop_t < self.best_t and self.feasible(prop):
+            self.best, self.best_t = prop.copy(), prop_t
         accept_p = min(1.0, math.exp(min(50.0, self.beta_z * (self.cur_cost - prop_cost))))
         if self.rng.random() <= accept_p:
             for jj in move_set:
                 self.usage[int(self.cur.y[jj])] -= self.demands[jj]
                 self.usage[m_new] += self.demands[jj]
             self.cur, self.cur_t, self.cur_cost = prop, prop_t, prop_cost
-            if prop_t < self.best_t and is_feasible(self.cluster, self.demands, prop):
-                self.best, self.best_t = prop.copy(), prop_t
         self.trace.append(self.cur_cost)
 
     def result(self, wall_time_s: float) -> ETPResult:
         best, best_t = self.best, self.best_t
-        if best is None:
-            # fall back to the feasible IFS start (always feasible, Thm. 2)
-            best = self.init_arg or ifs_placement(
-                self.workload, self.cluster, seed=self.seed
-            )
+        fallback = best is None
+        if fallback:
+            # fall back to the feasible IFS start (always feasible, Thm. 2).
+            # A warm-start init (DistDGL, replan) carries no feasibility
+            # guarantee, so it is only used if it happens to be feasible —
+            # or as the very last resort when IFS itself cannot place the
+            # job (replanning on an overloaded shrunken cluster).
+            best = self.init_arg
+            if best is None or not self.feasible(best):
+                try:
+                    best = ifs_placement(self.workload, self.cluster, seed=self.seed)
+                except ValueError:
+                    best = self.init_arg  # not None: __init__'s IFS succeeded
             best_t, _ = self.measure_scalar(best)
+            # a fallback that passes every active feasibility check is a
+            # legitimate result and competes on makespan in _best_of; the
+            # flag only marks placements returned WITHOUT that guarantee
+            fallback = not self.feasible(best)
         return ETPResult(
             placement=best,
             cost_trace=self.trace,
@@ -428,6 +462,7 @@ class _Chain:
             evaluations=self.evals,
             cache_hits=self.hits,
             wall_time_s=wall_time_s,
+            fallback=fallback,
         )
 
 
@@ -447,6 +482,7 @@ def etp_search(
     time_budget_s: Optional[float] = None,
     group_moves: float = 0.35,
     anneal: bool = True,
+    extra_violation: Optional[Callable[[Placement], float]] = None,
 ) -> ETPResult:
     """MCMC search (Alg. 3). ``budget`` = I transitions; ``mu`` = relaxed
     capacity factor (eq. 22); ``beta`` = temperature (eq. 23).
@@ -472,12 +508,17 @@ def etp_search(
         colocation basins that IFS starts in without crossing high-cost
         valleys;
       * ``anneal``: geometric beta ramp from beta/4 to 4*beta over the
-        budget (explore -> exploit)."""
+        budget (explore -> exploit).
+
+    ``extra_violation`` (placement -> fraction) extends eq. 21's capacity
+    penalty with costs the demand matrix cannot express — e.g. the feature
+    cache's per-machine memory reservation (repro.cache.planner), which
+    depends on WHERE samplers land, not just how many there are."""
     t0 = time.perf_counter()
     chain = _Chain(
         workload, cluster, budget=budget, mu=mu, beta=beta, sim_iters=sim_iters,
         sim_draws=sim_draws, seed=seed, init=init, policy=policy, cost_fn=cost_fn,
-        group_moves=group_moves, anneal=anneal,
+        group_moves=group_moves, anneal=anneal, extra_violation=extra_violation,
     )
     chain.begin(chain.measure_scalar(chain.cur))
     for z in range(budget):
@@ -491,6 +532,17 @@ def etp_search(
     return chain.result(time.perf_counter() - t0)
 
 
+def _best_of(a: Optional[ETPResult], b: ETPResult) -> ETPResult:
+    """Best-of for multi-chain search: a certified-feasible placement
+    always beats an uncertified fallback (one that fails an active check,
+    e.g. a cache reservation); ties on that status resolve by makespan."""
+    if a is None:
+        return b
+    if a.fallback != b.fallback:
+        return b if a.fallback else a
+    return b if b.best_makespan < a.best_makespan else a
+
+
 def _chain_defaults() -> Dict[str, object]:
     """The _Chain keyword defaults, read off ``etp_search``'s signature so
     the batched and sequential multichain paths can never drift apart."""
@@ -499,7 +551,7 @@ def _chain_defaults() -> Dict[str, object]:
         k: sig.parameters[k].default
         for k in (
             "mu", "beta", "sim_iters", "sim_draws", "policy", "cost_fn",
-            "group_moves", "anneal",
+            "group_moves", "anneal", "extra_violation",
         )
     }
 
@@ -552,8 +604,7 @@ def etp_multichain(
                 workload, cluster, budget=per, seed=seed + 7919 * c,
                 init=chain_init(c), time_budget_s=time_budget_s, **seq_kw,
             )
-            if best is None or r.best_makespan < best.best_makespan:
-                best = r
+            best = _best_of(best, r)
         assert best is not None
         return best
 
@@ -617,9 +668,7 @@ def etp_multichain(
     wall = time.perf_counter() - t0
     best_r: Optional[ETPResult] = None
     for ch in chains:
-        r = ch.result(wall)
-        if best_r is None or r.best_makespan < best_r.best_makespan:
-            best_r = r
+        best_r = _best_of(best_r, ch.result(wall))
     assert best_r is not None
     return best_r
 

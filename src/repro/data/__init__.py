@@ -1,4 +1,10 @@
-from .graph import PartitionedGraph, sample_blocks, synthetic_graph
+from .graph import PartitionedGraph, sample_blocks, sample_support, synthetic_graph
 from .pipeline import TokenPipeline
 
-__all__ = ["PartitionedGraph", "sample_blocks", "synthetic_graph", "TokenPipeline"]
+__all__ = [
+    "PartitionedGraph",
+    "sample_blocks",
+    "sample_support",
+    "synthetic_graph",
+    "TokenPipeline",
+]

@@ -71,17 +71,20 @@ def synthetic_graph(
     )
 
 
-def sample_blocks(
+def sample_support(
     g: PartitionedGraph,
     seeds: np.ndarray,
     fanouts: Sequence[int],
     rng: np.random.Generator,
-) -> Tuple[np.ndarray, List[np.ndarray], np.ndarray, Dict[int, int]]:
-    """Fixed-fanout recursive sampling (paper §II-A).
+) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+    """Layer expansion of fixed-fanout recursive sampling (paper §II-A).
 
-    Returns (feats [n_L, F], blocks [idx per layer, seed-first layout],
-    labels [n_seeds], per_store_bytes {store: bytes fetched}).
-    blocks[l] maps layer-l target nodes to positions in layer-(l+1) nodes.
+    Returns (layers, blocks): ``layers[l]`` are the unique node ids of layer
+    ``l`` (seed-first layout, ``layers[-1]`` is the full support set whose
+    features must be fetched), ``blocks[l]`` maps layer-l target nodes to
+    positions in layer-(l+1) nodes.  ``sample_blocks`` materialises features
+    on top of this; the cache layer (repro.cache) replays it alone to trace
+    which node features each sampler touches per iteration.
     """
     layers = [seeds.astype(np.int64)]
     blocks: List[np.ndarray] = []
@@ -103,6 +106,22 @@ def sample_blocks(
                 idx[i, j] = uniq[u]
         layers.append(np.asarray(nodes, dtype=np.int64))
         blocks.append(idx)
+    return layers, blocks
+
+
+def sample_blocks(
+    g: PartitionedGraph,
+    seeds: np.ndarray,
+    fanouts: Sequence[int],
+    rng: np.random.Generator,
+) -> Tuple[np.ndarray, List[np.ndarray], np.ndarray, Dict[int, int]]:
+    """Fixed-fanout recursive sampling (paper §II-A).
+
+    Returns (feats [n_L, F], blocks [idx per layer, seed-first layout],
+    labels [n_seeds], per_store_bytes {store: bytes fetched}).
+    blocks[l] maps layer-l target nodes to positions in layer-(l+1) nodes.
+    """
+    layers, blocks = sample_support(g, seeds, fanouts, rng)
     support = layers[-1]
     feats = g.feats[support]
     labels = g.labels[seeds]

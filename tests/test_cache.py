@@ -1,0 +1,272 @@
+"""Feature-cache subsystem: deterministic behaviour tests.
+
+Covers the acceptance chain end to end at test scale: trace collection from
+the real sampler, policy replays (monotone in capacity; closed form agrees
+with the trace), placement-dependent volume rewriting (bounded by the
+uncached volumes), and the cache-aware ETP search picking a different —
+and better under cache-adjusted simulation — placement than the
+cache-oblivious search on a skewed testbed job.
+"""
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.cache import (
+    CacheConfig,
+    build_hit_model,
+    cache_adjusted_realization,
+    cache_aware_etp,
+    cache_aware_plan,
+    cache_cost_fns,
+    cache_reservation_violation,
+    collect_trace,
+    g2s_edge_ids,
+    replay,
+    samplers_per_machine,
+    static_hit_rate_estimate,
+)
+from repro.core import ifs_placement
+from repro.core.cluster import testbed_cluster as _testbed_cluster
+from repro.core.dgtp import plan
+from repro.core.placement import etp_multichain
+from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
+from repro.core.workload import build_gnn_workload
+from repro.data.graph import synthetic_graph
+
+CAPACITIES = (0, 50, 200, 800, 2000)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    g = synthetic_graph(n_nodes=2000, avg_degree=12, n_feats=16, n_parts=4, seed=0)
+    return collect_trace(
+        g, n_samplers=8, seeds_per_iter=16, fanouts=(4, 4), n_iters=12, seed=0
+    )
+
+
+@pytest.fixture(scope="module")
+def paper_job():
+    return build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=6, samplers_per_worker=2,
+        n_ps=1, n_iters=12,
+    )
+
+
+def test_trace_replays_sampler(trace):
+    assert trace.n_samplers == 8 and trace.n_iters == 12
+    for s in range(trace.n_samplers):
+        for arr in trace.accesses[s]:
+            assert len(arr) == len(np.unique(arr))  # support sets deduped
+            assert arr.min() >= 0 and arr.max() < trace.n_nodes
+    # cross-iteration reuse exists (the premise of the whole subsystem)
+    a, b = trace.accesses[0][0], trace.accesses[0][1]
+    assert len(np.intersect1d(a, b)) > 0
+
+
+@pytest.mark.parametrize("policy", ["static", "lru", "prefetch"])
+def test_hit_rate_monotone_in_capacity(trace, policy):
+    prev = None
+    for cap in CAPACITIES:
+        h = replay(trace, policy, cap, k=2)
+        assert h.shape == (trace.n_iters,)
+        assert np.all(h >= 0.0) and np.all(h <= 1.0)
+        if prev is not None:
+            assert np.all(h >= prev - 1e-12)  # per-iteration, not just mean
+        prev = h
+    # the full graph cached => static serves everything
+    assert replay(trace, "static", trace.n_nodes, k=2).min() == 1.0
+
+
+def test_static_closed_form_matches_trace(trace):
+    for cap in (100, 500, 1000):
+        for k in (1, 2, 4):
+            measured = float(replay(trace, "static", cap, k).mean())
+            predicted = static_hit_rate_estimate(trace, cap, k)
+            assert abs(measured - predicted) < 0.05, (cap, k, measured, predicted)
+
+
+def test_lru_shared_cache_compounds(trace):
+    """Colocated samplers compound: at generous capacity the shared LRU's
+    hit rate grows with the sharing degree (cross-sampler reuse)."""
+    solo = replay(trace, "lru", 1200, k=1).mean()
+    shared = replay(trace, "lru", 1200, k=4).mean()
+    assert shared >= solo
+
+
+def test_prefetch_cold_start(trace):
+    h = replay(trace, "prefetch", 10**6, k=1)
+    assert h[0] == 0.0  # nothing to prefetch behind iteration 1
+    assert np.all(h[1:] == 1.0)  # unbounded buffer covers everything after
+
+
+def test_adjusted_volumes_bounded_and_targeted(trace, paper_job):
+    wl = paper_job
+    cluster = _testbed_cluster()
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    model = build_hit_model(trace, policy="lru", capacity_nodes=800)
+    adj = cache_adjusted_realization(wl, cluster, p, r, model)
+    assert np.all(adj.volumes <= r.volumes + 1e-12)
+    assert np.sum(adj.volumes) < np.sum(r.volumes)  # some traffic removed
+    g2s = g2s_edge_ids(wl)
+    others = np.setdiff1d(np.arange(wl.E), g2s)
+    np.testing.assert_array_equal(adj.volumes[others], r.volumes[others])
+    np.testing.assert_array_equal(adj.exec_times, r.exec_times)
+    # zero-capacity cache is a no-op
+    noop = cache_adjusted_realization(
+        wl, cluster, p, r, build_hit_model(trace, policy="lru", capacity_nodes=0)
+    )
+    np.testing.assert_array_equal(noop.volumes, r.volumes)
+
+
+def test_adjustment_depends_on_placement(trace, paper_job):
+    """The same realization rewrites differently under different sampler
+    groupings — the property that makes placement cache-aware at all."""
+    wl = paper_job
+    cluster = _testbed_cluster()
+    r = wl.realize(seed=0)
+    model = build_hit_model(trace, policy="lru", capacity_nodes=800)
+    spread = ifs_placement(wl, cluster, seed=0)
+    stacked = spread.copy()
+    sampler_js = [j for j, t in enumerate(wl.tasks) if t.kind == "sampler"]
+    stacked.y[sampler_js] = 0  # all samplers share machine 0's cache
+    a = cache_adjusted_realization(wl, cluster, spread, r, model)
+    b = cache_adjusted_realization(wl, cluster, stacked, r, model)
+    assert not np.allclose(a.volumes, b.volumes)
+    assert samplers_per_machine(wl, cluster, stacked).max() == len(sampler_js)
+
+
+def test_capacity_gb_bridge_round_trips():
+    from repro.cache import cache_gb_for_capacity, capacity_nodes_for_gb
+
+    kw = dict(bytes_per_node=400, real_nodes=2.4e6, proxy_nodes=6000)
+    for gb in (0.05, 0.2, 0.5):
+        cap = capacity_nodes_for_gb(gb, **kw)
+        back = cache_gb_for_capacity(cap, **kw)
+        assert abs(back - gb) / gb < 0.01, (gb, cap, back)
+    # non-proxy form: nodes x bytes, straight conversion
+    assert cache_gb_for_capacity(2**30 // 400, bytes_per_node=400) == pytest.approx(
+        1.0, rel=1e-6
+    )
+
+
+def test_hit_model_extends_past_trace_horizon(trace):
+    model = build_hit_model(trace, policy="lru", capacity_nodes=800)
+    h = model.hit_rates(2, 40)
+    assert h.shape == (40,)
+    assert np.all((h >= 0) & (h <= 1))
+    np.testing.assert_array_equal(h[: trace.n_iters], model.hit_rates(2, trace.n_iters))
+    assert np.all(h[trace.n_iters :] == h[trace.n_iters])  # steady-state tail
+
+
+def test_cache_reservation_violation(paper_job):
+    wl = paper_job
+    cluster = _testbed_cluster()
+    p = ifs_placement(wl, cluster, seed=0)
+    off = CacheConfig(policy="lru", cache_gb=8.0, reserve_mem=False)
+    assert cache_reservation_violation(wl, cluster, off, p) == 0.0
+    small = CacheConfig(policy="lru", cache_gb=1.0)
+    big = CacheConfig(policy="lru", cache_gb=64.0)
+    v_small = cache_reservation_violation(wl, cluster, small, p)
+    v_big = cache_reservation_violation(wl, cluster, big, p)
+    assert 0.0 <= v_small <= v_big
+    assert v_big > 0.0  # 64 GB cache cannot fit beside tasks on 48 GB machines
+
+
+def skewed_job():
+    """g2s-dominated job with 70% of graph volume on slow-NIC machine 2 —
+    the regime where cache-aware and cache-oblivious optima split."""
+    return build_gnn_workload(
+        n_stores=4, n_workers=4, samplers_per_worker=2, n_ps=1, n_iters=10,
+        store_to_sampler_gb=0.8, sampler_to_worker_gb=0.05, grad_gb=0.01,
+        store_exec_s=0.02, sampler_exec_s=0.04, worker_exec_s=0.06,
+        ps_exec_s=0.01, store_skew=[0.1, 0.1, 0.7, 0.1],
+    )
+
+
+def test_cache_aware_etp_beats_oblivious_under_cache(trace):
+    """Acceptance: same search budget, the cache-aware objective finds a
+    DIFFERENT placement that is BETTER once caches are accounted for.
+
+    Prefetch buffers are per machine, so stacking samplers divides the
+    budget and craters the hit rate; the oblivious search happily stacks
+    them next to the hot store, the aware search spreads them out."""
+    wl = skewed_job()
+    cluster = _testbed_cluster()
+    model = build_hit_model(trace, policy="prefetch", capacity_nodes=150)
+    cfg = CacheConfig(policy="prefetch", cache_gb=1.0)
+    kw = dict(n_chains=8, budget=160, sim_iters=8, seed=0)
+    oblivious = etp_multichain(wl, cluster, **kw)
+    aware = cache_aware_etp(wl, cluster, model, cfg, sim_draws=1, **kw)
+    assert not np.array_equal(oblivious.placement.y, aware.placement.y)
+    # judge both under cache-adjusted traffic with held-out draws
+    _, batch_cost, _ = cache_cost_fns(
+        wl, cluster, model, sim_iters=8, sim_draws=3, seed=123
+    )
+    mk_obl, mk_awr = batch_cost([oblivious.placement, aware.placement])
+    assert mk_awr < mk_obl * 0.95, (mk_obl, mk_awr)
+
+
+def test_cache_aware_etp_respects_reservation(trace):
+    """The returned placement must actually FIT its cache: with an 8 GB
+    per-machine reservation, stacking 4 samplers beside a store overflows
+    48 GB machines, so the search must spread samplers — and the winner's
+    reservation violation must be exactly zero (best-of gates on it)."""
+    wl = build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=6, samplers_per_worker=2,
+        n_ps=1, n_iters=8,
+    )
+    cluster = _testbed_cluster()
+    model = build_hit_model(trace, policy="lru", capacity_nodes=300)
+    cfg = CacheConfig(policy="lru", cache_gb=8.0)
+    res = cache_aware_etp(
+        wl, cluster, model, cfg, n_chains=8, budget=320, sim_iters=6, seed=0
+    )
+    assert not res.fallback
+    assert cache_reservation_violation(wl, cluster, cfg, res.placement) <= 1e-12
+
+
+def test_cache_aware_plan_end_to_end(trace):
+    wl = skewed_job()
+    cluster = _testbed_cluster()
+    model = build_hit_model(trace, policy="lru", capacity_nodes=600)
+    cp = cache_aware_plan(
+        wl, cluster, model, CacheConfig(policy="lru", cache_gb=1.0),
+        n_chains=4, budget=60, sim_iters=6, seed=0,
+    )
+    assert np.isfinite(cp.schedule.makespan) and cp.schedule.makespan > 0
+    # caching only removes traffic: cached makespan <= uncached, same placement
+    assert cp.schedule.makespan <= cp.uncached_makespan * (1 + 1e-9)
+    assert np.all(cp.adjusted.volumes <= wl.realize(seed=0).volumes + 1e-12)
+
+
+def test_plan_defaults_to_eight_chains():
+    assert inspect.signature(plan).parameters["n_chains"].default == 8
+
+
+def test_multichain_more_chains_never_worse():
+    """With a fixed per-chain budget, chains are seed-nested: every chain of
+    the n-chain search runs identically inside the 2n-chain search, so
+    best-of over a superset can only improve (exact, not statistical)."""
+    wl = build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=6, samplers_per_worker=2,
+        n_ps=1, n_iters=8,
+    )
+    cluster = _testbed_cluster()
+    prev = None
+    for n in (1, 2, 4, 8):
+        res = etp_multichain(
+            wl, cluster, n_chains=n, budget=30 * n, sim_iters=6, seed=0
+        )
+        if prev is not None:
+            assert res.best_makespan <= prev + 1e-12, (n, res.best_makespan, prev)
+        prev = res.best_makespan
+    # at plan()'s FIXED total budget the 8-chain default trades chain depth
+    # for basin coverage; quality must stay within a whisker of 2 chains
+    # (deterministic regression bound, not a dominance claim)
+    r2 = etp_multichain(wl, cluster, n_chains=2, budget=240, sim_iters=6, seed=0)
+    r8 = etp_multichain(wl, cluster, n_chains=8, budget=240, sim_iters=6, seed=0)
+    assert r8.best_makespan <= r2.best_makespan * 1.02, (
+        r8.best_makespan, r2.best_makespan,
+    )

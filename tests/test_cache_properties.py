@@ -1,0 +1,78 @@
+"""Hypothesis property tests for the feature-cache layer.
+
+  C1  hit rate is monotone non-decreasing in cache capacity, per iteration,
+      for every policy and sharing degree (static: nested top-C sets; LRU:
+      stack property; prefetch: coverage fraction);
+  C2  cache-adjusted volumes never exceed the uncached Realization's, for
+      any placement / policy / capacity, and non-g2s volumes are untouched.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.cache import (
+    build_hit_model,
+    cache_adjusted_realization,
+    collect_trace,
+    g2s_edge_ids,
+    replay,
+)
+from repro.core import build_gnn_workload, heterogeneous_cluster
+from repro.core.cluster import Placement
+from repro.data.graph import synthetic_graph
+
+# one small trace shared across examples (collection replays the sampler
+# and is the only expensive step; replays and rewrites are array work)
+_G = synthetic_graph(n_nodes=600, avg_degree=8, n_feats=8, n_parts=4, seed=0)
+_TRACE = collect_trace(
+    _G, n_samplers=3, seeds_per_iter=8, fanouts=(3, 3), n_iters=6, seed=0
+)
+
+
+def _workload():
+    return build_gnn_workload(
+        n_stores=3, n_workers=2, samplers_per_worker=2, n_ps=1, n_iters=6,
+        store_to_sampler_gb=0.5, sampler_to_worker_gb=0.25, grad_gb=0.05,
+        store_exec_s=0.1, sampler_exec_s=0.2, worker_exec_s=0.4, ps_exec_s=0.1,
+        pmr=1.3,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(["static", "lru", "prefetch"]),
+    c1=st.integers(0, 600),
+    c2=st.integers(0, 600),
+    k=st.integers(1, 3),
+)
+def test_hit_rate_monotone_in_capacity(policy, c1, c2, k):
+    lo, hi = sorted((c1, c2))
+    h_lo = replay(_TRACE, policy, lo, k)
+    h_hi = replay(_TRACE, policy, hi, k)
+    assert np.all((h_lo >= -1e-12) & (h_lo <= 1 + 1e-12))
+    assert np.all(h_hi >= h_lo - 1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(["static", "lru", "prefetch"]),
+    capacity=st.integers(0, 600),
+    place_seed=st.integers(0, 10_000),
+    real_seed=st.integers(0, 10_000),
+)
+def test_adjusted_volumes_never_exceed_uncached(
+    policy, capacity, place_seed, real_seed
+):
+    wl = _workload()
+    cluster = heterogeneous_cluster(3, seed=0)
+    rng = np.random.default_rng(place_seed)
+    p = Placement(rng.integers(0, cluster.M, wl.J).astype(np.int64))
+    r = wl.realize(seed=real_seed)
+    model = build_hit_model(_TRACE, policy=policy, capacity_nodes=capacity)
+    adj = cache_adjusted_realization(wl, cluster, p, r, model)
+    assert np.all(adj.volumes <= r.volumes + 1e-12)
+    assert np.all(adj.volumes >= -1e-12)
+    others = np.setdiff1d(np.arange(wl.E), g2s_edge_ids(wl))
+    np.testing.assert_array_equal(adj.volumes[others], r.volumes[others])
