@@ -1,0 +1,140 @@
+"""Dynamics-tier benchmarks: what re-planning buys under bandwidth drift.
+
+Two studies, both on the ogbn-products testbed job:
+
+  * ``strategy_comparison`` — static-plan vs warm incremental re-plan vs
+    oracle-replan total wall-clock under random sustained-drift traces
+    (``repro.dynamics.scenario``).  The re-plan strategy pays its own
+    migration stalls; the oracle re-plans every interval from scratch
+    with a larger budget and free migration, bounding what re-planning
+    could ever recover.
+  * ``warm_vs_cold_replan`` — evaluations-to-quality after a bandwidth
+    regime shift: ETP warm-started from the incumbent vs from-scratch
+    search at growing budgets, reporting the budget multiple cold needs
+    to match warm's quality.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only dynamics``
+(add ``--smoke`` for the CI-sized version) or
+``PYTHONPATH=src python -m benchmarks.bench_dynamics``
+"""
+from __future__ import annotations
+
+from .common import Timer, emit  # noqa: F401 (inserts src/ into sys.path)
+
+from repro.core import expected_makespan, testbed_cluster
+from repro.core.placement import etp_multichain, etp_search
+from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
+from repro.dynamics import ReplanConfig, drift_trace, run_scenario
+
+
+def testbed_job(n_iters: int = 40):
+    return build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=4, samplers_per_worker=2,
+        n_ps=1, n_iters=n_iters,
+    )
+
+
+def strategy_comparison(smoke: bool = False, seed: int = 0):
+    """static vs replan vs oracle total wall-clock under a drift trace."""
+    n_intervals = 3 if smoke else 5
+    iters = 6 if smoke else 10
+    budget = 40 if smoke else 150
+    oracle_budget = 80 if smoke else 450
+    wl = testbed_job(n_iters=n_intervals * iters)
+    cluster = testbed_cluster()
+    # scale the drift timeline to the run: measure the undisturbed job,
+    # then lay ~2 segments per interval over that horizon so every plan
+    # interval can actually see a different bandwidth regime
+    from repro.core import ifs_placement, simulate
+
+    p0 = ifs_placement(wl, cluster, seed=seed)
+    undisturbed = simulate(
+        wl, cluster, p0, wl.realize(seed=seed, n_iters=n_intervals * iters)
+    ).makespan
+    tr = drift_trace(
+        cluster, horizon_s=undisturbed * 1.5, n_segments=2 * n_intervals,
+        seed=seed, bw_scale_range=(0.25, 1.0),
+    )
+    cfg = ReplanConfig(budget=budget, sim_iters=iters, drift_threshold=0.2)
+    totals = {}
+    for strat in ("static", "replan", "oracle"):
+        with Timer() as t:
+            out = run_scenario(
+                wl, cluster, tr, strategy=strat,
+                n_intervals=n_intervals, iters_per_interval=iters, seed=seed,
+                replan_config=cfg, oracle_budget=oracle_budget,
+            )
+        totals[strat] = out.total_s
+        emit(
+            f"dynamics_{strat}", t.us,
+            f"total={out.total_s:.2f}s compute={out.compute_s:.2f}s "
+            f"migration={out.migration_total_s:.2f}s replans={out.n_replans}",
+        )
+    gain = 100 * (1 - totals["replan"] / totals["static"])
+    head = 100 * (1 - totals["oracle"] / totals["static"])
+    emit(
+        "dynamics_replan_gain", 0.0,
+        f"replan_vs_static={gain:.1f}% oracle_headroom={head:.1f}% "
+        f"beats_static={'y' if totals['replan'] < totals['static'] else 'N'}",
+    )
+    return totals
+
+
+def warm_vs_cold_replan(smoke: bool = False, seed: int = 0):
+    """Evaluations-to-quality after the harshest regime shift — a machine
+    leave (the elastic/failure path), where the incumbent's structure
+    carries real information the cold search must rediscover."""
+    from repro.core.placement import remap_after_leave
+
+    wl = testbed_job(n_iters=12)
+    cluster = testbed_cluster()
+    inc_budget = 60 if smoke else 200
+    warm_budget = 40 if smoke else 60
+    inc = etp_multichain(
+        wl, cluster, n_chains=2, budget=inc_budget, sim_iters=10, seed=seed
+    ).placement
+    shifted, warm_init = remap_after_leave(wl, cluster, inc, 3)
+    before = expected_makespan(wl, shifted, warm_init, n_iters=10, seed=seed)
+    with Timer() as t_w:
+        warm = etp_search(
+            wl, shifted, budget=warm_budget, init=warm_init,
+            sim_iters=10, seed=seed,
+        )
+    emit(
+        "dynamics_warm_replan", t_w.us,
+        f"budget={warm_budget} evals={warm.evaluations} "
+        f"makespan={warm.best_makespan:.3f}s incumbent={before:.3f}s",
+    )
+    matched = None
+    for mult in (1, 2, 3) if smoke else (1, 2, 3, 4):
+        with Timer() as t_c:
+            cold = etp_search(
+                wl, shifted, budget=warm_budget * mult, sim_iters=10, seed=seed
+            )
+        emit(
+            f"dynamics_cold_replan_x{mult}", t_c.us,
+            f"budget={warm_budget * mult} evals={cold.evaluations} "
+            f"makespan={cold.best_makespan:.3f}s",
+        )
+        if matched is None and cold.best_makespan <= warm.best_makespan * 1.001:
+            matched = (mult, cold.evaluations)
+    emit(
+        "dynamics_warm_vs_cold", 0.0,
+        f"warm_evals={warm.evaluations} "
+        + (
+            f"cold_matches_at_x{matched[0]}_with_{matched[1]}_evals"
+            if matched
+            else "cold_never_matches_at_tested_budgets"
+        ),
+    )
+
+
+def main(smoke: bool = False):
+    strategy_comparison(smoke=smoke)
+    warm_vs_cold_replan(smoke=smoke)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

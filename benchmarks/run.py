@@ -10,6 +10,9 @@ benches).  Prints ``name,us_per_call,derived`` CSV rows.
   etp_*           ETP ablation (paper-faithful vs enhanced) + 5-min claim
   etp             batched-vs-scalar planning-loop throughput (bench_etp)
   cache           feature-cache sweeps + cache-aware ETP (bench_cache)
+  dynamics        drift-trace re-planning: static vs replan vs oracle,
+                  warm-vs-cold evaluations-to-quality (bench_dynamics;
+                  ``--smoke`` shrinks budgets to CI size)
   engine_*        event-engine throughput
   attn/ssd/flash  kernel-layer benches (XLA mirrors + interpret allclose)
   roofline_*      summary rows from the dry-run roofline table
@@ -22,7 +25,14 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from . import bench_algorithms, bench_cache, bench_etp, bench_figures, bench_kernels
+from . import (
+    bench_algorithms,
+    bench_cache,
+    bench_dynamics,
+    bench_etp,
+    bench_figures,
+    bench_kernels,
+)
 from .common import emit
 
 
@@ -58,7 +68,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default=None,
-        choices=[None, "figures", "algorithms", "kernels", "roofline", "etp", "cache"],
+        choices=[
+            None, "figures", "algorithms", "kernels", "roofline", "etp",
+            "cache", "dynamics",
+        ],
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized budgets (currently honoured by the dynamics bench)",
     )
     args = ap.parse_args()
     print("name,us_per_call,derived")
@@ -68,6 +85,8 @@ def main() -> None:
         bench_etp.main()
     if args.only in (None, "cache"):
         bench_cache.main()
+    if args.only in (None, "dynamics"):
+        bench_dynamics.main(smoke=args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels.main()
     if args.only in (None, "roofline"):

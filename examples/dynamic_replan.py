@@ -1,0 +1,77 @@
+"""Dynamics walkthrough: bandwidth drift -> detect -> warm re-plan -> elastic churn.
+
+    PYTHONPATH=src python examples/dynamic_replan.py
+
+Runs the ogbn-products testbed job on a cluster whose NICs drift over
+time, comparing the static plan against warm incremental re-planning
+(drift-thresholded, migration-aware, amortised over the remaining run),
+then demonstrates machine leave/join through the same re-plan path.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import ifs_placement, simulate, testbed_cluster
+from repro.core.cluster import Machine
+from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
+from repro.dynamics import (
+    ReplanConfig,
+    Replanner,
+    drift_trace,
+    run_scenario,
+)
+
+
+def main():
+    n_intervals, iters = 4, 8
+    wl = build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=4, samplers_per_worker=2,
+        n_ps=1, n_iters=n_intervals * iters,
+    )
+    cluster = testbed_cluster()
+    p0 = ifs_placement(wl, cluster, seed=0)
+    undisturbed = simulate(
+        wl, cluster, p0, wl.realize(seed=0, n_iters=n_intervals * iters)
+    ).makespan
+    trace = drift_trace(
+        cluster, horizon_s=undisturbed * 1.2, n_segments=3 * n_intervals,
+        seed=0, bw_scale_range=(0.25, 1.0),
+    )
+    print(f"undisturbed makespan {undisturbed:.2f}s; drift trace with "
+          f"{trace.S} segments (NICs drop to 25-100%, occasional stragglers)")
+
+    cfg = ReplanConfig(budget=120, sim_iters=iters, drift_threshold=0.2)
+    print("\n== static plan vs warm incremental re-planning ==")
+    outcomes = {}
+    for strat in ("static", "replan", "oracle"):
+        out = run_scenario(
+            wl, cluster, trace, strategy=strat,
+            n_intervals=n_intervals, iters_per_interval=iters, seed=0,
+            replan_config=cfg, oracle_budget=360,
+        )
+        outcomes[strat] = out
+        print(f"  {strat:7s}: total {out.total_s:7.2f}s  "
+              f"(compute {out.compute_s:.2f}s + migration "
+              f"{out.migration_total_s:.2f}s, {out.n_replans} re-plans)")
+    gain = 100 * (1 - outcomes["replan"].total_s / outcomes["static"].total_s)
+    print(f"  re-planning recovers {gain:.1f}% of the static wall-clock "
+          f"(oracle bound: "
+          f"{100 * (1 - outcomes['oracle'].total_s / outcomes['static'].total_s):.1f}%)")
+
+    print("\n== elastic membership through the same path ==")
+    rp = Replanner(wl, cluster, p0.copy(), config=cfg)
+    rec = rp.on_leave(3)
+    print(f"  machine 3 left  -> {rp.cluster.M} machines, moved "
+          f"{rec.moved_tasks} tasks ({rec.migration_gb:.2f} GB, "
+          f"{rec.migration_s:.2f}s), objective {rec.objective:.2f}s")
+    joiner = Machine("m-join", {"mem": 48.0, "cpu": 16.0, "gpu": 2.0}, 6.25, 6.25)
+    rec = rp.on_join(joiner, cache_gb=2.0)
+    print(f"  machine joined  -> {rp.cluster.M} machines, moved "
+          f"{rec.moved_tasks} tasks ({rec.migration_s:.2f}s migration), "
+          f"objective {rec.objective:.2f}s")
+    print("  triggers:", [r.trigger for r in rp.records])
+
+
+if __name__ == "__main__":
+    main()

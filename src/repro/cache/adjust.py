@@ -21,6 +21,7 @@ uncached ones (property-tested) — caching can only remove traffic.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Union
 
 import numpy as np
 
@@ -33,15 +34,29 @@ from .hitmodel import HitModel
 class CacheConfig:
     """Deployment knobs of the feature-cache tier.
 
-    ``cache_gb`` is the per-machine budget: every machine hosting at least
-    one sampler dedicates this much memory to the (shared) feature cache.
-    ``reserve_mem`` couples that budget into placement search — ETP then
-    trades sampler colocation (compounding hit rates) against the memory
-    headroom the reservation consumes."""
+    ``cache_gb`` is the budget a sampler-hosting machine dedicates to the
+    (shared) feature cache: one float applies uniformly, a length-M
+    sequence gives each machine its own budget — elastic clusters are
+    heterogeneous by construction, so a machine that joins mid-run keeps
+    whatever headroom it actually has.  ``reserve_mem`` couples the budget
+    into placement search — ETP then trades sampler colocation
+    (compounding hit rates) against the memory headroom the reservation
+    consumes."""
 
     policy: str = "lru"
-    cache_gb: float = 1.0
+    cache_gb: Union[float, Sequence[float]] = 1.0
     reserve_mem: bool = True
+
+    def cache_gb_per_machine(self, n_machines: int) -> np.ndarray:
+        """[M] budget vector (broadcast a scalar, validate a sequence)."""
+        gb = np.asarray(self.cache_gb, dtype=np.float64)
+        if gb.ndim == 0:
+            return np.full(n_machines, float(gb))
+        if gb.shape != (n_machines,):
+            raise ValueError(
+                f"cache_gb must be a scalar or length-{n_machines} sequence"
+            )
+        return gb.copy()
 
 
 def sampler_ids(workload: Workload) -> np.ndarray:
@@ -80,11 +95,19 @@ class CacheRewriter:
     vectorised multiply."""
 
     def __init__(
-        self, workload: Workload, cluster: ClusterSpec, model: HitModel
+        self,
+        workload: Workload,
+        cluster: ClusterSpec,
+        model: HitModel,
+        machine_models: Optional[Dict[int, HitModel]] = None,
     ) -> None:
         self.workload = workload
         self.cluster = cluster
         self.model = model
+        # heterogeneous budgets: machine m's cache replays through
+        # machine_models[m] when present (e.g. a smaller capacity_nodes on
+        # a memory-poor machine), self.model otherwise
+        self.machine_models = machine_models or {}
         self.g2s = g2s_edge_ids(workload)
         self.g2s_dst = workload.edge_dst[self.g2s]  # destination samplers
         self.samplers = sampler_ids(workload)
@@ -96,12 +119,25 @@ class CacheRewriter:
         n = realization.n_iters
         vol = realization.volumes.copy()
         k_of_m = _sampler_counts(placement.y, self.samplers, self.cluster.M)
-        k_of_edge = k_of_m[placement.y[self.g2s_dst]]  # [G]
-        for kv in np.unique(k_of_edge):
-            if kv <= 0:
-                continue
-            miss = 1.0 - np.clip(self.model.hit_rates(int(kv), n), 0.0, 1.0)
-            vol[self.g2s[k_of_edge == kv]] *= miss
+        m_of_edge = placement.y[self.g2s_dst]  # [G] sampler machine
+        k_of_edge = k_of_m[m_of_edge]
+        if not self.machine_models:
+            for kv in np.unique(k_of_edge):
+                if kv <= 0:
+                    continue
+                miss = 1.0 - np.clip(self.model.hit_rates(int(kv), n), 0.0, 1.0)
+                vol[self.g2s[k_of_edge == kv]] *= miss
+        else:
+            # group by (model-owning machine, sharing degree); machines
+            # sharing the default model also share its memoised curves
+            for m in np.unique(m_of_edge):
+                model = self.machine_models.get(int(m), self.model)
+                sel = m_of_edge == m
+                kv = int(k_of_m[m])
+                if kv <= 0:
+                    continue
+                miss = 1.0 - np.clip(model.hit_rates(kv, n), 0.0, 1.0)
+                vol[self.g2s[sel]] *= miss
         return Realization(volumes=vol, exec_times=realization.exec_times)
 
 

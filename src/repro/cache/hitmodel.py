@@ -41,15 +41,24 @@ TAIL_ITERS = 4
 
 @dataclass
 class HitModel:
-    """Per-(sharing-degree, iteration) hit-rate table for one cache size."""
+    """Per-(sharing-degree, iteration) hit-rate table for one cache size.
+
+    ``warm_iters`` shifts the replay's origin: a model with
+    ``warm_iters=w`` reports the hit rates of iterations ``w+1 .. w+n`` of
+    the SAME continuous replay — i.e. a cache that has already served ``w``
+    iterations and kept its state.  Incremental re-planning
+    (repro.dynamics.replan) carries this across plan intervals via
+    ``warm_started`` instead of pretending every re-plan starts cold."""
 
     trace: AccessTrace
     policy: str
     capacity_nodes: int
+    warm_iters: int = 0
     _table: Dict[int, np.ndarray] = field(default_factory=dict)
 
     def hit_rates(self, k: int, n_iters: int) -> np.ndarray:
-        """[n_iters] hit fractions for a cache shared by ``k`` samplers.
+        """[n_iters] hit fractions for a cache shared by ``k`` samplers,
+        starting ``warm_iters`` iterations into the replay.
 
         Replayed on demand and memoised per ``k`` (a search touches only a
         handful of distinct sharing degrees).  Horizons longer than the
@@ -70,10 +79,25 @@ class HitModel:
         if got is None:
             got = replay(self.trace, self.policy, self.capacity_nodes, k)
             self._table[k] = got
-        if n_iters <= len(got):
-            return got[:n_iters]
+        total = self.warm_iters + n_iters
+        if total <= len(got):
+            return got[self.warm_iters : total]
         tail = float(got[-TAIL_ITERS:].mean()) if len(got) else 0.0
-        return np.concatenate([got, np.full(n_iters - len(got), tail)])
+        full = np.concatenate([got, np.full(total - len(got), tail)])
+        return full[self.warm_iters :]
+
+    def warm_started(self, extra_iters: int) -> "HitModel":
+        """The same cache after ``extra_iters`` more served iterations.
+        Shares the memoised replay table — warm views are free."""
+        if extra_iters < 0:
+            raise ValueError("extra_iters must be >= 0")
+        return HitModel(
+            trace=self.trace,
+            policy=self.policy,
+            capacity_nodes=self.capacity_nodes,
+            warm_iters=self.warm_iters + int(extra_iters),
+            _table=self._table,
+        )
 
     def mean_hit_rate(self, k: int = 1) -> float:
         return float(self.hit_rates(k, self.trace.n_iters).mean())

@@ -47,25 +47,25 @@ def make_reservation_fn(
     """Precompiled ``extra_violation`` hook: placement -> extra violation
     fraction caused by the cache reservations alone.
 
-    For each machine hosting >= 1 sampler, ``cache_gb`` of memory is
-    reserved on top of task demands; the returned value is the *increase*
-    in summed overflow fractions vs the unreserved usage (the base part is
-    already charged by eq. 21's penalty inside ETP), so the two never
+    For each machine hosting >= 1 sampler, that machine's ``cache_gb``
+    budget (scalar broadcast or per-machine vector — heterogeneous
+    clusters reserve what each machine can actually spare) is reserved on
+    top of task demands; the returned value is the *increase* in summed
+    overflow fractions vs the unreserved usage (the base part is already
+    charged by eq. 21's penalty inside ETP), so the two never
     double-count.  Everything placement-independent (demand memory column,
     sampler ids, capacity vectors) is gathered once here because ETP calls
     the hook for every evaluated candidate."""
-    if (
-        not config.reserve_mem
-        or config.cache_gb <= 0
-        or "mem" not in cluster.resource_types
-    ):
+    if not config.reserve_mem or "mem" not in cluster.resource_types:
+        return lambda p: 0.0
+    cache_gb = config.cache_gb_per_machine(cluster.M)
+    if np.all(cache_gb <= 0):
         return lambda p: 0.0
     r = cluster.resource_types.index("mem")
     mem_demand = cluster.demand_matrix(workload.tasks)[:, r]
     samplers = sampler_ids(workload)
     mem_cap = cluster.cap[:, r]
     cap = np.where(mem_cap > 0, mem_cap, 1.0)
-    cache_gb = config.cache_gb
 
     def violation(placement: Placement) -> float:
         mem_use = np.bincount(
@@ -99,6 +99,7 @@ def cache_cost_fns(
     sim_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
+    machine_models=None,
 ) -> Tuple[
     Callable[[Placement], float],
     Callable[[Sequence[Placement]], List[float]],
@@ -110,11 +111,13 @@ def cache_cost_fns(
     All candidates share one set of Monte-Carlo draws (apples-to-apples
     across the whole search) and ``batch_cost`` runs every pending
     (candidate x draw) pair in ONE ``simulate_batch`` call — the PR-1 fast
-    path is preserved, only the volumes fed to it change per candidate."""
+    path is preserved, only the volumes fed to it change per candidate.
+    ``machine_models`` (machine -> HitModel) overrides the shared model on
+    specific machines (heterogeneous budgets)."""
     draws = monte_carlo_draws(
         workload, seed=seed, n_iters=sim_iters, n_draws=sim_draws
     )
-    rewriter = CacheRewriter(workload, cluster, model)
+    rewriter = CacheRewriter(workload, cluster, model, machine_models=machine_models)
 
     def batch_cost(placements: Sequence[Placement]) -> List[float]:
         groups = [
@@ -140,6 +143,7 @@ def cache_aware_etp(
     sim_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
+    machine_models=None,
     **kw,
 ) -> ETPResult:
     """Multi-chain ETP whose objective and capacity model are cache-aware.
@@ -158,6 +162,7 @@ def cache_aware_etp(
     _, batch_cost, _ = cache_cost_fns(
         workload, cluster, model,
         sim_iters=sim_iters, sim_draws=sim_draws, seed=seed, policy=policy,
+        machine_models=machine_models,
     )
     return etp_multichain(
         workload,

@@ -45,6 +45,7 @@ from .placement import (
     etp_search,
     group_move_candidates,
     ifs_placement,
+    remap_after_leave,
     replan_after_failure,
 )
 from .profiles import (

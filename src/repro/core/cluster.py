@@ -79,6 +79,26 @@ class ClusterSpec:
         keep = [mm for i, mm in enumerate(self.machines) if i != m]
         return ClusterSpec(machines=keep)
 
+    def with_machine(self, machine: Machine) -> "ClusterSpec":
+        """Cluster after ``machine`` joins (elastic scale-up re-plan path);
+        the new machine takes index ``M``."""
+        return ClusterSpec(machines=self.machines + [machine])
+
+    def with_bandwidth(
+        self, bw_in: Sequence[float], bw_out: Optional[Sequence[float]] = None
+    ) -> "ClusterSpec":
+        """Same machines, different NIC bandwidths — the planner-side
+        snapshot of a time-varying cluster (repro.dynamics)."""
+        if bw_out is None:
+            bw_out = bw_in
+        if len(bw_in) != self.M or len(bw_out) != self.M:
+            raise ValueError("bandwidth vectors must have one entry per machine")
+        machines = [
+            dataclasses.replace(m, bw_in=float(bi), bw_out=float(bo))
+            for m, bi, bo in zip(self.machines, bw_in, bw_out)
+        ]
+        return ClusterSpec(machines=machines)
+
 
 @dataclass
 class Placement:

@@ -18,6 +18,13 @@ Dependency semantics implemented (paper constraints (5)-(14)):
 Makespan = completion time of the last task's iteration N (eq. 15). Final
 PS->worker flows (which would feed iteration N+1) are not generated.
 
+Both engines also accept a time-varying cluster (``trace=``, a
+``repro.dynamics.traces.BandwidthTrace``): NIC bandwidths and per-machine
+compute slowdowns are piecewise-constant in time, segment boundaries become
+a third event source, and the dependency constraints (5)-(12) are untouched
+while the capacity constraints (13)(14) hold pointwise against B(t) — see
+``simulate``'s docstring for the exact semantics.
+
 Implementation notes: because constraint (11) serialises a logical edge's
 instances, *at most one instance per edge is ever in flight* — the active
 flow set is a boolean mask over the E logical edges, and all per-event work
@@ -242,8 +249,27 @@ def simulate(
     policy: RatePolicy | str = "oes",
     record: bool = False,
     max_events: int = 50_000_000,
+    trace=None,
 ) -> ScheduleResult:
-    """Run one training job to completion under ``policy``; return schedule."""
+    """Run one training job to completion under ``policy``; return schedule.
+
+    ``trace`` (a ``repro.dynamics.traces.BandwidthTrace``, duck-typed on
+    ``times`` / ``bw_in`` / ``bw_out`` / ``slow``) makes the cluster
+    time-varying: within segment ``s`` every NIC runs at ``trace.bw_in[s]``
+    / ``trace.bw_out[s]`` and a task started in that segment executes for
+    ``exec * trace.slow[s, machine]``.  Dynamic-trace semantics vs the
+    paper's constraints (5)-(14): the dependency structure (5)-(12) is
+    untouched — only the capacity constraints (13)(14) become
+    time-indexed, ``sum of rates <= B(t)``, which every rate policy already
+    satisfies pointwise because rates are recomputed from the segment's
+    bandwidth at every event.  A segment boundary is simply a third event
+    source next to task and flow completions: flows in flight carry their
+    remaining bytes across it and continue at the new rates, and the
+    engine stays exact because everything is constant between events
+    (rates integrate trivially).  Tasks sample their machine's slowdown at
+    START time only — a task spanning a boundary keeps its original finish
+    time, mirroring how a straggling host delays the work it has already
+    admitted."""
     if isinstance(policy, str):
         policy = POLICIES[policy]()
     N = realization.n_iters
@@ -253,6 +279,20 @@ def simulate(
     vol = realization.volumes
     ex = realization.exec_times
     bw_in, bw_out = cluster.bw_in, cluster.bw_out
+    seg, n_segs, seg_times = 0, 1, None
+    slow_cur = None
+    if trace is not None:
+        if trace.bw_in.shape[1] != cluster.M:
+            raise ValueError(
+                f"trace covers {trace.bw_in.shape[1]} machines but the "
+                f"cluster has {cluster.M} — rebuild the trace after "
+                "membership changes"
+            )
+        seg_times = np.asarray(trace.times, dtype=np.float64)
+        n_segs = len(seg_times)
+        bw_in = np.asarray(trace.bw_in[0], dtype=np.float64)
+        bw_out = np.asarray(trace.bw_out[0], dtype=np.float64)
+        slow_cur = np.asarray(trace.slow[0], dtype=np.float64)
     src_m_all = y[src_t]
     dst_m_all = y[dst_t]
 
@@ -294,7 +334,10 @@ def simulate(
 
     def start_task(j: int, n: int, t: float) -> None:
         running[j] = True
-        end = t + ex[j, n - 1]
+        if slow_cur is None:
+            end = t + ex[j, n - 1]
+        else:
+            end = t + ex[j, n - 1] * slow_cur[y[j]]
         heapq.heappush(task_heap, (end, j, n))
         if record:
             events.append(TaskEvent(j, n, t, end))
@@ -351,12 +394,18 @@ def simulate(
             rates = None
             t_flow = np.inf
         t_task = task_heap[0][0] if task_heap else np.inf
-        t_next = min(t_task, t_flow)
+        t_break = seg_times[seg + 1] if seg + 1 < n_segs else np.inf
+        t_next = min(t_task, t_flow, t_break)
         if not np.isfinite(t_next):  # pragma: no cover
             raise RuntimeError("no progress: flows active but zero rates")
         if len(idx):
             remaining[idx] -= rates * (t_next - t)
         t = t_next
+        while seg + 1 < n_segs and seg_times[seg + 1] <= t:
+            seg += 1
+            bw_in = np.asarray(trace.bw_in[seg], dtype=np.float64)
+            bw_out = np.asarray(trace.bw_out[seg], dtype=np.float64)
+            slow_cur = np.asarray(trace.slow[seg], dtype=np.float64)
 
         touched: List[int] = []
 
@@ -421,28 +470,39 @@ def simulate(
 # sequence as the scalar loop).
 # ---------------------------------------------------------------------------
 def _batch_rates_factory(
-    policy: RatePolicy, B: int, cluster: ClusterSpec, group_stride: int
+    policy: RatePolicy,
+    B: int,
+    cluster: ClusterSpec,
+    group_stride: int,
+    bw_in_mat: np.ndarray,
+    bw_out_mat: np.ndarray,
+    dynamic: bool = False,
 ) -> Callable[..., np.ndarray]:
     """Return ``f(inst, src, dst, remaining, release, group) -> rates`` for
     flows pooled from up to ``B`` instances (``inst`` sorted ascending).
     ``src`` / ``dst`` / ``group`` are instance-local; the pool is compacted
     to the distinct instances actually present (rate caching usually leaves
     only one or two dirty), and a single-instance pool short-circuits to the
-    scalar policy — exact by definition.  Callers must run inside an
+    scalar policy — exact by definition.  ``bw_in_mat`` / ``bw_out_mat``
+    are the [B, M] per-instance NIC capacities, owned by the driver: with
+    ``dynamic`` (a bandwidth trace) each instance's row tracks its own
+    current segment and pooled calls gather the present instances' rows
+    fresh; without one every row is identical, so pooled calls keep the
+    old zero-copy slice of the flat tiling.  Callers must run inside an
     ``np.errstate(divide/invalid ignored)`` context."""
     M = cluster.M
-    bw_in, bw_out = cluster.bw_in, cluster.bw_out
-    bw_in_t = np.tile(bw_in, B)
-    bw_out_t = np.tile(bw_out, B)
+    if not dynamic:
+        bw_in_flat = bw_in_mat.reshape(-1)
+        bw_out_flat = bw_out_mat.reshape(-1)
 
     if policy.name == "oes_strict":
 
-        def strict_pool(nb, src, dst, remaining, release, group):
+        def strict_pool(nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, inst):
             d_out = np.bincount(src, minlength=nb * M)
             d_in = np.bincount(dst, minlength=nb * M)
             return np.minimum(
-                bw_in_t[: nb * M][dst] / d_in[dst],
-                bw_out_t[: nb * M][src] / d_out[src],
+                bw_in_p[dst] / d_in[dst],
+                bw_out_p[src] / d_out[src],
             )
 
         pool_rates = strict_pool
@@ -451,9 +511,9 @@ def _batch_rates_factory(
         # Sequential waterfill: a stable sort keeps each instance's internal
         # priority order, and capacity updates are per-NIC, so interleaving
         # instances changes nothing within any one of them.
-        def waterfill_pool(nb, src, dst, remaining, release, group):
-            rem_in = bw_in_t[: nb * M].copy()
-            rem_out = bw_out_t[: nb * M].copy()
+        def waterfill_pool(nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, inst):
+            rem_in = bw_in_p.copy()
+            rem_out = bw_out_p.copy()
             r = np.zeros(len(src))
             order = policy.order(src, dst, remaining, release, rem_in, rem_out)
             for i in order:
@@ -468,19 +528,21 @@ def _batch_rates_factory(
 
     elif policy.name == "omcoflow":
         # The scalar rule's only global quantity, min(bw_in.max(), bw_out.max()),
-        # is identical for every instance (shared cluster), so pooling is exact.
-        bw_ref = min(bw_in.max(), bw_out.max())
+        # is computed per instance from its own current bandwidth row, so
+        # pooling stays exact under both static and dynamic clusters.
         rounds = policy.rounds
 
-        def omcoflow_pool(nb, src, dst, remaining, release, group):
-            bw_in_p = bw_in_t[: nb * M]
-            bw_out_p = bw_out_t[: nb * M]
+        def omcoflow_pool(nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, inst):
             pred = np.maximum(remaining, EPS) / np.minimum(bw_in_p[dst], bw_out_p[src])
             w = 1.0 / pred
             gsum = np.zeros(group.max() + 1)
             np.add.at(gsum, group, w)
             w = w / gsum[group]
-            r = w * bw_ref
+            ref_b = np.minimum(
+                bw_in_p.reshape(nb, M).max(axis=1),
+                bw_out_p.reshape(nb, M).max(axis=1),
+            )
+            r = w * ref_b[inst]
             for _ in range(rounds):
                 load_out = np.bincount(src, weights=r, minlength=nb * M)
                 load_in = np.bincount(dst, weights=r, minlength=nb * M)
@@ -498,7 +560,7 @@ def _batch_rates_factory(
         # scalar per-instance increment sequence exactly.  Ingress NICs
         # occupy [0, nb*M) and egress NICs [nb*M, 2*nb*M) of one fused
         # capacity array so each round costs one bincount / one where.
-        def oes_pool(nb, src, dst, remaining, release, group, inst):
+        def oes_pool(nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, inst):
             # An instance whose flows all froze (or vanished) gets an
             # all-zero NIC count, hence an infinite increment, hence is
             # killed by the isfinite check — no separate emptiness pass
@@ -507,7 +569,7 @@ def _batch_rates_factory(
             src2 = src + nb * M
             idx2 = np.concatenate((dst, src2))
             r = np.zeros(n)
-            rem2 = np.concatenate((bw_in_t[: nb * M], bw_out_t[: nb * M]))
+            rem2 = np.concatenate((bw_in_p, bw_out_p))
             unfrozen = np.ones(n, dtype=bool)
             live = np.ones(nb, dtype=bool)  # instance still filling
             flows = unfrozen.copy()
@@ -546,26 +608,36 @@ def _batch_rates_factory(
         np.not_equal(inst[1:], inst[:-1], out=cut[1:])
         nb = int(cut.sum())
         if nb == 1:
+            b = int(inst[0])
             return policy.rates(
-                src_l, dst_l, remaining, release, group, bw_in, bw_out
+                src_l, dst_l, remaining, release, group,
+                bw_in_mat[b], bw_out_mat[b],
             )
+        present = inst[cut]  # distinct instance ids, ascending
         if pool_rates is None:
             r = np.empty(len(inst))
             starts = np.nonzero(cut)[0].tolist() + [len(inst)]
             for lo, hi in zip(starts[:-1], starts[1:]):
+                b = int(inst[lo])
                 r[lo:hi] = policy.rates(
                     src_l[lo:hi], dst_l[lo:hi], remaining[lo:hi],
-                    release[lo:hi], group[lo:hi], bw_in, bw_out,
+                    release[lo:hi], group[lo:hi], bw_in_mat[b], bw_out_mat[b],
                 )
             return r
+        if dynamic:
+            bw_in_p = bw_in_mat[present].ravel()
+            bw_out_p = bw_out_mat[present].ravel()
+        else:  # all rows identical: zero-copy view of the first nb tiles
+            bw_in_p = bw_in_flat[: nb * M]
+            bw_out_p = bw_out_flat[: nb * M]
         dense = np.cumsum(cut) - 1  # 0..nb-1 per flow
         src = src_l + dense * M
         dst = dst_l + dense * M
-        if policy.name == "oes":
-            return pool_rates(nb, src, dst, remaining, release, group, dense)
         if policy.name == "omcoflow":
             group = group + dense * group_stride
-        return pool_rates(nb, src, dst, remaining, release, group)
+        return pool_rates(
+            nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, dense
+        )
 
     return rates_fn
 
@@ -578,6 +650,7 @@ def simulate_batch(
     policy: RatePolicy | str = "oes",
     record: bool = False,
     max_events: int = 50_000_000,
+    trace=None,
 ) -> List[ScheduleResult]:
     """Run ``B = len(placements)`` independent jobs to completion in
     lock-step; instance ``b`` pairs ``placements[b]`` with
@@ -585,7 +658,12 @@ def simulate_batch(
     bit-identical to ``simulate`` run on each instance alone.
 
     All realizations must share ``n_iters`` (the batch is stacked into
-    ``[B, E, N]`` / ``[B, J, N]`` arrays); the cluster is shared."""
+    ``[B, E, N]`` / ``[B, J, N]`` arrays); the cluster is shared.
+    ``trace`` (see ``simulate``) is shared too, but instances advance
+    through its segments on their own clocks — each instance carries its
+    own segment pointer and per-machine bandwidth row, so the lock-step
+    batch stays bit-identical to per-instance scalar runs on the same
+    trace (certified by tests/test_dynamics.py)."""
     if isinstance(policy, str):
         policy = POLICIES[policy]()
     B = len(placements)
@@ -604,6 +682,29 @@ def simulate_batch(
     dst_m = np.stack([p.y[dst_t] for p in placements])
     local = src_m == dst_m
     last_instance = N - lag  # [E]
+
+    # per-instance NIC capacity rows (and, with a trace, segment pointers)
+    if trace is None:
+        bw_in_mat = np.tile(cluster.bw_in, (B, 1))
+        bw_out_mat = np.tile(cluster.bw_out, (B, 1))
+        seg_times, n_segs, seg_b = None, 1, None
+        slow_l = None
+        t_break = np.full(B, np.inf)
+    else:
+        if trace.bw_in.shape[1] != cluster.M:
+            raise ValueError(
+                f"trace covers {trace.bw_in.shape[1]} machines but the "
+                f"cluster has {cluster.M} — rebuild the trace after "
+                "membership changes"
+            )
+        seg_times = np.asarray(trace.times, dtype=np.float64)
+        n_segs = len(seg_times)
+        bw_in_mat = np.tile(np.asarray(trace.bw_in[0], dtype=np.float64), (B, 1))
+        bw_out_mat = np.tile(np.asarray(trace.bw_out[0], dtype=np.float64), (B, 1))
+        seg_b = [0] * B
+        slow_l = [np.asarray(trace.slow[0], dtype=np.float64).tolist() for _ in range(B)]
+        t_break = np.full(B, seg_times[1] if n_segs > 1 else np.inf)
+        y_l = [p.y.tolist() for p in placements]
 
     # coflow group ids are only consumed by omcoflow (and custom policies);
     # the built-in oes / oes_strict / fifo / mrtf rules ignore them, so the
@@ -624,7 +725,10 @@ def simulate_batch(
     n_events = np.zeros(B, dtype=np.int64)
     t = np.zeros(B, dtype=np.float64)
 
-    rates_fn = _batch_rates_factory(policy, B, cluster, group_stride=J * (N + 2))
+    rates_fn = _batch_rates_factory(
+        policy, B, cluster, J * (N + 2), bw_in_mat, bw_out_mat,
+        dynamic=trace is not None,
+    )
     # oes / oes_strict / fifo rates depend only on the active-flow TOPOLOGY
     # (machine ids + release order), not on ``remaining`` — an instance's
     # per-flow rates stay valid until a flow starts or completes, so only
@@ -674,7 +778,10 @@ def simulate_batch(
 
     def start_task(b: int, j: int, n: int, tb: float) -> None:
         running_l[b][j] = True
-        end = tb + ex_l[b][j][n - 1]
+        if slow_l is None:
+            end = tb + ex_l[b][j][n - 1]
+        else:
+            end = tb + ex_l[b][j][n - 1] * slow_l[b][y_l[b][j]]
         heapq.heappush(heaps[b], (end, j, n))
         if record:
             events[b].append(TaskEvent(j, n, tb, end))
@@ -793,7 +900,7 @@ def simulate_batch(
             t_task = np.array(
                 [heaps[b][0][0] if heaps[b] else np.inf for b in range(B)]
             )
-            t_next = np.minimum(t_task, t_flow)
+            t_next = np.minimum(np.minimum(t_task, t_flow), t_break)
             if bool((alive & ~np.isfinite(t_next)).any()):  # pragma: no cover
                 raise RuntimeError("no progress: flows active but zero rates")
 
@@ -806,6 +913,23 @@ def simulate_batch(
                 for b, e in zip(rows[fin_mask].tolist(), cols[fin_mask].tolist()):
                     fins.setdefault(b, []).append(e)
             np.copyto(t, t_next, where=alive)
+
+            if trace is not None:
+                # mirror the scalar engine's ordering: segments advance
+                # before this event's completion handlers, so tasks started
+                # AT a boundary already see the new slowdown (and the next
+                # rate computation the new bandwidth).
+                for b in np.nonzero(alive & (t >= t_break))[0].tolist():
+                    s = seg_b[b]
+                    while s + 1 < n_segs and seg_times[s + 1] <= t[b]:
+                        s += 1
+                    seg_b[b] = s
+                    bw_in_mat[b] = trace.bw_in[s]
+                    bw_out_mat[b] = trace.bw_out[s]
+                    slow_l[b] = np.asarray(trace.slow[s], dtype=np.float64).tolist()
+                    t_break[b] = seg_times[s + 1] if s + 1 < n_segs else np.inf
+                    dirty[b] = True
+                    topo_caches[b].clear()  # rates now depend on the new bw
 
             for b in np.nonzero(alive)[0].tolist():
                 tb = float(t_next[b])

@@ -43,16 +43,44 @@ def simulate_slotted(
     realization: Realization,
     slot: float = 1.0,
     max_slots: int = 2_000_000,
+    trace=None,
 ) -> SlottedResult:
+    """``trace`` (repro.dynamics.traces.BandwidthTrace) makes the oracle
+    time-varying: slot ``t`` transmits with the bandwidth of the segment
+    containing the slot's start time ``(t-1)*slot``, and a task started in
+    slot ``t`` runs for ``ceil(exec * slow / slot)`` slots with the
+    slowdown sampled at its start — the same start-time semantics as the
+    event engine, so agreement still tightens as slot -> 0 (boundaries
+    contribute at most one slot of discretisation error each)."""
     N = realization.n_iters
     J, E = workload.J, workload.E
     y = placement.y
     src_t, dst_t, lag = workload.edge_src, workload.edge_dst, workload.edge_lag
     vol = realization.volumes
+    ex = realization.exec_times
     # exec times are rounded UP to whole slots, as Alg. 1's p_j are slots
     p = np.maximum(1, np.ceil(realization.exec_times / slot).astype(np.int64))
     bw_in = cluster.bw_in * slot  # GB transmittable per slot
     bw_out = cluster.bw_out * slot
+    seg, n_segs, seg_times = 0, 1, None
+    slow_cur = None
+    if trace is not None:
+        if trace.bw_in.shape[1] != cluster.M:
+            raise ValueError(
+                f"trace covers {trace.bw_in.shape[1]} machines but the "
+                f"cluster has {cluster.M} — rebuild the trace after "
+                "membership changes"
+            )
+        seg_times = np.asarray(trace.times, dtype=np.float64)
+        n_segs = len(seg_times)
+        bw_in = np.asarray(trace.bw_in[0], dtype=np.float64) * slot
+        bw_out = np.asarray(trace.bw_out[0], dtype=np.float64) * slot
+        slow_cur = np.asarray(trace.slow[0], dtype=np.float64)
+
+    def p_of(j: int, n: int) -> int:
+        if slow_cur is None:
+            return int(p[j, n - 1])
+        return max(1, int(np.ceil(ex[j, n - 1] * slow_cur[y[j]] / slot)))
     local = y[src_t] == y[dst_t]
     last_instance = N - lag
 
@@ -88,10 +116,19 @@ def simulate_slotted(
     for j in range(J):
         if workload.kinds[j] == 0:  # store
             task_start[(j, 1)] = 1
-            running_until[j] = 1 + int(p[j, 0]) - 1
+            running_until[j] = 1 + p_of(j, 1) - 1
             running_iter[j] = 1
 
     for t in range(1, max_slots):
+        # slot t spans ((t-1)*slot, t*slot]; sample the trace at its start
+        if trace is not None:
+            t_slot = (t - 1) * slot
+            while seg + 1 < n_segs and seg_times[seg + 1] <= t_slot:
+                seg += 1
+                bw_in = np.asarray(trace.bw_in[seg], dtype=np.float64) * slot
+                bw_out = np.asarray(trace.bw_out[seg], dtype=np.float64) * slot
+                slow_cur = np.asarray(trace.slow[seg], dtype=np.float64)
+
         # lines 4-5: convergence check
         if bool(np.all(done_iter >= N)) and not f_act and not f_pend:
             return SlottedResult(makespan=float(t - 1), task_start=task_start)
@@ -123,7 +160,7 @@ def simulate_slotted(
             n = int(done_iter[j]) + 1
             if available(j, n):
                 task_start[(j, n)] = t
-                running_until[j] = t + int(p[j, n - 1]) - 1
+                running_until[j] = t + p_of(j, n) - 1
                 running_iter[j] = n
 
         # lines 18-21: transmit for one slot with degree-balanced rates

@@ -301,6 +301,7 @@ class _Chain:
         group_moves: float,
         anneal: bool,
         extra_violation: Optional[Callable[[Placement], float]] = None,
+        move_cost: Optional[Callable[[Placement], float]] = None,
     ) -> None:
         self.workload = workload
         self.cluster = cluster
@@ -316,6 +317,7 @@ class _Chain:
         self.group_moves = group_moves
         self.anneal = anneal
         self.extra_violation = extra_violation
+        self.move_cost = move_cost
 
         self.rng = np.random.default_rng(seed)
         groups = _group_indices(workload)
@@ -354,6 +356,13 @@ class _Chain:
         v = violation_fraction(self.cluster, self.demands, p)
         if self.extra_violation is not None:
             v += self.extra_violation(p)
+        if self.move_cost is not None:
+            # one-time re-plan cost (state bytes moved over current NICs)
+            # joins the steady-state makespan BEFORE the violation scaling,
+            # so the search trades migration against schedule quality on
+            # the same seconds axis; with the hook set, every reported
+            # "makespan" (best_makespan, traces) is this combined objective
+            t = t + self.move_cost(p)
         c = t * (1.0 + v)
         self.cache[p.key()] = (t, c)
         return t, c
@@ -483,6 +492,7 @@ def etp_search(
     group_moves: float = 0.35,
     anneal: bool = True,
     extra_violation: Optional[Callable[[Placement], float]] = None,
+    move_cost: Optional[Callable[[Placement], float]] = None,
 ) -> ETPResult:
     """MCMC search (Alg. 3). ``budget`` = I transitions; ``mu`` = relaxed
     capacity factor (eq. 22); ``beta`` = temperature (eq. 23).
@@ -513,12 +523,20 @@ def etp_search(
     ``extra_violation`` (placement -> fraction) extends eq. 21's capacity
     penalty with costs the demand matrix cannot express — e.g. the feature
     cache's per-machine memory reservation (repro.cache.planner), which
-    depends on WHERE samplers land, not just how many there are."""
+    depends on WHERE samplers land, not just how many there are.
+
+    ``move_cost`` (placement -> seconds) adds a one-time migration bill to
+    every candidate's objective — repro.dynamics.replan uses it to
+    warm-start re-planning from an incumbent placement while charging each
+    candidate for the state bytes it would move over the current NICs.
+    With the hook set, ``best_makespan`` IS makespan + move cost (the
+    combined objective the search minimised)."""
     t0 = time.perf_counter()
     chain = _Chain(
         workload, cluster, budget=budget, mu=mu, beta=beta, sim_iters=sim_iters,
         sim_draws=sim_draws, seed=seed, init=init, policy=policy, cost_fn=cost_fn,
         group_moves=group_moves, anneal=anneal, extra_violation=extra_violation,
+        move_cost=move_cost,
     )
     chain.begin(chain.measure_scalar(chain.cur))
     for z in range(budget):
@@ -551,7 +569,7 @@ def _chain_defaults() -> Dict[str, object]:
         k: sig.parameters[k].default
         for k in (
             "mu", "beta", "sim_iters", "sim_draws", "policy", "cost_fn",
-            "group_moves", "anneal", "extra_violation",
+            "group_moves", "anneal", "extra_violation", "move_cost",
         )
     }
 
@@ -673,26 +691,24 @@ def etp_multichain(
     return best_r
 
 
-def replan_after_failure(
+def remap_after_leave(
     workload: Workload,
     cluster: ClusterSpec,
     placement: Placement,
-    failed_machine: int,
-    *,
-    budget: int = 300,
-    seed: int = 0,
-    **kw,
-) -> ETPResult:
-    """Fault-tolerance path: machine fails -> move its orphaned tasks to the
-    surviving machine with most residual capacity, then warm-start ETP from
-    that placement on the reduced cluster.
+    leaving_machine: int,
+) -> Tuple[ClusterSpec, Placement]:
+    """Incumbent-preserving remap when a machine leaves (fails or is
+    decommissioned): surviving tasks keep their machines (indices shifted
+    onto the reduced cluster) and the orphaned tasks greedily land on the
+    least-loaded survivors.  This is the warm start every leave-path
+    re-plan begins from.
 
     Note graph stores are re-pinned: the failed machine's partition is
     re-hosted on the machine with the most free memory (in practice it is
     restored from replicated storage); its tasks join the movable set."""
-    survivors = [m for m in range(cluster.M) if m != failed_machine]
+    survivors = [m for m in range(cluster.M) if m != leaving_machine]
     remap = {m: i for i, m in enumerate(survivors)}
-    new_cluster = cluster.without_machine(failed_machine)
+    new_cluster = cluster.without_machine(leaving_machine)
     demands = new_cluster.demand_matrix(workload.tasks)
     y = np.array([remap.get(int(m), -1) for m in placement.y], dtype=np.int64)
     usage = np.zeros((new_cluster.M, new_cluster.R))
@@ -711,7 +727,24 @@ def replan_after_failure(
         if not placed:  # pragma: no cover - extreme overload
             y[j] = int(head[0])
             usage[int(head[0])] += demands[j]
-    warm = Placement(y)
+    return new_cluster, Placement(y)
+
+
+def replan_after_failure(
+    workload: Workload,
+    cluster: ClusterSpec,
+    placement: Placement,
+    failed_machine: int,
+    *,
+    budget: int = 300,
+    seed: int = 0,
+    **kw,
+) -> ETPResult:
+    """Fault-tolerance path: machine fails -> ``remap_after_leave`` -> ETP
+    warm-started from the remapped incumbent on the reduced cluster."""
+    new_cluster, warm = remap_after_leave(
+        workload, cluster, placement, failed_machine
+    )
     return etp_search(
         workload, new_cluster, budget=budget, seed=seed, init=warm, **kw
     )

@@ -90,6 +90,20 @@ class Realization:
     def n_iters(self) -> int:
         return self.volumes.shape[1]
 
+    def window(self, start: int, stop: Optional[int] = None) -> "Realization":
+        """Iterations ``[start, stop)`` (0-based) as their own Realization.
+
+        Interval-by-interval re-planning (repro.dynamics.scenario) slices
+        ONE realization of the full horizon so every strategy sees the
+        same draws per interval regardless of where its re-plans land."""
+        stop = self.n_iters if stop is None else stop
+        if not 0 <= start < stop <= self.n_iters:
+            raise ValueError(f"bad window [{start}, {stop}) for N={self.n_iters}")
+        return Realization(
+            volumes=self.volumes[:, start:stop].copy(),
+            exec_times=self.exec_times[:, start:stop].copy(),
+        )
+
 
 @dataclass
 class Workload:

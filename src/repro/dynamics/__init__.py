@@ -1,0 +1,33 @@
+"""Dynamics tier: time-varying clusters + incremental re-planning.
+
+``traces``    — piecewise-constant bandwidth/straggler realizations the
+                engines consume natively (``simulate(..., trace=...)``);
+``replan``    — ``Replanner``: warm-started, migration-aware, cache-warm
+                incremental ETP on drift / epoch / join / leave;
+``scenario``  — strategy evaluation (static vs replan vs oracle) against
+                ground-truth drift traces.
+"""
+from .replan import (
+    ReplanConfig,
+    ReplanRecord,
+    Replanner,
+    default_task_state_gb,
+    make_move_cost,
+    migration_time,
+)
+from .scenario import (
+    STRATEGIES,
+    IntervalOutcome,
+    ScenarioOutcome,
+    run_scenario,
+)
+from .traces import (
+    BandwidthTrace,
+    DynamicsEvent,
+    constant_trace,
+    drift_trace,
+    relative_bw_drift,
+    trace_from_events,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

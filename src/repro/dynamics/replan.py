@@ -1,0 +1,355 @@
+"""Incremental re-planning: warm-started ETP with an explicit migration bill.
+
+The paper plans once and schedules online forever after.  Under sustained
+bandwidth drift, stragglers and elastic membership that single plan goes
+stale — but planning from scratch at every disturbance both wastes search
+budget (the incumbent is usually nearly right) and ignores that *moving*
+tasks costs real time: a re-plan that relocates a graph store hauls its
+partition over the very NICs that just got slower.
+
+``Replanner`` closes both gaps:
+
+  * **warm start** — every re-plan seeds ETP from the incumbent placement
+    (``etp_search(init=...)``), so the chain spends its budget refining
+    rather than rediscovering; the incumbent's own cost is always
+    evaluated, which makes "re-plan with zero migration cost" provably
+    never worse in objective than keeping the incumbent (property-tested);
+  * **migration-aware objective** — candidates are charged
+    ``makespan + migration_weight * migration_time`` through
+    ``etp_search(move_cost=...)``: the state bytes of every task that
+    changes machine, serialised per NIC at the *current* bandwidths;
+  * **warm cache state** — when a feature-cache tier exists
+    (``hit_model``), the objective's hit curves continue from the previous
+    interval's end (``HitModel.warm_started``) instead of pretending every
+    re-plan starts cold;
+  * **elastic membership** — machine leave (= failure) and join are the
+    same re-plan path with the cluster edited first; per-machine
+    heterogeneous cache budgets (``CacheConfig.cache_gb`` as a vector)
+    shrink and grow with it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from ..core.cluster import ClusterSpec, Machine, Placement
+from ..core.placement import ETPResult, etp_search, remap_after_leave
+from ..core.workload import Workload
+from .traces import relative_bw_drift
+
+
+RESTART_GB = 0.05  # process image / warm buffers any relocated task re-ships
+
+
+def default_task_state_gb(workload: Workload, cluster: ClusterSpec) -> np.ndarray:
+    """[J] GB that migrating each task moves over the network, by kind.
+
+    * graph stores carry their PARTITION — the memory demand is the
+      honest proxy (in practice restored from replicated storage, still
+      over the same NICs);
+    * workers / PSs carry model + optimizer state, sized from the job's
+      own gradient volumes (3x a full gradient: params, moments, copy);
+    * samplers are stateless beyond a small restart image — they re-read
+      from the graph store, nothing bulk moves with them.
+
+    Memory DEMAND is deliberately not the movable-state proxy for
+    samplers/workers: working buffers are re-allocated, not shipped.
+    Callers with real measurements pass their own vector."""
+    state = np.full(workload.J, RESTART_GB)
+    mem_r = (
+        cluster.resource_types.index("mem")
+        if "mem" in cluster.resource_types
+        else None
+    )
+    demands = cluster.demand_matrix(workload.tasks)
+    grad_out = np.zeros(workload.J)  # worker -> sum of its gradient volumes
+    grad_in = np.zeros(workload.J)  # ps -> sum of shard volumes it serves
+    for e, edge in enumerate(workload.edges):
+        v = float(workload.traffic.mean_volume[e])
+        if edge.kind in ("w2p", "ring"):
+            grad_out[edge.src] += v
+        if edge.kind == "w2p":
+            grad_in[edge.dst] += v
+    for j, t in enumerate(workload.tasks):
+        if t.kind == "store":
+            if mem_r is not None:
+                state[j] += demands[j, mem_r]
+        elif t.kind == "worker":
+            state[j] += 3.0 * grad_out[j]
+        elif t.kind == "ps":
+            state[j] += 3.0 * grad_in[j]
+    return state
+
+
+def migration_time(
+    cluster: ClusterSpec,
+    old_y: np.ndarray,
+    new_y: np.ndarray,
+    state_gb: np.ndarray,
+) -> float:
+    """Seconds to move every relocated task's state over current NICs.
+
+    Transfers serialise per NIC and run in parallel across NICs, so the
+    bill is the slowest machine's egress or ingress drain time — the same
+    bottleneck structure OES itself schedules under."""
+    moved = (new_y != old_y) & (old_y >= 0)
+    if not moved.any():
+        return 0.0
+    out_gb = np.bincount(
+        old_y[moved], weights=state_gb[moved], minlength=cluster.M
+    )
+    in_gb = np.bincount(
+        new_y[moved], weights=state_gb[moved], minlength=cluster.M
+    )
+    out_s = out_gb / np.maximum(cluster.bw_out, 1e-9)
+    in_s = in_gb / np.maximum(cluster.bw_in, 1e-9)
+    return float(max(out_s.max(), in_s.max()))
+
+
+def make_move_cost(
+    cluster: ClusterSpec,
+    incumbent: Placement,
+    state_gb: np.ndarray,
+    weight: float = 1.0,
+) -> Callable[[Placement], float]:
+    """The ``etp_search(move_cost=...)`` hook: candidate -> weighted
+    migration seconds away from ``incumbent`` on ``cluster``'s NICs."""
+    old_y = incumbent.y.copy()
+
+    def cost(p: Placement) -> float:
+        return weight * migration_time(cluster, old_y, p.y, state_gb)
+
+    return cost
+
+
+@dataclass
+class ReplanConfig:
+    """Knobs of the incremental re-planner."""
+
+    drift_threshold: float = 0.25  # max relative NIC change tolerated
+    budget: int = 250  # warm ETP transitions per re-plan
+    sim_iters: int = 12
+    sim_draws: int = 1
+    policy: str = "oes"
+    migration_weight: float = 1.0  # 0 disables the migration term
+    seed: int = 0
+
+
+@dataclass
+class ReplanRecord:
+    """Audit row for one re-plan decision (taken or declined)."""
+
+    trigger: str  # "epoch" | "drift" | "leave" | "join" | "forced"
+    replanned: bool
+    drift: float
+    moved_tasks: int = 0
+    migration_gb: float = 0.0
+    migration_s: float = 0.0
+    objective: float = float("nan")  # makespan + weighted migration
+    etp: Optional[ETPResult] = None
+
+
+@dataclass
+class Replanner:
+    """Carries the incumbent (placement, cluster, cache state) across plan
+    intervals and re-plans incrementally on epoch boundaries, detected
+    drift, or membership changes.
+
+    ``train.fault_tolerance.FailureController`` routes machine failures
+    through ``on_leave``; ``repro.dynamics.scenario`` drives the epoch /
+    drift path against ground-truth bandwidth traces."""
+
+    workload: Workload
+    cluster: ClusterSpec
+    placement: Placement
+    config: ReplanConfig = field(default_factory=ReplanConfig)
+    state_gb: Optional[np.ndarray] = None
+    hit_model: Optional[object] = None  # repro.cache.HitModel
+    cache_config: Optional[object] = None  # repro.cache.CacheConfig
+    records: List[ReplanRecord] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.state_gb is None:
+            self.state_gb = default_task_state_gb(self.workload, self.cluster)
+        self.state_gb = np.asarray(self.state_gb, dtype=np.float64)
+        self._planned_bw_in = self.cluster.bw_in.copy()
+        self._planned_bw_out = self.cluster.bw_out.copy()
+
+    # -- drift ------------------------------------------------------------
+    def drift(self, bw_in: np.ndarray, bw_out: np.ndarray) -> float:
+        return relative_bw_drift(
+            self._planned_bw_in, self._planned_bw_out, bw_in, bw_out
+        )
+
+    def should_replan(self, bw_in: np.ndarray, bw_out: np.ndarray) -> bool:
+        return self.drift(bw_in, bw_out) > self.config.drift_threshold
+
+    # -- cache state ------------------------------------------------------
+    def advance_cache(self, served_iters: int) -> None:
+        """The previous interval served ``served_iters`` iterations: the
+        deployed caches kept their contents, so the NEXT plan's hit curves
+        continue from there."""
+        if self.hit_model is not None and served_iters > 0:
+            self.hit_model = self.hit_model.warm_started(served_iters)
+
+    def _cost_fn(self, cluster: ClusterSpec):
+        """(cost_fn, extra_violation) for ETP on ``cluster``: cache-aware
+        (warm model + per-machine reservations) when a cache tier exists,
+        engine defaults otherwise."""
+        if self.hit_model is None:
+            return None, None
+        from ..cache.planner import cache_cost_fns, make_reservation_fn
+
+        scalar_cost, _, _ = cache_cost_fns(
+            self.workload, cluster, self.hit_model,
+            sim_iters=self.config.sim_iters, sim_draws=self.config.sim_draws,
+            seed=self.config.seed, policy=self.config.policy,
+        )
+        extra = (
+            make_reservation_fn(self.workload, cluster, self.cache_config)
+            if self.cache_config is not None
+            else None
+        )
+        return scalar_cost, extra
+
+    # -- the re-plan core -------------------------------------------------
+    def replan(
+        self,
+        cluster_now: Optional[ClusterSpec] = None,
+        *,
+        trigger: str = "forced",
+        migration_free: bool = False,
+        budget: Optional[int] = None,
+        amortize_over: int = 1,
+    ) -> ReplanRecord:
+        """Warm-started ETP from the incumbent on ``cluster_now`` (defaults
+        to the stored cluster, i.e. membership unchanged), objective =
+        makespan + weighted migration time.  Commits the winner.
+
+        ``amortize_over``: the number of plan intervals the new placement
+        is expected to persist for.  The simulated makespan covers ONE
+        interval but migration is paid once, so the objective charges
+        ``migration / amortize_over`` — without this a late-run re-plan
+        correctly refuses moves a long remaining run would easily repay."""
+        cfg = self.config
+        cluster_now = cluster_now or self.cluster
+        incumbent = self.placement.copy()
+        weight = (
+            0.0
+            if migration_free
+            else cfg.migration_weight / max(int(amortize_over), 1)
+        )
+        move_cost = (
+            make_move_cost(cluster_now, incumbent, self.state_gb, weight)
+            if weight > 0
+            else None
+        )
+        cost_fn, extra = self._cost_fn(cluster_now)
+        res = etp_search(
+            self.workload,
+            cluster_now,
+            budget=budget if budget is not None else cfg.budget,
+            seed=cfg.seed,
+            init=incumbent,
+            policy=cfg.policy,
+            sim_iters=cfg.sim_iters,
+            sim_draws=cfg.sim_draws,
+            cost_fn=cost_fn,
+            extra_violation=extra,
+            move_cost=move_cost,
+        )
+        moved = (res.placement.y != incumbent.y) & (incumbent.y >= 0)
+        same_m = len(cluster_now.bw_in) == len(self._planned_bw_in)
+        rec = ReplanRecord(
+            trigger=trigger,
+            replanned=True,
+            # drift is undefined across a membership change (the machine
+            # sets differ); the trigger already names the cause there
+            drift=self.drift(cluster_now.bw_in, cluster_now.bw_out)
+            if same_m
+            else float("nan"),
+            moved_tasks=int(moved.sum()),
+            migration_gb=float(self.state_gb[moved].sum()),
+            migration_s=migration_time(
+                cluster_now, incumbent.y, res.placement.y, self.state_gb
+            ),
+            objective=res.best_makespan,
+            etp=res,
+        )
+        self.cluster = cluster_now
+        self.placement = res.placement
+        self._planned_bw_in = cluster_now.bw_in.copy()
+        self._planned_bw_out = cluster_now.bw_out.copy()
+        self.records.append(rec)
+        return rec
+
+    def observe(
+        self,
+        bw_in: np.ndarray,
+        bw_out: np.ndarray,
+        *,
+        served_iters: int = 0,
+        trigger: str = "epoch",
+        remaining_intervals: int = 1,
+    ) -> ReplanRecord:
+        """Epoch-boundary hook: advance warm cache state, threshold the
+        observed bandwidth drift, re-plan against the current snapshot if
+        it exceeds the tolerance — otherwise keep the incumbent (recorded
+        as a declined decision).  ``remaining_intervals`` amortises the
+        migration bill over the plan's expected lifetime (see
+        ``replan``)."""
+        self.advance_cache(served_iters)
+        d = self.drift(bw_in, bw_out)
+        if d > self.config.drift_threshold:
+            return self.replan(
+                self.cluster.with_bandwidth(bw_in, bw_out),
+                trigger="drift",
+                amortize_over=remaining_intervals,
+            )
+        rec = ReplanRecord(trigger=trigger, replanned=False, drift=d)
+        self.records.append(rec)
+        return rec
+
+    # -- elastic membership ----------------------------------------------
+    def on_leave(self, machine: int) -> ReplanRecord:
+        """Machine leave/failure: remap the orphaned tasks onto the
+        survivors (``remap_after_leave``), shrink per-machine cache
+        budgets, then run the standard warm re-plan.  The forced moves off
+        the dead machine are already inside the warm start, so the
+        migration term only charges *discretionary* moves beyond them."""
+        new_cluster, warm = remap_after_leave(
+            self.workload, self.cluster, self.placement, machine
+        )
+        self.placement = warm
+        self._drop_cache_budget(machine)
+        return self.replan(new_cluster, trigger="leave")
+
+    def on_join(self, machine: Machine, *, cache_gb: float = 0.0) -> ReplanRecord:
+        """Machine join: the incumbent stays valid (indices unchanged),
+        the new machine arrives empty with its own cache budget
+        (heterogeneous by construction), and the warm re-plan decides what
+        is worth moving onto it given the migration bill."""
+        new_cluster = self.cluster.with_machine(machine)
+        self._grow_cache_budget(new_cluster.M, cache_gb)
+        return self.replan(new_cluster, trigger="join")
+
+    def _drop_cache_budget(self, machine: int) -> None:
+        if self.cache_config is None:
+            return
+        gb = np.asarray(self.cache_config.cache_gb, dtype=np.float64)
+        if gb.ndim == 0:
+            return  # scalar broadcasts to any M
+        self.cache_config = dataclasses.replace(
+            self.cache_config, cache_gb=np.delete(gb, machine)
+        )
+
+    def _grow_cache_budget(self, new_m: int, cache_gb: float) -> None:
+        if self.cache_config is None:
+            return
+        gb = self.cache_config.cache_gb_per_machine(new_m - 1)
+        self.cache_config = dataclasses.replace(
+            self.cache_config, cache_gb=np.append(gb, float(cache_gb))
+        )

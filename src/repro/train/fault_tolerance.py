@@ -7,8 +7,10 @@ Pieces (all exercised by tests/test_fault_tolerance.py):
   * failure handling — ``FailureController`` wraps the training loop:
     on a (simulated or real) host failure it (1) restores the latest
     checkpoint, (2) re-plans task placement on the surviving machines via
-    core.placement.replan_after_failure (warm-started ETP — orders of
-    magnitude fewer transitions than planning from scratch), (3) resumes;
+    ``repro.dynamics.replan.Replanner.on_leave`` (warm-started,
+    migration-aware ETP — orders of magnitude fewer transitions than
+    planning from scratch; failure is just the "machine leave" case of
+    the general incremental re-plan path), (3) resumes;
   * straggler mitigation — at the flow level OES's degree-based rate
     sharing already prevents one slow transfer from starving a NIC
     (Lemma 1); at the step level ``StragglerPolicy`` tracks a robust
@@ -20,6 +22,7 @@ Pieces (all exercised by tests/test_fault_tolerance.py):
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -27,8 +30,9 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from ..core.cluster import ClusterSpec, Placement
-from ..core.placement import etp_search, replan_after_failure
+from ..core.placement import etp_search
 from ..core.workload import Workload
+from ..dynamics.replan import ReplanConfig, Replanner
 from . import checkpoint as ckpt_mod
 
 
@@ -53,30 +57,63 @@ class StragglerPolicy:
 
 @dataclass
 class FailureController:
-    """Drives restore -> re-plan -> resume on machine failure."""
+    """Drives restore -> re-plan -> resume on machine failure.
+
+    Failure handling is one case of the general incremental re-plan path:
+    the controller owns a ``Replanner`` whose incumbent tracks the live
+    placement, so a failure is ``on_leave`` (remap orphans -> warm ETP
+    with the migration bill in the objective) and an elastic scale-up is
+    ``on_join`` — both leave the replanner's warm cache state intact."""
 
     workload: Workload
     cluster: ClusterSpec
     placement: Placement
     ckpt_dir: str
     replan_budget: int = 300
+    hit_model: Optional[object] = None  # repro.cache.HitModel
+    cache_config: Optional[object] = None  # repro.cache.CacheConfig
 
     failures: List[int] = field(default_factory=list)
+
+    def replanner(self, seed: int = 0) -> Replanner:
+        """The controller's ONE live re-planner: created on first use and
+        kept across calls so its audit records, drift baseline and warm
+        cache state survive every failure/join; only the incumbent and
+        the search seed are refreshed per call."""
+        rp = getattr(self, "_replanner", None)
+        if rp is None:
+            rp = Replanner(
+                self.workload,
+                self.cluster,
+                self.placement,
+                config=ReplanConfig(budget=self.replan_budget, seed=seed),
+                hit_model=self.hit_model,
+                cache_config=self.cache_config,
+            )
+            self._replanner = rp
+        elif rp.config.seed != seed:
+            rp.config = dataclasses.replace(rp.config, seed=seed)
+        rp.cluster = self.cluster
+        rp.placement = self.placement
+        return rp
 
     def on_failure(self, machine: int, seed: int = 0):
         """Returns (new_cluster, new_placement, replan_result)."""
         self.failures.append(machine)
-        res = replan_after_failure(
-            self.workload,
-            self.cluster,
-            self.placement,
-            machine,
-            budget=self.replan_budget,
-            seed=seed,
-        )
-        self.cluster = self.cluster.without_machine(machine)
-        self.placement = res.placement
-        return self.cluster, self.placement, res
+        rp = self.replanner(seed)
+        rec = rp.on_leave(machine)
+        self.cluster = rp.cluster
+        self.placement = rp.placement
+        return self.cluster, self.placement, rec.etp
+
+    def on_join(self, machine, seed: int = 0, cache_gb: float = 0.0):
+        """Elastic scale-up through the same re-plan path; ``cache_gb``
+        is the joining machine's feature-cache budget (heterogeneous)."""
+        rp = self.replanner(seed)
+        rec = rp.on_join(machine, cache_gb=cache_gb)
+        self.cluster = rp.cluster
+        self.placement = rp.placement
+        return self.cluster, self.placement, rec.etp
 
     def restore(self, like_state):
         latest = ckpt_mod.latest_checkpoint(self.ckpt_dir)

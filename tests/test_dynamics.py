@@ -1,0 +1,422 @@
+"""Dynamics tier: time-varying traces, engine parity, incremental re-planning.
+
+Certificates pinned here (ISSUE 3 acceptance):
+  * scalar/batched engine parity is BIT-IDENTICAL on dynamic bandwidth
+    traces for all five rate policies;
+  * the slotted Alg.-1 oracle agrees with the event engine on a dynamic
+    trace within discretisation error, tightening as slot -> 0;
+  * a re-plan with zero migration cost is never worse in objective than
+    the incumbent; drift thresholds trigger exactly when exceeded;
+  * machine join/leave run through the same warm re-plan path
+    (FailureController is now a client of Replanner) and the warm path
+    reaches cold-replan quality with fewer evaluations;
+  * warm-started cache state: hit curves continue across re-plan
+    intervals instead of restarting cold.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_gnn_workload,
+    expected_makespan,
+    heterogeneous_cluster,
+    ifs_placement,
+    simulate,
+    simulate_batch,
+    simulate_slotted,
+)
+from repro.core.cluster import Machine
+from repro.core.placement import etp_search
+from repro.dynamics import (
+    BandwidthTrace,
+    DynamicsEvent,
+    ReplanConfig,
+    Replanner,
+    constant_trace,
+    drift_trace,
+    migration_time,
+    run_scenario,
+    trace_from_events,
+)
+
+ALL_POLICIES = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")
+
+
+def small_job(seed=0, n_iters=5):
+    rng = np.random.default_rng(seed)
+    return build_gnn_workload(
+        n_stores=int(rng.integers(2, 4)),
+        n_workers=int(rng.integers(1, 4)),
+        samplers_per_worker=int(rng.integers(1, 3)),
+        n_ps=1,
+        n_iters=n_iters,
+        store_to_sampler_gb=float(rng.uniform(0.2, 2.0)),
+        sampler_to_worker_gb=float(rng.uniform(0.2, 1.0)),
+        grad_gb=float(rng.uniform(0.05, 0.4)),
+        store_exec_s=0.3,
+        sampler_exec_s=0.4,
+        worker_exec_s=0.8,
+        ps_exec_s=0.2,
+        pmr=1.3,
+    )
+
+
+def replan_job(n_iters=30):
+    return build_gnn_workload(
+        n_stores=3, n_workers=3, samplers_per_worker=2, n_ps=1,
+        n_iters=n_iters, store_to_sampler_gb=1.0, sampler_to_worker_gb=0.5,
+        grad_gb=0.1, store_exec_s=0.1, sampler_exec_s=0.2,
+        worker_exec_s=0.4, ps_exec_s=0.1, pmr=1.2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+def test_trace_validation_and_lookup():
+    cluster = heterogeneous_cluster(3, seed=0)
+    tr = trace_from_events(
+        cluster,
+        [
+            DynamicsEvent(t0=2.0, t1=5.0, machine=1, bw_scale=0.5),
+            DynamicsEvent(t0=4.0, machine=None, bw_scale=0.8, slowdown=1.25),
+        ],
+    )
+    assert tr.times[0] == 0.0 and tr.S == 4  # cuts at 0, 2, 4, 5
+    # overlap composes multiplicatively on machine 1 in [4, 5)
+    s = tr.segment_at(4.5)
+    assert tr.bw_in[s, 1] == pytest.approx(cluster.bw_in[1] * 0.5 * 0.8)
+    assert tr.slow[s, 1] == pytest.approx(1.25)
+    # after the episode ends only the permanent shift remains
+    bw_in, _ = tr.bw_at(100.0)
+    assert bw_in[1] == pytest.approx(cluster.bw_in[1] * 0.8)
+    with pytest.raises(ValueError):
+        BandwidthTrace(
+            times=np.array([1.0]), bw_in=np.ones((1, 3)), bw_out=np.ones((1, 3))
+        )
+    with pytest.raises(ValueError):
+        trace_from_events(cluster, [DynamicsEvent(t0=3.0, t1=2.0)])
+
+
+def test_trace_window_reanchors():
+    cluster = heterogeneous_cluster(2, seed=1)
+    tr = trace_from_events(
+        cluster, [DynamicsEvent(t0=3.0, t1=7.0, machine=0, bw_scale=0.5)]
+    )
+    w = tr.window(5.0)
+    assert w.times[0] == 0.0
+    bw0, _ = w.bw_at(0.0)  # time 5 of the original: inside the episode
+    assert bw0[0] == pytest.approx(cluster.bw_in[0] * 0.5)
+    bw2, _ = w.bw_at(2.5)  # time 7.5: episode over
+    assert bw2[0] == pytest.approx(cluster.bw_in[0])
+
+
+def test_stale_trace_rejected_after_membership_change():
+    """A trace built for M machines must not silently misalign after a
+    join/leave — every engine raises instead."""
+    wl = small_job(seed=0)
+    cluster = heterogeneous_cluster(3, seed=0)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    stale = constant_trace(heterogeneous_cluster(4, seed=0))
+    with pytest.raises(ValueError, match="membership"):
+        simulate(wl, cluster, p, r, trace=stale)
+    with pytest.raises(ValueError, match="membership"):
+        simulate_batch(wl, cluster, [p], [r], trace=stale)
+    with pytest.raises(ValueError, match="membership"):
+        simulate_slotted(wl, cluster, p, r, trace=stale)
+
+
+def test_constant_trace_matches_static_engine():
+    wl = small_job(seed=1)
+    cluster = heterogeneous_cluster(3, seed=1)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    ref = simulate(wl, cluster, p, r, policy="oes", record=True)
+    dyn = simulate(
+        wl, cluster, p, r, policy="oes", record=True,
+        trace=constant_trace(cluster),
+    )
+    assert ref.makespan == dyn.makespan
+    assert ref.task_events == dyn.task_events
+    assert ref.flow_log == dyn.flow_log
+
+
+# ---------------------------------------------------------------------------
+# engine parity on dynamic traces (acceptance: bit-identical)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_batch_matches_scalar_on_dynamic_trace(policy):
+    """Batch-of-4 schedules == scalar schedules, bitwise, on a drift trace
+    with bandwidth shifts AND stragglers, for all five rate policies."""
+    for seed in range(3):
+        wl = small_job(seed=seed)
+        cluster = heterogeneous_cluster(3, seed=seed)
+        try:
+            placements = [ifs_placement(wl, cluster, seed=s) for s in range(4)]
+        except ValueError:
+            continue
+        reals = [wl.realize(seed=s) for s in range(4)]
+        tr = drift_trace(cluster, horizon_s=8.0, n_segments=5, seed=seed)
+        batch = simulate_batch(
+            wl, cluster, placements, reals, policy=policy, record=True, trace=tr
+        )
+        for b, (p, r) in enumerate(zip(placements, reals)):
+            ref = simulate(
+                wl, cluster, p, r, policy=policy, record=True, trace=tr
+            )
+            assert ref.makespan == batch[b].makespan, (policy, seed, b)
+            assert ref.n_events == batch[b].n_events, (policy, seed, b)
+            assert ref.task_events == batch[b].task_events, (policy, seed, b)
+            assert ref.flow_log == batch[b].flow_log, (policy, seed, b)
+
+
+def test_slotted_oracle_agrees_on_dynamic_trace():
+    """Alg.-1 transcription vs strict-rule event engine on a trace with a
+    bandwidth dip, a permanent shift and a straggler episode: agreement
+    within discretisation error, tightening as slot -> 0."""
+    wl = small_job(seed=4)
+    cluster = heterogeneous_cluster(3, seed=4)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=2)
+    tr = trace_from_events(
+        cluster,
+        [
+            DynamicsEvent(t0=2.0, t1=6.0, machine=0, bw_scale=0.4, slowdown=1.5),
+            DynamicsEvent(t0=4.0, machine=None, bw_scale=0.7),
+        ],
+    )
+    ev = simulate(wl, cluster, p, r, policy="oes_strict", trace=tr).makespan
+    last_rel = np.inf
+    for slot, tol in ((0.25, 0.35), (0.05, 0.1), (0.01, 0.02)):
+        sl = simulate_slotted(wl, cluster, p, r, slot=slot, trace=tr).makespan * slot
+        rel = abs(sl - ev) / ev
+        assert rel <= tol, (slot, sl, ev)
+        assert rel <= last_rel + 1e-9  # converging
+        last_rel = rel
+
+
+def test_bandwidth_dip_slows_job_and_recovery_matters():
+    """Sanity on semantics: a mid-run bandwidth dip increases makespan; a
+    dip that ends sooner hurts less."""
+    wl = small_job(seed=2)
+    cluster = heterogeneous_cluster(3, seed=2)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    base = simulate(wl, cluster, p, r, policy="oes").makespan
+    long_dip = trace_from_events(
+        cluster, [DynamicsEvent(t0=1.0, t1=20.0, machine=None, bw_scale=0.2)]
+    )
+    short_dip = trace_from_events(
+        cluster, [DynamicsEvent(t0=1.0, t1=4.0, machine=None, bw_scale=0.2)]
+    )
+    m_long = simulate(wl, cluster, p, r, policy="oes", trace=long_dip).makespan
+    m_short = simulate(wl, cluster, p, r, policy="oes", trace=short_dip).makespan
+    assert m_long >= m_short - 1e-9 >= base - 2e-9
+
+
+def test_straggler_slowdown_delays_only_its_machine():
+    """A pure compute straggler (no bw change) on a machine hosting work
+    increases makespan; slowdown on every machine scales exec times."""
+    wl = small_job(seed=3)
+    cluster = heterogeneous_cluster(3, seed=3)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=1)
+    base = simulate(wl, cluster, p, r, policy="oes").makespan
+    all_slow = trace_from_events(
+        cluster, [DynamicsEvent(t0=0.0, machine=None, slowdown=2.0)]
+    )
+    m_slow = simulate(wl, cluster, p, r, policy="oes", trace=all_slow).makespan
+    assert m_slow > base
+
+
+# ---------------------------------------------------------------------------
+# incremental re-planning
+# ---------------------------------------------------------------------------
+def test_migration_time_model():
+    cluster = heterogeneous_cluster(3, seed=0)
+    old = np.array([0, 0, 1, 2])
+    new = np.array([0, 1, 1, 0])  # tasks 1 and 3 move
+    state = np.array([1.0, 2.0, 4.0, 8.0])
+    t = migration_time(cluster, old, new, state)
+    out_s = np.array([2.0 / cluster.bw_out[0], 0.0, 8.0 / cluster.bw_out[2]])
+    in_s = np.array([8.0 / cluster.bw_in[0], 2.0 / cluster.bw_in[1], 0.0])
+    assert t == pytest.approx(max(out_s.max(), in_s.max()))
+    assert migration_time(cluster, old, old, state) == 0.0
+
+
+def test_zero_migration_replan_never_worse_than_incumbent():
+    """The warm start's own evaluation is always in the race, so the
+    committed objective can only improve on the incumbent."""
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p0 = ifs_placement(wl, cluster, seed=0)
+    cfg = ReplanConfig(budget=60, sim_iters=12)
+    inc = expected_makespan(
+        wl, cluster, p0, n_iters=cfg.sim_iters, n_draws=cfg.sim_draws, seed=cfg.seed
+    )
+    rp = Replanner(wl, cluster, p0.copy(), config=cfg)
+    rec = rp.replan(migration_free=True)
+    # migration_free drops the migration term from the OBJECTIVE; the
+    # record still reports the physical cost of whatever moves it chose
+    assert rec.replanned
+    assert rec.objective <= inc + 1e-9
+
+
+def test_drift_threshold_gates_replanning():
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p0 = ifs_placement(wl, cluster, seed=0)
+    rp = Replanner(wl, cluster, p0.copy(), config=ReplanConfig(budget=30, sim_iters=8))
+    small = rp.observe(cluster.bw_in * 0.9, cluster.bw_out * 0.9)
+    assert not small.replanned and small.drift == pytest.approx(0.1)
+    big = rp.observe(cluster.bw_in * 0.5, cluster.bw_out * 0.5)
+    assert big.replanned and big.trigger == "drift"
+    # after committing, the new bandwidths are the reference point
+    settled = rp.observe(cluster.bw_in * 0.5, cluster.bw_out * 0.5)
+    assert not settled.replanned and settled.drift == pytest.approx(0.0)
+
+
+def test_migration_cost_discourages_moves():
+    """With an enormous migration weight every move is unaffordable, so
+    the re-plan keeps the incumbent placement exactly."""
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p0 = ifs_placement(wl, cluster, seed=0)
+    cfg = ReplanConfig(budget=40, sim_iters=8, migration_weight=1e9)
+    rp = Replanner(wl, cluster, p0.copy(), config=cfg)
+    rec = rp.replan()
+    assert rec.moved_tasks == 0 and rec.migration_s == 0.0
+    assert np.array_equal(rp.placement.y, p0.y)
+
+
+def test_elastic_join_and_leave_roundtrip():
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p0 = ifs_placement(wl, cluster, seed=0)
+    rp = Replanner(wl, cluster, p0.copy(), config=ReplanConfig(budget=40, sim_iters=8))
+    extra = Machine("extra", {"mem": 64.0, "cpu": 16.0, "gpu": 2.0}, 6.25, 6.25)
+    rec_j = rp.on_join(extra)
+    assert rp.cluster.M == 5 and rec_j.trigger == "join"
+    assert np.all(rp.placement.y < rp.cluster.M)
+    rec_l = rp.on_leave(1)
+    assert rp.cluster.M == 4 and rec_l.trigger == "leave"
+    assert np.all((rp.placement.y >= 0) & (rp.placement.y < 4))
+    # the schedule still simulates cleanly on the post-churn cluster
+    mk = simulate(
+        wl, rp.cluster, rp.placement, wl.realize(seed=0), policy="oes"
+    ).makespan
+    assert np.isfinite(mk) and mk > 0
+
+
+def test_scenario_replan_beats_static_under_drift():
+    """The acceptance scenario in miniature: under a sustained drift
+    trace, warm incremental re-planning beats the static plan on total
+    wall-clock (including its own migration stalls)."""
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    tr = drift_trace(cluster, horizon_s=60.0, n_segments=8, seed=1)
+    kw = dict(
+        n_intervals=3, iters_per_interval=8, seed=0,
+        replan_config=ReplanConfig(budget=40, sim_iters=8),
+    )
+    static = run_scenario(wl, cluster, tr, strategy="static", **kw)
+    replan = run_scenario(wl, cluster, tr, strategy="replan", **kw)
+    assert static.n_replans == 0
+    assert replan.n_replans >= 1
+    assert replan.total_s < static.total_s
+
+
+# ---------------------------------------------------------------------------
+# warm cache state across re-plans
+# ---------------------------------------------------------------------------
+def test_warm_started_hit_model_continues_curve():
+    pytest.importorskip("jax", reason="trace collection samples via data.graph")
+    from repro.cache import build_hit_model, collect_profile_trace
+    from repro.core.profiles import OGBN_PRODUCTS
+
+    trace = collect_profile_trace(
+        OGBN_PRODUCTS, n_samplers=4, n_iters=12, proxy_nodes=1500, seed=0
+    )
+    cold = build_hit_model(trace, policy="lru", capacity_nodes=400)
+    warm = cold.warm_started(6)
+    got_cold = cold.hit_rates(2, 12)
+    got_warm = warm.hit_rates(2, 6)
+    assert np.array_equal(got_warm, got_cold[6:12])  # same continuous replay
+    # LRU warms up: the continued curve starts above the cold start
+    assert got_warm[0] > got_cold[0]
+    # warm views stack and share the memoised table
+    assert warm.warm_started(3).warm_iters == 9
+    assert warm._table is cold._table
+
+
+def test_heterogeneous_cache_budgets_reserve_per_machine():
+    from repro.cache import CacheConfig
+    from repro.cache.planner import cache_reservation_violation
+
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p = ifs_placement(wl, cluster, seed=0)
+    uniform = CacheConfig(policy="lru", cache_gb=4.0)
+    hetero = CacheConfig(policy="lru", cache_gb=np.array([4.0, 4.0, 4.0, 4.0]))
+    assert cache_reservation_violation(
+        wl, cluster, uniform, p
+    ) == pytest.approx(cache_reservation_violation(wl, cluster, hetero, p))
+    # an absurd budget on exactly one sampler machine must violate there
+    m_host = int(p.y[[j for j, t in enumerate(wl.tasks) if t.kind == "sampler"][0]])
+    gb = np.zeros(4)
+    gb[m_host] = 1e4
+    v = cache_reservation_violation(
+        wl, cluster, CacheConfig(policy="lru", cache_gb=gb), p
+    )
+    assert v > 0
+    with pytest.raises(ValueError):
+        CacheConfig(cache_gb=np.ones(3)).cache_gb_per_machine(4)
+
+
+# ---------------------------------------------------------------------------
+# FailureController routes through Replanner (satellite fix + regression)
+# ---------------------------------------------------------------------------
+def test_failure_controller_routes_through_replanner(tmp_path):
+    wl = replan_job()
+    cluster = heterogeneous_cluster(5, seed=7)
+    p0 = ifs_placement(wl, cluster, seed=0)
+    from repro.train.fault_tolerance import FailureController
+
+    fc = FailureController(
+        wl, cluster, p0.copy(), ckpt_dir=str(tmp_path), replan_budget=50
+    )
+    new_cluster, new_p, res = fc.on_failure(machine=2, seed=0)
+    assert new_cluster.M == cluster.M - 1
+    assert np.all((new_p.y >= 0) & (new_p.y < new_cluster.M))
+    assert res.evaluations > 0
+    # the failure went through the general re-plan path
+    assert [r.trigger for r in fc.replanner(0).records] == ["leave"]
+    mk = simulate(wl, new_cluster, new_p, wl.realize(seed=0), policy="oes").makespan
+    assert np.isfinite(mk) and mk > 0
+
+
+def test_warm_replan_reaches_cold_quality_with_fewer_evaluations():
+    """Regression for the satellite fix: on the testbed job, after a
+    failure the warm-started re-plan (incumbent = a prior ETP plan)
+    reaches at-least-cold quality at a THIRD of the cold search budget —
+    fewer evaluations AND less wall time.  Deterministic at fixed seeds."""
+    from repro.core.cluster import testbed_cluster
+    from repro.core.placement import etp_multichain, remap_after_leave
+    from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
+
+    wl = build_workload_from_profile(
+        OGBN_PRODUCTS, n_stores=4, n_workers=4, samplers_per_worker=2,
+        n_ps=1, n_iters=12,
+    )
+    cluster = testbed_cluster()
+    inc = etp_multichain(
+        wl, cluster, n_chains=2, budget=120, sim_iters=10, seed=0
+    ).placement
+    new_cluster, warm = remap_after_leave(wl, cluster, inc, 3)
+    kw = dict(sim_iters=10, seed=0)
+    warm_res = etp_search(wl, new_cluster, budget=60, init=warm, **kw)
+    cold_res = etp_search(wl, new_cluster, budget=180, **kw)
+    assert warm_res.best_makespan <= cold_res.best_makespan * 1.001
+    assert warm_res.evaluations < cold_res.evaluations
+    assert warm_res.wall_time_s <= cold_res.wall_time_s

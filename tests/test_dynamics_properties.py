@@ -1,0 +1,126 @@
+"""Hypothesis property tests on the dynamics tier's invariants.
+
+For random jobs, clusters, drift traces and re-plan states:
+  D1  makespan is monotone non-increasing in any POINTWISE bandwidth
+      increase — raising any subset of (segment, machine) bandwidths of a
+      dynamic trace never slows OES down;
+  D2  a re-plan with zero migration cost is never worse in (expected)
+      objective than keeping the incumbent placement — the incumbent's own
+      evaluation is always in the race;
+  D3  the batched engine stays bit-identical to the scalar engine on
+      randomly drawn dynamic traces (the static-engine certificate,
+      re-stated under time variation).
+
+D1/D2 run derandomized: they are near-universal rather than adversarially
+proven properties (event-order anomalies are conceivable in theory), so CI
+pins the explored example set instead of gambling on fresh draws.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (
+    build_gnn_workload,
+    expected_makespan,
+    heterogeneous_cluster,
+    ifs_placement,
+    simulate,
+    simulate_batch,
+)
+from repro.dynamics import BandwidthTrace, ReplanConfig, Replanner, drift_trace
+
+job_st = st.fixed_dictionaries(
+    {
+        "n_stores": st.integers(2, 4),
+        "n_workers": st.integers(1, 3),
+        "samplers_per_worker": st.integers(1, 2),
+        "n_iters": st.integers(2, 5),
+        "vol": st.floats(0.05, 3.0),
+        "seed": st.integers(0, 10_000),
+    }
+)
+
+
+def build(j):
+    wl = build_gnn_workload(
+        n_stores=j["n_stores"],
+        n_workers=j["n_workers"],
+        samplers_per_worker=j["samplers_per_worker"],
+        n_ps=1,
+        n_iters=j["n_iters"],
+        store_to_sampler_gb=j["vol"],
+        sampler_to_worker_gb=j["vol"] / 2,
+        grad_gb=0.05,
+        store_exec_s=0.1,
+        sampler_exec_s=0.2,
+        worker_exec_s=0.4,
+        ps_exec_s=0.1,
+        pmr=1.3,
+    )
+    cluster = heterogeneous_cluster(j["n_stores"], seed=j["seed"])
+    try:
+        p = ifs_placement(wl, cluster, seed=j["seed"])
+    except ValueError:
+        assume(False)  # randomly-drawn cluster cannot host the job: discard
+    r = wl.realize(seed=j["seed"])
+    return wl, cluster, p, r
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(job_st, st.integers(0, 10_000), st.floats(1.2, 3.0))
+def test_pointwise_bandwidth_increase_never_hurts(j, tseed, factor):
+    """D1: scale up a random SUBSET of (segment, machine) bandwidth cells
+    of a drift trace; OES makespan must not increase."""
+    wl, cluster, p, r = build(j)
+    tr = drift_trace(
+        cluster, horizon_s=6.0, n_segments=4, seed=tseed, straggler_prob=0.0
+    )
+    rng = np.random.default_rng(tseed)
+    mask = rng.random(tr.bw_in.shape) < 0.5
+    mask.flat[rng.integers(mask.size)] = True  # never a no-op
+    up = BandwidthTrace(
+        times=tr.times.copy(),
+        bw_in=np.where(mask, tr.bw_in * factor, tr.bw_in),
+        bw_out=np.where(mask, tr.bw_out * factor, tr.bw_out),
+        slow=tr.slow.copy(),
+    )
+    base = simulate(wl, cluster, p, r, policy="oes", trace=tr).makespan
+    fast = simulate(wl, cluster, p, r, policy="oes", trace=up).makespan
+    assert fast <= base * (1 + 1e-6), (base, fast)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(job_st)
+def test_zero_migration_replan_never_worse(j):
+    """D2: Replanner with migration_free objective can only match or beat
+    the incumbent's expected makespan."""
+    wl, cluster, p, r = build(j)
+    cfg = ReplanConfig(budget=15, sim_iters=5, seed=j["seed"])
+    inc = expected_makespan(
+        wl, cluster, p,
+        n_iters=cfg.sim_iters, n_draws=cfg.sim_draws, seed=cfg.seed,
+    )
+    rp = Replanner(wl, cluster, p.copy(), config=cfg)
+    rec = rp.replan(migration_free=True)
+    assert rec.objective <= inc + 1e-9, (rec.objective, inc)
+
+
+@settings(max_examples=8, deadline=None)
+@given(job_st, st.integers(0, 10_000))
+def test_batch_scalar_parity_on_random_dynamic_traces(j, tseed):
+    """D3: bit-identical batched/scalar schedules on random drift traces
+    (bandwidth shifts AND stragglers), random policy draw per example."""
+    wl, cluster, p, r = build(j)
+    tr = drift_trace(cluster, horizon_s=5.0, n_segments=5, seed=tseed)
+    policy = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")[tseed % 5]
+    ref = simulate(wl, cluster, p, r, policy=policy, record=True, trace=tr)
+    got = simulate_batch(
+        wl, cluster, [p, p], [r, wl.realize(seed=j["seed"] + 1)],
+        policy=policy, record=True, trace=tr,
+    )[0]
+    assert ref.makespan == got.makespan
+    assert ref.n_events == got.n_events
+    assert ref.task_events == got.task_events
+    assert ref.flow_log == got.flow_log

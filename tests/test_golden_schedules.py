@@ -1,0 +1,145 @@
+"""Golden-schedule regression suite: exact pinned schedules.
+
+The engine is the substrate every search, cache and dynamics result rests
+on, and its contract is EXACT: same inputs -> bit-identical schedules.
+This suite pins the makespan and the full task-start matrix of all five
+rate policies on three small fixed jobs — each under the static cluster
+AND under a fixed dynamic bandwidth/straggler trace — against checked-in
+JSON (``tests/golden/golden_schedules.json``), so an engine refactor that
+shifts any schedule by even one ULP fails loudly instead of silently
+re-basing every downstream number.
+
+Regenerate (ONLY when a semantics change is intended, with the diff
+reviewed):  PYTHONPATH=src python tests/test_golden_schedules.py --regen
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_gnn_workload,
+    heterogeneous_cluster,
+    ifs_placement,
+    simulate,
+)
+from repro.dynamics import DynamicsEvent, trace_from_events
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "golden_schedules.json"
+POLICIES = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")
+
+
+def _jobs():
+    """Three small fixed jobs spanning the shapes the engine must honour:
+    multi-sampler fan-in, single-worker chain, allreduce ring."""
+    j0 = build_gnn_workload(
+        n_stores=2, n_workers=2, samplers_per_worker=2, n_ps=1, n_iters=4,
+        store_to_sampler_gb=1.0, sampler_to_worker_gb=0.5, grad_gb=0.2,
+        store_exec_s=0.3, sampler_exec_s=0.4, worker_exec_s=0.8,
+        ps_exec_s=0.2, pmr=1.3,
+    )
+    j1 = build_gnn_workload(
+        n_stores=3, n_workers=1, samplers_per_worker=1, n_ps=2, n_iters=5,
+        store_to_sampler_gb=2.0, sampler_to_worker_gb=1.0, grad_gb=0.1,
+        store_exec_s=0.2, sampler_exec_s=0.3, worker_exec_s=1.0,
+        ps_exec_s=0.15, pmr=1.0,
+    )
+    j2 = build_gnn_workload(
+        n_stores=2, n_workers=3, samplers_per_worker=1, n_ps=1, n_iters=4,
+        store_to_sampler_gb=0.8, sampler_to_worker_gb=0.6, grad_gb=0.3,
+        store_exec_s=0.25, sampler_exec_s=0.35, worker_exec_s=0.7,
+        ps_exec_s=0.2, pmr=1.16, sync="allreduce",
+    )
+    return [("fanin", j0, 0), ("chain", j1, 1), ("ring", j2, 2)]
+
+
+def _cases():
+    for name, wl, seed in _jobs():
+        cluster = heterogeneous_cluster(3, seed=seed)
+        placement = ifs_placement(wl, cluster, seed=0)
+        realization = wl.realize(seed=seed)
+        dyn = trace_from_events(
+            cluster,
+            [
+                DynamicsEvent(t0=1.5, t1=6.0, machine=0, bw_scale=0.4),
+                DynamicsEvent(t0=3.0, machine=None, bw_scale=0.75, slowdown=1.2),
+            ],
+        )
+        for regime, trace in (("static", None), ("dynamic", dyn)):
+            yield name, regime, wl, cluster, placement, realization, trace
+
+
+def _schedule(wl, cluster, placement, realization, policy, trace):
+    res = simulate(
+        wl, cluster, placement, realization, policy=policy,
+        record=True, trace=trace,
+    )
+    starts = res.task_start_matrix(wl.J, realization.n_iters)
+    assert not np.isnan(starts).any()
+    return {
+        "makespan": res.makespan,
+        "n_events": res.n_events,
+        "task_start": starts.tolist(),
+    }
+
+
+def _generate():
+    golden = {}
+    for name, regime, wl, cluster, placement, realization, trace in _cases():
+        golden.setdefault(name, {})[regime] = {
+            policy: _schedule(wl, cluster, placement, realization, policy, trace)
+            for policy in POLICIES
+        }
+    return golden
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not GOLDEN_PATH.exists():  # pragma: no cover - repo corruption
+        pytest.fail(
+            f"{GOLDEN_PATH} missing; regenerate with "
+            "`PYTHONPATH=src python tests/test_golden_schedules.py --regen` "
+            "and review the diff"
+        )
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.mark.parametrize(
+    "name,regime",
+    [(n, r) for n in ("fanin", "chain", "ring") for r in ("static", "dynamic")],
+)
+def test_schedules_match_golden(golden, name, regime):
+    cases = {
+        (n, r): (wl, cluster, p, real, trace)
+        for n, r, wl, cluster, p, real, trace in _cases()
+    }
+    wl, cluster, placement, realization, trace = cases[(name, regime)]
+    want = golden[name][regime]
+    for policy in POLICIES:
+        got = _schedule(wl, cluster, placement, realization, policy, trace)
+        ref = want[policy]
+        assert got["makespan"] == ref["makespan"], (
+            name, regime, policy, got["makespan"], ref["makespan"],
+        )
+        assert got["n_events"] == ref["n_events"], (name, regime, policy)
+        assert np.array_equal(
+            np.asarray(got["task_start"]), np.asarray(ref["task_start"])
+        ), (name, regime, policy)
+
+
+def test_golden_covers_every_case(golden):
+    for name in ("fanin", "chain", "ring"):
+        for regime in ("static", "dynamic"):
+            assert set(golden[name][regime]) == set(POLICIES), (name, regime)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps(_generate(), indent=1) + "\n")
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print(__doc__)

@@ -1,7 +1,9 @@
 """Multi-job joint planning (paper conclusion's extension)."""
 import numpy as np
+import pytest
 
 from repro.core import (
+    Placement,
     etp_search,
     heterogeneous_cluster,
     ifs_placement,
@@ -9,8 +11,10 @@ from repro.core import (
     simulate,
 )
 from repro.core.multijob import (
+    EPS_EXEC,
     joint_search,
     merge_workloads,
+    merged_batch_cost,
     per_job_makespans,
     realize_merged,
 )
@@ -65,6 +69,120 @@ def test_joint_search_improves_fairly():
     )
     tuned = simulate(mj.workload, cluster, res.placement, r, policy="oes").makespan
     assert tuned <= base * 1.001
+
+
+def test_merge_offsets_and_structure():
+    """Merge correctness: every job's tasks/edges land at its offset with
+    indices, lags, kinds, demands and sampler->worker mappings intact."""
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    wl = mj.workload
+    assert mj.task_offsets == [0, j1.J]
+    assert mj.n_iters == [j1.n_iters, j2.n_iters]
+    assert wl.n_iters == max(j1.n_iters, j2.n_iters)
+    for off, job, ji in ((0, j1, 0), (j1.J, j2, 1)):
+        for j, t in enumerate(job.tasks):
+            mt = wl.tasks[off + j]
+            assert mt.kind == t.kind and mt.demand == t.demand
+            assert mt.name == f"j{ji}.{t.name}"
+        e_off = 0 if ji == 0 else j1.E
+        for e, edge in enumerate(job.edges):
+            me = wl.edges[e_off + e]
+            assert (me.src, me.dst, me.lag, me.kind) == (
+                edge.src + off, edge.dst + off, edge.lag, edge.kind,
+            )
+        for w, ss in job.sampler_of_worker.items():
+            assert wl.sampler_of_worker[w + off] == [s + off for s in ss]
+        for g in job.store_tasks:
+            assert g + off in wl.store_tasks
+    # traffic concatenates in job order
+    assert np.array_equal(
+        wl.traffic.mean_volume,
+        np.concatenate([j1.traffic.mean_volume, j2.traffic.mean_volume]),
+    )
+
+
+def test_merged_realization_epsilon_padding():
+    """Beyond a short job's true horizon its flows carry zero volume
+    (delivered instantly) and its tasks epsilon work — the uniform-N
+    engine loop then prices the padding at < J * N * eps."""
+    j1, j2 = two_jobs()  # j2 is the shorter job (8 vs 12 iters)
+    mj = merge_workloads([j1, j2])
+    r = realize_merged(mj, [j1, j2], seed=0)
+    n_max, off = mj.workload.n_iters, j1.J
+    assert r.volumes.shape == (mj.workload.E, n_max)
+    pad_iters = slice(j2.n_iters, n_max)
+    assert np.all(r.volumes[j1.E :, pad_iters] == 0.0)
+    assert np.all(r.exec_times[off:, pad_iters] == EPS_EXEC)
+    # true-horizon cells are untouched draws of the per-job realizations
+    r2 = j2.realize(seed=0 + 7919 * 1, n_iters=j2.n_iters)
+    assert np.array_equal(r.volumes[j1.E :, : j2.n_iters], r2.volumes)
+    assert np.array_equal(r.exec_times[off:, : j2.n_iters], r2.exec_times)
+
+
+def test_merged_delta_is_max_over_shared_nics():
+    """Delta of the merged job on one placement counts BOTH jobs' flows
+    through each NIC — at least either job's own Delta under the same
+    (restricted) placement, and exactly the shared-NIC flow count the
+    Theorem-1 certificate needs."""
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p = ifs_placement(mj.workload, cluster, seed=0)
+    p1 = Placement(p.y[: j1.J])
+    p2 = Placement(p.y[j1.J :])
+    d_merged = max_degree(mj.workload, p, cluster)
+    d1 = max_degree(j1, p1, cluster)
+    d2 = max_degree(j2, p2, cluster)
+    assert d_merged >= max(d1, d2)
+    assert d_merged <= d1 + d2  # a NIC carries at most both jobs' flows
+
+
+def test_independent_planning_overloads_shared_cluster():
+    """Why joint planning exists: each job planned as if it owned the
+    4-machine cluster concatenates into a capacity-INFEASIBLE placement —
+    independent planning cannot even be deployed there."""
+    from repro.core import is_feasible
+
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    indep = Placement(
+        np.concatenate(
+            [
+                etp_search(j, cluster, budget=40, sim_iters=6, seed=0).placement.y
+                for j in (j1, j2)
+            ]
+        )
+    )
+    demands = cluster.demand_matrix(mj.workload.tasks)
+    assert not is_feasible(cluster, demands, indep)
+
+
+def test_joint_vs_independent_planning_regression():
+    """On a cluster large enough that the independent concatenation IS
+    feasible, warm-starting the merged-objective search from it is never
+    worse (its evaluation is in the race) and at these seeds strictly
+    improves it — shared NICs make the jobs' placements interact."""
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    cluster = heterogeneous_cluster(8, seed=3, gpu_range=(2, 4))
+    cost = merged_batch_cost(mj, [j1, j2], cluster, n_draws=1, seed=0)
+    indep = Placement(
+        np.concatenate(
+            [
+                etp_search(j, cluster, budget=40, sim_iters=6, seed=0).placement.y
+                for j in (j1, j2)
+            ]
+        )
+    )
+    indep_cost = cost([indep])[0]
+    res = etp_search(
+        mj.workload, cluster, budget=60, seed=0, init=indep,
+        cost_fn=lambda p: cost([p])[0],
+    )
+    assert res.best_makespan <= indep_cost * (1 + 1e-9)
+    assert res.best_makespan < indep_cost  # the shared-NIC objective bites
 
 
 def test_joint_search_batched_path():
