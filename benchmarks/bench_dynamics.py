@@ -4,10 +4,14 @@ Two studies, both on the ogbn-products testbed job:
 
   * ``strategy_comparison`` — static-plan vs warm incremental re-plan vs
     oracle-replan total wall-clock under random sustained-drift traces
-    (``repro.dynamics.scenario``).  The re-plan strategy pays its own
-    migration stalls; the oracle re-plans every interval from scratch
-    with a larger budget and free migration, bounding what re-planning
-    could ever recover.
+    (``repro.dynamics.scenario``).  The re-plan strategy's committed
+    state moves ride each interval as REAL engine flows (overlapped with
+    training traffic); the report compares that overlapped wall-clock
+    against the old serial books (migration-free compute + the analytic
+    per-NIC drain bill added as a stall) to show what flow-based
+    migration accounting recovers.  The oracle re-plans every interval
+    from scratch with a larger budget and free migration, bounding what
+    re-planning could ever recover.
   * ``warm_vs_cold_replan`` — evaluations-to-quality after a bandwidth
     regime shift: ETP warm-started from the incumbent vs from-scratch
     search at growing budgets, reporting the budget multiple cold needs
@@ -57,6 +61,7 @@ def strategy_comparison(smoke: bool = False, seed: int = 0):
     )
     cfg = ReplanConfig(budget=budget, sim_iters=iters, drift_threshold=0.2)
     totals = {}
+    outs = {}
     for strat in ("static", "replan", "oracle"):
         with Timer() as t:
             out = run_scenario(
@@ -65,10 +70,12 @@ def strategy_comparison(smoke: bool = False, seed: int = 0):
                 replan_config=cfg, oracle_budget=oracle_budget,
             )
         totals[strat] = out.total_s
+        outs[strat] = out
         emit(
             f"dynamics_{strat}", t.us,
             f"total={out.total_s:.2f}s compute={out.compute_s:.2f}s "
-            f"migration={out.migration_total_s:.2f}s replans={out.n_replans}",
+            f"overlap={out.overlap_total_s:.2f}s "
+            f"drain_bill={out.migration_total_s:.2f}s replans={out.n_replans}",
         )
     gain = 100 * (1 - totals["replan"] / totals["static"])
     head = 100 * (1 - totals["oracle"] / totals["static"])
@@ -76,6 +83,17 @@ def strategy_comparison(smoke: bool = False, seed: int = 0):
         "dynamics_replan_gain", 0.0,
         f"replan_vs_static={gain:.1f}% oracle_headroom={head:.1f}% "
         f"beats_static={'y' if totals['replan'] < totals['static'] else 'N'}",
+    )
+    # migration as scheduled flows vs the old serial accounting: the same
+    # run booked as (migration-free compute + analytic drain stalls)
+    rp = outs["replan"]
+    mig_gain = 100 * (1 - rp.total_s / rp.serial_total_s) if rp.serial_total_s else 0.0
+    emit(
+        "dynamics_migration_overlap", 0.0,
+        f"overlapped_total={rp.total_s:.2f}s serial_total={rp.serial_total_s:.2f}s "
+        f"overlap_cost={rp.overlap_total_s:.3f}s drain_bill={rp.migration_total_s:.3f}s "
+        f"overlap_gain={mig_gain:.2f}% "
+        f"beats_serial={'y' if rp.total_s <= rp.serial_total_s else 'N'}",
     )
     return totals
 

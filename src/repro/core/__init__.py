@@ -25,11 +25,13 @@ from .cluster import (
 from .dgtp import Plan, plan, plan_baseline
 from .engine import (
     FIFORate,
+    MigrationFlow,
     MRTFRate,
     OESRate,
     OMCoflowRate,
     POLICIES,
     ScheduleResult,
+    check_migration_flows,
     expected_makespan,
     expected_makespan_many,
     mean_batch_makespans,

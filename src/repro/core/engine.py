@@ -213,6 +213,63 @@ POLICIES: Dict[str, Callable[[], RatePolicy]] = {
 
 
 # ---------------------------------------------------------------------------
+# Migration flows: one-shot state relocations scheduled WITH the training
+# traffic.  The dynamics tier (repro.dynamics.replan) used to price re-plan
+# migrations with a closed-form per-NIC drain bound computed OUTSIDE the
+# engine; that bound can neither overlap state moves with training flows nor
+# account for the contention they cause.  Promoting migration to a flow kind
+# lets every rate policy arbitrate state moves against training transfers on
+# the same NICs — the analytic bound survives only as a certified lower
+# bound (property-tested in tests/test_dynamics_properties.py).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MigrationFlow:
+    """A one-shot state-relocation flow, released at t=0.
+
+    ``src`` / ``dst`` are MACHINE indices on the simulated cluster (a
+    migration is machine-to-machine state movement, not a workload edge);
+    ``gb`` is the state volume.  ``task`` optionally names the relocated
+    task: that task may not start its FIRST simulated iteration until this
+    flow completes (the post-replan gating rule) — ``-1`` leaves the flow
+    ungated.  A flow whose ``src`` equals ``dst`` (or whose volume is ~0)
+    ships nothing: it completes instantly and never gates."""
+
+    src: int
+    dst: int
+    gb: float
+    task: int = -1
+
+
+def check_migration_flows(
+    migrations, M: int, J: int
+) -> List["MigrationFlow"]:
+    """Validate machine/task indices; returns the flows as a list.
+
+    Raising here (rather than letting ``np.bincount`` mis-shape or — worse
+    — silently misattribute bytes to the wrong NIC) is load-bearing for the
+    elastic path: after a machine leave, PRE-leave machine indices must
+    never meet a POST-leave cluster."""
+    if not migrations:
+        return []
+    migs = list(migrations)
+    for f in migs:
+        if not (0 <= f.src < M and 0 <= f.dst < M):
+            raise ValueError(
+                f"migration flow {f} references a machine outside the "
+                f"{M}-machine cluster — remap placements after membership "
+                "changes before billing (stale pre-leave indices?)"
+            )
+        if f.task >= J:
+            raise ValueError(
+                f"migration flow {f} gates task {f.task} but the workload "
+                f"has only {J} tasks"
+            )
+        if f.gb < 0:
+            raise ValueError(f"migration flow {f} has negative volume")
+    return migs
+
+
+# ---------------------------------------------------------------------------
 # Schedule recording
 # ---------------------------------------------------------------------------
 @dataclass
@@ -250,8 +307,18 @@ def simulate(
     record: bool = False,
     max_events: int = 50_000_000,
     trace=None,
+    migrations: Optional[Sequence[MigrationFlow]] = None,
 ) -> ScheduleResult:
     """Run one training job to completion under ``policy``; return schedule.
+
+    ``migrations`` (a sequence of ``MigrationFlow``) injects one-shot state
+    moves released at t=0 that compete for NIC bandwidth with the training
+    flows under the SAME rate policy — the engine arbitrates them exactly
+    like workload flows (they occupy pseudo-edge slots ``E..E+G-1``; in a
+    recorded ``flow_log`` they appear with instance id 1 and start 0.0).  A
+    flow that names a ``task`` gates that task's first iteration on the
+    flow's completion.  An ungated flow that outlives every task extends the
+    reported makespan (the run is not over until its state has landed).
 
     ``trace`` (a ``repro.dynamics.traces.BandwidthTrace``, duck-typed on
     ``times`` / ``bw_in`` / ``bw_out`` / ``slow``) makes the cluster
@@ -297,18 +364,38 @@ def simulate(
     dst_m_all = y[dst_t]
 
     local = src_m_all == dst_m_all  # dependency only, no flow
-    remote = ~local
     last_instance = N - lag  # [E]
 
+    # migration flows occupy pseudo-edge slots E..E+G-1 so the event loop's
+    # vectorised per-flow work (rates, time stepping, completion) treats
+    # them uniformly; G == 0 leaves every array exactly as before.
+    migs = check_migration_flows(migrations, cluster.M, J)
+    G = len(migs)
+    EG = E + G
+    dst_t_grp, lag_grp = dst_t, lag  # coflow-group inputs (extended below)
+    if G:
+        mig_src = np.array([f.src for f in migs], dtype=np.int64)
+        mig_dst = np.array([f.dst for f in migs], dtype=np.int64)
+        mig_gb = np.array([f.gb for f in migs], dtype=np.float64)
+        src_m_all = np.concatenate([src_m_all, mig_src])
+        dst_m_all = np.concatenate([dst_m_all, mig_dst])
+        local = np.concatenate([local, (mig_src == mig_dst) | (mig_gb <= EPS)])
+        vol = np.concatenate([vol, np.zeros((G, N))], axis=0)
+        vol[E + np.arange(G), 0] = mig_gb
+        # unique coflow group per migration flow, disjoint from task groups
+        dst_t_grp = np.concatenate([dst_t, J + np.arange(G)])
+        lag_grp = np.concatenate([lag, np.zeros(G, dtype=np.int64)])
+
     # per-edge instance state (constraint (11): <=1 active instance per edge)
-    delivered = np.zeros(E, dtype=np.int64)
-    sending = np.zeros(E, dtype=np.int64)  # active instance id (0 = idle)
-    remaining = np.zeros(E, dtype=np.float64)
-    release = np.zeros(E, dtype=np.float64)
-    active = np.zeros(E, dtype=bool)
+    delivered = np.zeros(EG, dtype=np.int64)
+    sending = np.zeros(EG, dtype=np.int64)  # active instance id (0 = idle)
+    remaining = np.zeros(EG, dtype=np.float64)
+    release = np.zeros(EG, dtype=np.float64)
+    active = np.zeros(EG, dtype=bool)
 
     done_iter = np.zeros(J, dtype=np.int64)
     running = np.zeros(J, dtype=bool)
+    mig_left = np.zeros(J, dtype=np.int64)  # pending state flows gating a task
 
     in_edges = workload.in_edges
     out_edges = workload.out_edges
@@ -321,6 +408,8 @@ def simulate(
     def can_start(j: int, n: int) -> bool:
         if n > N or running[j] or done_iter[j] != n - 1:
             return False
+        if n == 1 and mig_left[j]:
+            return False  # relocated: first iteration waits for its state
         for e in in_edges[j]:
             need = n - lag[e]
             if need <= 0:
@@ -364,6 +453,19 @@ def simulate(
             flow_start[(e, int(nxt))] = t
         return got_zero
 
+    for g, f in enumerate(migs):
+        e = E + g
+        if local[e]:
+            delivered[e] = 1  # nothing to ship: state already in place
+            continue
+        sending[e] = 1
+        remaining[e] = vol[e, 0]
+        active[e] = True
+        if f.task >= 0:
+            mig_left[f.task] += 1
+        if record:
+            flow_start[(e, 1)] = 0.0
+
     t = 0.0
     for j in range(J):
         if can_start(j, 1):
@@ -382,7 +484,8 @@ def simulate(
                 remaining[idx],
                 release[idx],
                 # coflow group id: destination task instance, encoded densely
-                dst_t[idx] * (N + 2) + delivered[idx] + 1 + lag[idx],
+                # (migration pseudo-edges get their own singleton groups)
+                dst_t_grp[idx] * (N + 2) + delivered[idx] + 1 + lag_grp[idx],
                 bw_in,
                 bw_out,
             )
@@ -431,6 +534,14 @@ def simulate(
                 sending[e] = 0
                 active[e] = False
                 remaining[e] = 0.0
+                if e >= E:  # one-shot migration flow: state has landed
+                    if record:
+                        flow_log.append((int(e), n, flow_start.pop((int(e), n)), t))
+                    tsk = migs[int(e) - E].task
+                    if tsk >= 0:
+                        mig_left[tsk] -= 1
+                        touched.append(int(tsk))
+                    continue
                 touched.append(int(dst_t[e]))
                 if record:
                     flow_log.append((int(e), n, flow_start.pop((int(e), n)), t))
@@ -651,11 +762,20 @@ def simulate_batch(
     record: bool = False,
     max_events: int = 50_000_000,
     trace=None,
+    migrations: Optional[Sequence[Optional[Sequence[MigrationFlow]]]] = None,
 ) -> List[ScheduleResult]:
     """Run ``B = len(placements)`` independent jobs to completion in
     lock-step; instance ``b`` pairs ``placements[b]`` with
     ``realizations[b]``.  Returns one ``ScheduleResult`` per instance,
     bit-identical to ``simulate`` run on each instance alone.
+
+    ``migrations`` is per-instance: ``migrations[b]`` (None or a sequence
+    of ``MigrationFlow``) is injected into instance ``b`` exactly as
+    ``simulate(..., migrations=...)`` would — instances with fewer flows
+    than the batch maximum carry inert padding columns that never
+    activate, so the lock-step stays bit-identical to per-instance scalar
+    runs with their own flow sets (the replan objective relies on this to
+    evaluate clean and migration-loaded variants in ONE batch).
 
     All realizations must share ``n_iters`` (the batch is stacked into
     ``[B, E, N]`` / ``[B, J, N]`` arrays); the cluster is shared.
@@ -682,6 +802,32 @@ def simulate_batch(
     dst_m = np.stack([p.y[dst_t] for p in placements])
     local = src_m == dst_m
     last_instance = N - lag  # [E]
+
+    # per-instance migration flows in pseudo-edge columns E..E+Gmax-1;
+    # instances with fewer flows leave inert (local=True) padding columns
+    if migrations is not None and len(migrations) != B:
+        raise ValueError("migrations must give one (possibly None) entry per instance")
+    mig_lists = [
+        check_migration_flows(m, cluster.M, J)
+        for m in (migrations if migrations is not None else [None] * B)
+    ]
+    Gmax = max((len(m) for m in mig_lists), default=0)
+    EG = E + Gmax
+    dst_t_grp, lag_grp = dst_t, lag
+    if Gmax:
+        vol = np.concatenate([vol, np.zeros((B, Gmax, N))], axis=1)
+        src_m = np.concatenate([src_m, np.zeros((B, Gmax), dtype=np.int64)], axis=1)
+        dst_m = np.concatenate([dst_m, np.zeros((B, Gmax), dtype=np.int64)], axis=1)
+        local = np.concatenate([local, np.ones((B, Gmax), dtype=bool)], axis=1)
+        for b, ms in enumerate(mig_lists):
+            for g, f in enumerate(ms):
+                e = E + g
+                src_m[b, e] = f.src
+                dst_m[b, e] = f.dst
+                vol[b, e, 0] = f.gb
+                local[b, e] = (f.src == f.dst) or (f.gb <= EPS)
+        dst_t_grp = np.concatenate([dst_t, J + np.arange(Gmax)])
+        lag_grp = np.concatenate([lag, np.zeros(Gmax, dtype=np.int64)])
 
     # per-instance NIC capacity rows (and, with a trace, segment pointers)
     if trace is None:
@@ -711,11 +857,11 @@ def simulate_batch(
     # per-event group computation (and the numpy `delivered` mirror it
     # gathers from) is skipped for those.
     needs_group = policy.name not in ("oes", "oes_strict", "fifo", "mrtf")
-    delivered_np = np.zeros((B, E), dtype=np.int64) if needs_group else None
-    sending = np.zeros((B, E), dtype=np.int64)
-    remaining = np.zeros((B, E), dtype=np.float64)
-    release = np.zeros((B, E), dtype=np.float64)
-    active = np.zeros((B, E), dtype=bool)
+    delivered_np = np.zeros((B, EG), dtype=np.int64) if needs_group else None
+    sending = np.zeros((B, EG), dtype=np.int64)
+    remaining = np.zeros((B, EG), dtype=np.float64)
+    release = np.zeros((B, EG), dtype=np.float64)
+    active = np.zeros((B, EG), dtype=bool)
 
     in_edges, out_edges = workload.in_edges, workload.out_edges
     heaps: List[List[Tuple[float, int, int]]] = [[] for _ in range(B)]
@@ -726,7 +872,7 @@ def simulate_batch(
     t = np.zeros(B, dtype=np.float64)
 
     rates_fn = _batch_rates_factory(
-        policy, B, cluster, J * (N + 2), bw_in_mat, bw_out_mat,
+        policy, B, cluster, (J + Gmax) * (N + 2), bw_in_mat, bw_out_mat,
         dynamic=trace is not None,
     )
     # oes / oes_strict / fifo rates depend only on the active-flow TOPOLOGY
@@ -735,7 +881,7 @@ def simulate_batch(
     # "dirty" instances re-enter the (expensive) rate computation.  mrtf /
     # omcoflow read ``remaining`` and must be recomputed every event.
     rates_cacheable = policy.name in ("oes", "oes_strict", "fifo")
-    rate_cache = np.zeros((B, E), dtype=np.float64)
+    rate_cache = np.zeros((B, EG), dtype=np.float64)
     dirty = np.ones(B, dtype=bool)
     # oes / oes_strict rates are a pure function of the active EDGE SET
     # (placement fixed per instance, bw shared) — and training iterations
@@ -756,12 +902,16 @@ def simulate_batch(
     ex_l = [row.tolist() for row in ex]  # [B][J][N]
     done_l = [[0] * J for _ in range(B)]
     running_l = [[False] * J for _ in range(B)]
-    delivered = [[0] * E for _ in range(B)]
+    delivered = [[0] * EG for _ in range(B)]
     n_active = [0] * B  # active-flow count per instance
+    mig_left_l = [[0] * J for _ in range(B)]  # pending gating state flows
+    mig_task_l = [[f.task for f in ms] for ms in mig_lists]
 
     def can_start(b: int, j: int, n: int) -> bool:
         if n > N or running_l[b][j] or done_l[b][j] != n - 1:
             return False
+        if n == 1 and mig_left_l[b][j]:
+            return False  # relocated: first iteration waits for its state
         loc = local_l[b]
         done = done_l[b]
         dlv = delivered[b]
@@ -812,6 +962,23 @@ def simulate_batch(
             flow_starts[b][(e, nxt)] = tb
         return got_zero
 
+    for b, ms in enumerate(mig_lists):
+        for g, f in enumerate(ms):
+            e = E + g
+            if local[b, e]:
+                delivered[b][e] = 1
+                if needs_group:
+                    delivered_np[b, e] = 1
+                continue
+            sending[b, e] = 1
+            remaining[b, e] = vol[b, e, 0]
+            active[b, e] = True
+            n_active[b] += 1
+            if f.task >= 0:
+                mig_left_l[b][f.task] += 1
+            if record:
+                flow_starts[b][(e, 1)] = 0.0
+
     for b in range(B):
         for j in range(J):
             if can_start(b, j, 1):
@@ -830,7 +997,7 @@ def simulate_batch(
             rows, cols = np.nonzero(active)  # row-major: sorted by instance
             t_flow = np.full(B, np.inf)
             if rows.size:
-                flat = rows * E + cols
+                flat = rows * EG + cols
                 rem_f = remaining.ravel()[flat]
                 if rates_cacheable:
                     if dirty.any():
@@ -883,8 +1050,8 @@ def simulate_batch(
                     grp = None
                     if needs_group:
                         grp = (
-                            dst_t[cols] * (N + 2)
-                            + delivered_np.ravel()[flat] + 1 + lag[cols]
+                            dst_t_grp[cols] * (N + 2)
+                            + delivered_np.ravel()[flat] + 1 + lag_grp[cols]
                         )
                     rates = rates_fn(
                         rows, src_m.ravel()[flat], dst_m.ravel()[flat], rem_f,
@@ -957,6 +1124,16 @@ def simulate_batch(
                     remaining[b, e] = 0.0
                     n_active[b] -= 1
                     dirty[b] = True
+                    if e >= E:  # one-shot migration flow: state has landed
+                        if record:
+                            flow_logs[b].append(
+                                (int(e), n, flow_starts[b].pop((int(e), n)), tb)
+                            )
+                        tsk = mig_task_l[b][e - E]
+                        if tsk >= 0:
+                            mig_left_l[b][tsk] -= 1
+                            touched.append(tsk)
+                        continue
                     touched.append(dst_t_l[e])
                     if record:
                         flow_logs[b].append(

@@ -17,7 +17,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from .cluster import ClusterSpec, STORE, TaskSpec
-from .engine import mean_batch_makespans
+from .engine import MigrationFlow, mean_batch_makespans
 from .workload import Edge, Realization, TrafficModel, Workload
 
 EPS_EXEC = 1e-6
@@ -83,6 +83,36 @@ def merge_workloads(jobs: Sequence[Workload]) -> MergedJob:
         task_offsets=offsets,
         n_iters=[j.n_iters for j in jobs],
     )
+
+
+def merge_migrations(
+    mj: MergedJob, per_job: Sequence[Sequence[MigrationFlow]]
+) -> List[MigrationFlow]:
+    """Lift per-job migration flows onto the merged task index space.
+
+    Under drift every co-located job re-plans on its own cadence; one
+    merged simulation must carry EVERY job's pending state moves so the
+    shared NICs arbitrate them against each other and against all jobs'
+    training traffic.  Machine indices pass through unchanged (one shared
+    cluster); gated task ids are shifted by the job's task offset, so
+    ``per_job_makespans`` reports each job's completion with its own
+    relocations honestly gated.  Ungated flows stay ungated."""
+    if len(per_job) != len(mj.task_offsets):
+        raise ValueError(
+            f"per_job gives {len(per_job)} flow sets but the merged job "
+            f"has {len(mj.task_offsets)} jobs"
+        )
+    out: List[MigrationFlow] = []
+    for ji, flows in enumerate(per_job):
+        off = mj.task_offsets[ji]
+        for f in flows or ():
+            out.append(
+                MigrationFlow(
+                    src=f.src, dst=f.dst, gb=f.gb,
+                    task=f.task + off if f.task >= 0 else -1,
+                )
+            )
+    return out
 
 
 def realize_merged(mj: MergedJob, jobs: Sequence[Workload], seed: int = 0) -> Realization:

@@ -44,6 +44,7 @@ def simulate_slotted(
     slot: float = 1.0,
     max_slots: int = 2_000_000,
     trace=None,
+    migrations=None,
 ) -> SlottedResult:
     """``trace`` (repro.dynamics.traces.BandwidthTrace) makes the oracle
     time-varying: slot ``t`` transmits with the bandwidth of the segment
@@ -51,7 +52,14 @@ def simulate_slotted(
     slot ``t`` runs for ``ceil(exec * slow / slot)`` slots with the
     slowdown sampled at its start — the same start-time semantics as the
     event engine, so agreement still tightens as slot -> 0 (boundaries
-    contribute at most one slot of discretisation error each)."""
+    contribute at most one slot of discretisation error each).
+
+    ``migrations`` (sequence of ``repro.core.engine.MigrationFlow``) enters
+    the active flow set in slot 1 and shares the line-21 degree-balanced
+    rate rule with the training flows; a gated task is unavailable until
+    the slot after its state flow drains — mirroring the event engine's
+    release-at-t=0 + first-iteration gating, so slot->0 agreement holds for
+    migration-loaded runs too."""
     N = realization.n_iters
     J, E = workload.J, workload.E
     y = placement.y
@@ -84,6 +92,19 @@ def simulate_slotted(
     local = y[src_t] == y[dst_t]
     last_instance = N - lag
 
+    # migration flows: active from slot 1, degree-balanced like any flow
+    from .engine import EPS as _ENG_EPS, check_migration_flows
+
+    migs = check_migration_flows(migrations, cluster.M, J)
+    mig_rem: Dict[int, float] = {}
+    mig_left = np.zeros(J, dtype=np.int64)
+    for g, f in enumerate(migs):
+        if f.src == f.dst or f.gb <= _ENG_EPS:
+            continue  # nothing to ship: state already in place
+        mig_rem[g] = float(f.gb)
+        if f.task >= 0:
+            mig_left[f.task] += 1
+
     done_slot = {}  # (task, iter) -> slot the task finished in
     done_iter = np.zeros(J, dtype=np.int64)
     running_until = np.zeros(J, dtype=np.int64)  # slot index task busy through
@@ -100,6 +121,8 @@ def simulate_slotted(
     def available(j: int, n: int) -> bool:
         if n > N or running_until[j] > 0 or done_iter[j] != n - 1:
             return False
+        if n == 1 and mig_left[j]:
+            return False  # relocated: first iteration waits for its state
         for e in workload.in_edges[j]:
             need = n - lag[e]
             if need <= 0:
@@ -111,10 +134,10 @@ def simulate_slotted(
                 return False
         return True
 
-    # line 2: stores start at t = 1
+    # line 2: stores start at t = 1 (unless gated on inbound state)
     t = 0
     for j in range(J):
-        if workload.kinds[j] == 0:  # store
+        if workload.kinds[j] == 0 and not mig_left[j]:  # store
             task_start[(j, 1)] = 1
             running_until[j] = 1 + p_of(j, 1) - 1
             running_iter[j] = 1
@@ -129,8 +152,8 @@ def simulate_slotted(
                 bw_out = np.asarray(trace.bw_out[seg], dtype=np.float64) * slot
                 slow_cur = np.asarray(trace.slow[seg], dtype=np.float64)
 
-        # lines 4-5: convergence check
-        if bool(np.all(done_iter >= N)) and not f_act and not f_pend:
+        # lines 4-5: convergence check (migration state must have landed too)
+        if bool(np.all(done_iter >= N)) and not f_act and not f_pend and not mig_rem:
             return SlottedResult(makespan=float(t - 1), task_start=task_start)
 
         # lines 8-13: flows of tasks that completed at t-1
@@ -163,14 +186,22 @@ def simulate_slotted(
                 running_until[j] = t + p_of(j, n) - 1
                 running_iter[j] = n
 
-        # lines 18-21: transmit for one slot with degree-balanced rates
-        if f_act:
+        # lines 18-21: transmit for one slot with degree-balanced rates;
+        # active migration flows share the NIC degrees with training flows
+        if f_act or mig_rem:
             edges = list(f_act.keys())
-            srcs = np.array([y[src_t[e]] for e in edges])
-            dsts = np.array([y[dst_t[e]] for e in edges])
+            mig_ids = list(mig_rem.keys())
+            srcs = np.array(
+                [y[src_t[e]] for e in edges] + [migs[g].src for g in mig_ids],
+                dtype=np.int64,
+            )
+            dsts = np.array(
+                [y[dst_t[e]] for e in edges] + [migs[g].dst for g in mig_ids],
+                dtype=np.int64,
+            )
             d_out = np.bincount(srcs, minlength=cluster.M)
             d_in = np.bincount(dsts, minlength=cluster.M)
-            for e, sm, dm in zip(edges, srcs, dsts):
+            for e, sm, dm in zip(edges, srcs[: len(edges)], dsts[: len(edges)]):
                 k = min(bw_in[dm] / d_in[dm], bw_out[sm] / d_out[sm])
                 f_act[e][1] -= k
                 if f_act[e][1] <= EPS:
@@ -178,6 +209,17 @@ def simulate_slotted(
                     delivered[e] = n
                     del f_act[e]
                     finished_flows_prev.append((e, n))
+            for i, g in enumerate(mig_ids):
+                sm, dm = srcs[len(edges) + i], dsts[len(edges) + i]
+                k = min(bw_in[dm] / d_in[dm], bw_out[sm] / d_out[sm])
+                mig_rem[g] -= k
+                if mig_rem[g] <= EPS:
+                    del mig_rem[g]
+                    tsk = migs[g].task
+                    if tsk >= 0:
+                        # gated task becomes available the NEXT slot, the
+                        # same end-of-slot delivery rule as line 14-17 flows
+                        mig_left[tsk] -= 1
 
         # task completions at end of slot t
         for j in range(J):

@@ -301,7 +301,6 @@ class _Chain:
         group_moves: float,
         anneal: bool,
         extra_violation: Optional[Callable[[Placement], float]] = None,
-        move_cost: Optional[Callable[[Placement], float]] = None,
     ) -> None:
         self.workload = workload
         self.cluster = cluster
@@ -317,7 +316,6 @@ class _Chain:
         self.group_moves = group_moves
         self.anneal = anneal
         self.extra_violation = extra_violation
-        self.move_cost = move_cost
 
         self.rng = np.random.default_rng(seed)
         groups = _group_indices(workload)
@@ -356,13 +354,6 @@ class _Chain:
         v = violation_fraction(self.cluster, self.demands, p)
         if self.extra_violation is not None:
             v += self.extra_violation(p)
-        if self.move_cost is not None:
-            # one-time re-plan cost (state bytes moved over current NICs)
-            # joins the steady-state makespan BEFORE the violation scaling,
-            # so the search trades migration against schedule quality on
-            # the same seconds axis; with the hook set, every reported
-            # "makespan" (best_makespan, traces) is this combined objective
-            t = t + self.move_cost(p)
         c = t * (1.0 + v)
         self.cache[p.key()] = (t, c)
         return t, c
@@ -492,7 +483,6 @@ def etp_search(
     group_moves: float = 0.35,
     anneal: bool = True,
     extra_violation: Optional[Callable[[Placement], float]] = None,
-    move_cost: Optional[Callable[[Placement], float]] = None,
 ) -> ETPResult:
     """MCMC search (Alg. 3). ``budget`` = I transitions; ``mu`` = relaxed
     capacity factor (eq. 22); ``beta`` = temperature (eq. 23).
@@ -525,18 +515,16 @@ def etp_search(
     cache's per-machine memory reservation (repro.cache.planner), which
     depends on WHERE samplers land, not just how many there are.
 
-    ``move_cost`` (placement -> seconds) adds a one-time migration bill to
-    every candidate's objective — repro.dynamics.replan uses it to
-    warm-start re-planning from an incumbent placement while charging each
-    candidate for the state bytes it would move over the current NICs.
-    With the hook set, ``best_makespan`` IS makespan + move cost (the
-    combined objective the search minimised)."""
+    (Re-planning's migration bill is no longer a hook here: the dynamics
+    tier prices candidate moves by simulating them as real engine flows —
+    ``repro.dynamics.replan`` passes a ``cost_fn`` that injects
+    ``MigrationFlow``s, so the search still trades migration against
+    schedule quality on the same seconds axis, now contention-aware.)"""
     t0 = time.perf_counter()
     chain = _Chain(
         workload, cluster, budget=budget, mu=mu, beta=beta, sim_iters=sim_iters,
         sim_draws=sim_draws, seed=seed, init=init, policy=policy, cost_fn=cost_fn,
         group_moves=group_moves, anneal=anneal, extra_violation=extra_violation,
-        move_cost=move_cost,
     )
     chain.begin(chain.measure_scalar(chain.cur))
     for z in range(budget):
@@ -569,7 +557,7 @@ def _chain_defaults() -> Dict[str, object]:
         k: sig.parameters[k].default
         for k in (
             "mu", "beta", "sim_iters", "sim_draws", "policy", "cost_fn",
-            "group_moves", "anneal", "extra_violation", "move_cost",
+            "group_moves", "anneal", "extra_violation",
         )
     }
 

@@ -11,8 +11,9 @@ from .replan import (
     ReplanConfig,
     ReplanRecord,
     Replanner,
+    build_migration_flows,
     default_task_state_gb,
-    make_move_cost,
+    migration_drain_bound,
     migration_time,
 )
 from .scenario import (

@@ -1,4 +1,4 @@
-"""Incremental re-planning: warm-started ETP with an explicit migration bill.
+"""Incremental re-planning: warm-started ETP with migration as real flows.
 
 The paper plans once and schedules online forever after.  Under sustained
 bandwidth drift, stragglers and elastic membership that single plan goes
@@ -14,28 +14,36 @@ partition over the very NICs that just got slower.
     rather than rediscovering; the incumbent's own cost is always
     evaluated, which makes "re-plan with zero migration cost" provably
     never worse in objective than keeping the incumbent (property-tested);
-  * **migration-aware objective** — candidates are charged
-    ``makespan + migration_weight * migration_time`` through
-    ``etp_search(move_cost=...)``: the state bytes of every task that
-    changes machine, serialised per NIC at the *current* bandwidths;
+  * **migration as scheduled flows** — each candidate's state moves are
+    injected into the engine as ``MigrationFlow``s (released at t=0,
+    gating the relocated tasks' first iteration) and the objective charges
+    the *simulated overlap delta*: what the first interval actually pays
+    with the moves competing against training traffic, instead of the old
+    closed-form per-NIC drain bill.  The closed form survives as
+    ``migration_drain_bound`` — a certified LOWER bound on any schedule
+    (property-tested), reported in every record but never the model;
   * **warm cache state** — when a feature-cache tier exists
     (``hit_model``), the objective's hit curves continue from the previous
     interval's end (``HitModel.warm_started``) instead of pretending every
     re-plan starts cold;
   * **elastic membership** — machine leave (= failure) and join are the
-    same re-plan path with the cluster edited first; per-machine
-    heterogeneous cache budgets (``CacheConfig.cache_gb`` as a vector)
-    shrink and grow with it.
+    same re-plan path with the cluster edited first; forced evictions off
+    a dead machine are restored as flows over the SURVIVING machines' NICs
+    (post-leave indices throughout — billing them with pre-leave indices
+    against the post-leave bandwidth arrays was a real bincount bug), and
+    per-machine heterogeneous cache budgets (``CacheConfig.cache_gb`` as a
+    vector) shrink and grow with membership.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.cluster import ClusterSpec, Machine, Placement
+from ..core.engine import MigrationFlow, monte_carlo_draws, simulate_batch
 from ..core.placement import ETPResult, etp_search, remap_after_leave
 from ..core.workload import Workload
 from .traces import relative_bw_drift
@@ -84,45 +92,84 @@ def default_task_state_gb(workload: Workload, cluster: ClusterSpec) -> np.ndarra
     return state
 
 
+def build_migration_flows(
+    old_y: np.ndarray,
+    new_y: np.ndarray,
+    state_gb: np.ndarray,
+) -> List[MigrationFlow]:
+    """The discretionary moves ``old -> new`` as engine flows: one
+    ``MigrationFlow`` per relocated task, gating that task's first
+    post-replan iteration on its state's arrival."""
+    old_y = np.asarray(old_y)
+    new_y = np.asarray(new_y)
+    moved = (new_y != old_y) & (old_y >= 0)
+    return [
+        MigrationFlow(
+            src=int(old_y[j]), dst=int(new_y[j]),
+            gb=float(state_gb[j]), task=int(j),
+        )
+        for j in np.nonzero(moved)[0]
+    ]
+
+
+def migration_drain_bound(
+    cluster: ClusterSpec, flows: Sequence[MigrationFlow]
+) -> float:
+    """Per-NIC drain LOWER bound on completing ``flows``: every NIC must
+    carry its total migration bytes at a rate no higher than its capacity,
+    so the slowest NIC's drain time bounds ANY schedule — overlapped or
+    not — from below.  This used to be the migration *model*; since
+    migration became real engine flows it is only the certificate
+    (tests/test_dynamics_properties.py pins flows-completion >= bound,
+    with equality on an idle cluster with NIC-disjoint flows)."""
+    out_gb = np.zeros(cluster.M)
+    in_gb = np.zeros(cluster.M)
+    for f in flows:
+        if not (0 <= f.src < cluster.M and 0 <= f.dst < cluster.M):
+            raise ValueError(
+                f"migration flow {f} references a machine outside the "
+                f"{cluster.M}-machine cluster — remap after membership "
+                "changes before billing (stale pre-leave indices?)"
+            )
+        if f.src == f.dst or f.gb <= 0:
+            continue
+        out_gb[f.src] += f.gb
+        in_gb[f.dst] += f.gb
+    if not out_gb.any() and not in_gb.any():
+        return 0.0
+    out_s = out_gb / np.maximum(cluster.bw_out, 1e-9)
+    in_s = in_gb / np.maximum(cluster.bw_in, 1e-9)
+    return float(max(out_s.max(), in_s.max()))
+
+
 def migration_time(
     cluster: ClusterSpec,
     old_y: np.ndarray,
     new_y: np.ndarray,
     state_gb: np.ndarray,
 ) -> float:
-    """Seconds to move every relocated task's state over current NICs.
+    """Seconds to drain every relocated task's state over current NICs if
+    transfers serialised per NIC and ran in parallel across NICs — the
+    certified LOWER bound on the flow-scheduled completion (see
+    ``migration_drain_bound``), kept as the analytic reference.
 
-    Transfers serialise per NIC and run in parallel across NICs, so the
-    bill is the slowest machine's egress or ingress drain time — the same
-    bottleneck structure OES itself schedules under."""
-    moved = (new_y != old_y) & (old_y >= 0)
-    if not moved.any():
-        return 0.0
-    out_gb = np.bincount(
-        old_y[moved], weights=state_gb[moved], minlength=cluster.M
+    Raises when a placement indexes a machine the cluster does not have:
+    after a leave, PRE-leave indices silently bincounted against the
+    POST-leave ``bw_in`` / ``bw_out`` arrays either mis-shape or — worse —
+    charge the wrong machine's NIC."""
+    old_y = np.asarray(old_y)
+    new_y = np.asarray(new_y)
+    for name, y in (("old_y", old_y), ("new_y", new_y)):
+        bad = y[(y >= cluster.M) | ((y < 0) & (y != -1))]
+        if bad.size:
+            raise ValueError(
+                f"{name} indexes machine {int(bad[0])} but the cluster has "
+                f"{cluster.M} machines — remap placements after membership "
+                "changes before billing (stale pre-leave indices?)"
+            )
+    return migration_drain_bound(
+        cluster, build_migration_flows(old_y, new_y, state_gb)
     )
-    in_gb = np.bincount(
-        new_y[moved], weights=state_gb[moved], minlength=cluster.M
-    )
-    out_s = out_gb / np.maximum(cluster.bw_out, 1e-9)
-    in_s = in_gb / np.maximum(cluster.bw_in, 1e-9)
-    return float(max(out_s.max(), in_s.max()))
-
-
-def make_move_cost(
-    cluster: ClusterSpec,
-    incumbent: Placement,
-    state_gb: np.ndarray,
-    weight: float = 1.0,
-) -> Callable[[Placement], float]:
-    """The ``etp_search(move_cost=...)`` hook: candidate -> weighted
-    migration seconds away from ``incumbent`` on ``cluster``'s NICs."""
-    old_y = incumbent.y.copy()
-
-    def cost(p: Placement) -> float:
-        return weight * migration_time(cluster, old_y, p.y, state_gb)
-
-    return cost
 
 
 @dataclass
@@ -140,15 +187,26 @@ class ReplanConfig:
 
 @dataclass
 class ReplanRecord:
-    """Audit row for one re-plan decision (taken or declined)."""
+    """Audit row for one re-plan decision (taken or declined).
+
+    ``makespan`` and ``objective`` are deliberately separate: ``makespan``
+    is the raw simulated steady-state cost of the committed placement
+    (no migration anywhere in it), ``objective`` is what the search
+    minimised (``makespan + amortised overlap``).  The old single field
+    mixed the two, so scenario totals double-counted migration and records
+    with different ``amortize_over`` were incomparable."""
 
     trigger: str  # "epoch" | "drift" | "leave" | "join" | "forced"
     replanned: bool
     drift: float
     moved_tasks: int = 0
-    migration_gb: float = 0.0
-    migration_s: float = 0.0
-    objective: float = float("nan")  # makespan + weighted migration
+    migration_gb: float = 0.0  # discretionary state moved (beyond warm start)
+    forced_gb: float = 0.0  # state force-restored after a machine leave
+    migration_s: float = 0.0  # analytic per-NIC drain LOWER bound, unamortised
+    overlap_s: float = 0.0  # simulated first-interval delta vs migration-free
+    makespan: float = float("nan")  # raw simulated makespan, no migration
+    objective: float = float("nan")  # makespan + amortised overlap (searched)
+    flows: List[MigrationFlow] = field(default_factory=list)
     etp: Optional[ETPResult] = None
 
 
@@ -160,7 +218,8 @@ class Replanner:
 
     ``train.fault_tolerance.FailureController`` routes machine failures
     through ``on_leave``; ``repro.dynamics.scenario`` drives the epoch /
-    drift path against ground-truth bandwidth traces."""
+    drift path against ground-truth bandwidth traces and injects each
+    committed record's ``flows`` into the true interval simulation."""
 
     workload: Workload
     cluster: ClusterSpec
@@ -224,30 +283,129 @@ class Replanner:
         migration_free: bool = False,
         budget: Optional[int] = None,
         amortize_over: int = 1,
+        forced_restores: Optional[Dict[int, int]] = None,
     ) -> ReplanRecord:
         """Warm-started ETP from the incumbent on ``cluster_now`` (defaults
-        to the stored cluster, i.e. membership unchanged), objective =
-        makespan + weighted migration time.  Commits the winner.
+        to the stored cluster, i.e. membership unchanged).  Each candidate's
+        state moves become engine ``MigrationFlow``s and its objective is
+
+            clean_makespan + (weight/amortize_over) * overlap_delta
+
+        where ``overlap_delta = loaded - clean`` from simulating the first
+        interval WITH the flows injected (both variants share one
+        ``simulate_batch`` call).  A move whose transfer hides entirely
+        inside compute/network bubbles is genuinely free — the old analytic
+        bill charged it the full serial drain regardless.
 
         ``amortize_over``: the number of plan intervals the new placement
-        is expected to persist for.  The simulated makespan covers ONE
-        interval but migration is paid once, so the objective charges
-        ``migration / amortize_over`` — without this a late-run re-plan
-        correctly refuses moves a long remaining run would easily repay."""
+        is expected to persist for.  The overlap is paid once in the first
+        interval while the simulated makespan covers every interval, so the
+        objective charges ``overlap / amortize_over`` — without this a
+        late-run re-plan correctly refuses moves a long remaining run would
+        easily repay.
+
+        ``forced_restores`` (the leave path) maps an orphaned task to the
+        machine its state streams FROM (its replica holder): every
+        candidate gets one restore flow ``replica -> candidate host`` per
+        orphan — tracking the candidate, so moving an orphan off its warm
+        host re-routes ONE physical transfer instead of chaining a
+        restore plus a discretionary hop that would double-bill the warm
+        host's NICs for bytes they never carry.  Restores don't
+        differentiate candidates by themselves, but they contend with
+        both training traffic and discretionary moves, which is exactly
+        what the analytic bill could not see.  Commits the winner."""
         cfg = self.config
         cluster_now = cluster_now or self.cluster
         incumbent = self.placement.copy()
+        old_y = incumbent.y.copy()
         weight = (
             0.0
             if migration_free
             else cfg.migration_weight / max(int(amortize_over), 1)
         )
-        move_cost = (
-            make_move_cost(cluster_now, incumbent, self.state_gb, weight)
-            if weight > 0
-            else None
+        forced = dict(forced_restores or {})
+        # orphans are excluded from the discretionary old->new diff: their
+        # state originates at the replica holder, not the warm host
+        old_y_disc = old_y.copy()
+        for j in forced:
+            old_y_disc[j] = -1
+        reals = monte_carlo_draws(
+            self.workload, seed=cfg.seed, n_iters=cfg.sim_iters,
+            n_draws=cfg.sim_draws,
         )
-        cost_fn, extra = self._cost_fn(cluster_now)
+        n_d = len(reals)
+        cache_cost, extra = self._cost_fn(cluster_now)
+        rewriter = None
+        if self.hit_model is not None:
+            from ..cache.adjust import CacheRewriter
+
+            rewriter = CacheRewriter(self.workload, cluster_now, self.hit_model)
+        # per-placement (base, overlap) for the committed record, filled by
+        # the objective as the chain measures candidates (memoised upstream
+        # by placement key, so each unique candidate is simulated once)
+        side: Dict[bytes, Tuple[float, float]] = {}
+
+        def sim_pair(
+            p: Placement, migs: List[MigrationFlow]
+        ) -> Tuple[float, float]:
+            """(clean, loaded) mean makespans; the loaded variant injects
+            ``migs`` — both run in ONE lock-step batch.  With a cache tier
+            the draws are rewritten to ``p``'s cache-adjusted traffic
+            first, so the overlap is priced against the contention the
+            flows will ACTUALLY see (matching the scenario's interval
+            simulation), not the heavier uncached phantom traffic."""
+            rs = [rewriter.adjust(p, r) for r in reals] if rewriter else reals
+            if migs:
+                res = simulate_batch(
+                    self.workload, cluster_now, [p] * (2 * n_d), rs + rs,
+                    policy=cfg.policy,
+                    migrations=[None] * n_d + [migs] * n_d,
+                )
+                clean = sum(r.makespan for r in res[:n_d]) / n_d
+                loaded = sum(r.makespan for r in res[n_d:]) / n_d
+            else:
+                res = simulate_batch(
+                    self.workload, cluster_now, [p] * n_d, rs,
+                    policy=cfg.policy,
+                )
+                clean = sum(r.makespan for r in res) / n_d
+                loaded = clean
+            return clean, loaded
+
+        def flows_for(p: Placement) -> List[MigrationFlow]:
+            restores = [
+                MigrationFlow(
+                    src=src, dst=int(p.y[j]),
+                    gb=float(self.state_gb[j]), task=int(j),
+                )
+                for j, src in sorted(forced.items())
+            ]
+            return restores + build_migration_flows(
+                old_y_disc, p.y, self.state_gb
+            )
+
+        def objective(p: Placement) -> float:
+            migs = flows_for(p)
+            if cache_cost is not None:
+                base = cache_cost(p)
+                overlap = 0.0
+                if migs and weight > 0:
+                    clean, loaded = sim_pair(p, migs)
+                    overlap = loaded - clean
+            elif migs and weight > 0:
+                base, loaded = sim_pair(p, migs)
+                overlap = loaded - base
+            else:
+                base, _ = sim_pair(p, [])
+                overlap = 0.0
+            side[p.key()] = (base, overlap)
+            # gating can perturb event phasing enough that the loaded run
+            # occasionally finishes EARLIER (a scheduling anomaly, not a
+            # migration rebate) — price only non-negative overlap so a
+            # large migration_weight cannot be gamed into a bonus; the
+            # record still reports the signed physical delta
+            return base + weight * max(0.0, overlap)
+
         res = etp_search(
             self.workload,
             cluster_now,
@@ -257,11 +415,18 @@ class Replanner:
             policy=cfg.policy,
             sim_iters=cfg.sim_iters,
             sim_draws=cfg.sim_draws,
-            cost_fn=cost_fn,
+            cost_fn=objective,
             extra_violation=extra,
-            move_cost=move_cost,
         )
-        moved = (res.placement.y != incumbent.y) & (incumbent.y >= 0)
+        committed = res.placement
+        base, overlap = side[committed.key()]
+        flows = flows_for(committed)
+        if flows and weight == 0.0:
+            # the objective never priced migration (migration_free): still
+            # report the physical overlap of whatever moves it chose
+            clean, loaded = sim_pair(committed, flows)
+            overlap = loaded - clean
+        moved = (committed.y != old_y_disc) & (old_y_disc >= 0)
         same_m = len(cluster_now.bw_in) == len(self._planned_bw_in)
         rec = ReplanRecord(
             trigger=trigger,
@@ -273,14 +438,16 @@ class Replanner:
             else float("nan"),
             moved_tasks=int(moved.sum()),
             migration_gb=float(self.state_gb[moved].sum()),
-            migration_s=migration_time(
-                cluster_now, incumbent.y, res.placement.y, self.state_gb
-            ),
-            objective=res.best_makespan,
+            forced_gb=float(sum(self.state_gb[j] for j in forced)),
+            migration_s=migration_drain_bound(cluster_now, flows),
+            overlap_s=float(overlap),
+            makespan=float(base),
+            objective=float(res.best_makespan),
+            flows=flows,
             etp=res,
         )
         self.cluster = cluster_now
-        self.placement = res.placement
+        self.placement = committed
         self._planned_bw_in = cluster_now.bw_in.copy()
         self._planned_bw_out = cluster_now.bw_out.copy()
         self.records.append(rec)
@@ -299,7 +466,7 @@ class Replanner:
         observed bandwidth drift, re-plan against the current snapshot if
         it exceeds the tolerance — otherwise keep the incumbent (recorded
         as a declined decision).  ``remaining_intervals`` amortises the
-        migration bill over the plan's expected lifetime (see
+        migration overlap over the plan's expected lifetime (see
         ``replan``)."""
         self.advance_cache(served_iters)
         d = self.drift(bw_in, bw_out)
@@ -317,21 +484,40 @@ class Replanner:
     def on_leave(self, machine: int) -> ReplanRecord:
         """Machine leave/failure: remap the orphaned tasks onto the
         survivors (``remap_after_leave``), shrink per-machine cache
-        budgets, then run the standard warm re-plan.  The forced moves off
-        the dead machine are already inside the warm start, so the
-        migration term only charges *discretionary* moves beyond them."""
+        budgets, then run the standard warm re-plan.
+
+        The forced moves off the dead machine are already inside the warm
+        start, so the DISCRETIONARY migration term only charges moves
+        beyond them — but their state still has to be restored, and that
+        restore is billed here as real flows over the SURVIVING machines'
+        NICs only: each orphan's state streams from its replica holder
+        (the next surviving machine in the pre-leave ring — partitions are
+        replicated to their ring successor) to its new host, in POST-leave
+        machine indices throughout.  The pre-fix code billed nothing for
+        forced restores, and naively billing them with pre-leave indices
+        bincounts state against the wrong (or out-of-range) post-leave
+        NICs — ``migration_time`` now refuses such stale indices loudly."""
+        old_y = self.placement.y.copy()  # pre-leave indices
+        m_old = self.cluster.M
         new_cluster, warm = remap_after_leave(
             self.workload, self.cluster, self.placement, machine
         )
+        replica_pre = (machine + 1) % m_old
+        replica = replica_pre - 1 if replica_pre > machine else replica_pre
+        forced = {
+            int(j): replica for j in np.nonzero(old_y == machine)[0]
+        }
         self.placement = warm
         self._drop_cache_budget(machine)
-        return self.replan(new_cluster, trigger="leave")
+        return self.replan(
+            new_cluster, trigger="leave", forced_restores=forced
+        )
 
     def on_join(self, machine: Machine, *, cache_gb: float = 0.0) -> ReplanRecord:
         """Machine join: the incumbent stays valid (indices unchanged),
         the new machine arrives empty with its own cache budget
         (heterogeneous by construction), and the warm re-plan decides what
-        is worth moving onto it given the migration bill."""
+        is worth moving onto it given the simulated migration overlap."""
         new_cluster = self.cluster.with_machine(machine)
         self._grow_cache_budget(new_cluster.M, cache_gb)
         return self.replan(new_cluster, trigger="join")

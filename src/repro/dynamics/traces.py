@@ -214,7 +214,16 @@ def relative_bw_drift(
     now_bw_out: np.ndarray,
 ) -> float:
     """Largest per-machine relative NIC change since the incumbent plan —
-    the quantity the re-planner thresholds on."""
-    rel_in = np.abs(now_bw_in - planned_bw_in) / np.maximum(planned_bw_in, 1e-9)
-    rel_out = np.abs(now_bw_out - planned_bw_out) / np.maximum(planned_bw_out, 1e-9)
+    the quantity the re-planner thresholds on.
+
+    The denominator is the LARGER of the planned and current bandwidth, so
+    the measure lives in [0, 1]: dividing by the planned value alone
+    explodes when a trace segment drives a NIC near zero at plan time (a
+    recovery from ~0 to nominal would read as a ~1e9 "drift" and every
+    subsequent wobble as another one — spurious re-plan storms).  For the
+    common drop case (now <= planned) the value is unchanged."""
+    denom_in = np.maximum(np.maximum(planned_bw_in, now_bw_in), 1e-9)
+    denom_out = np.maximum(np.maximum(planned_bw_out, now_bw_out), 1e-9)
+    rel_in = np.abs(now_bw_in - planned_bw_in) / denom_in
+    rel_out = np.abs(now_bw_out - planned_bw_out) / denom_out
     return float(max(rel_in.max(), rel_out.max()))

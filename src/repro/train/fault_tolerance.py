@@ -7,10 +7,14 @@ Pieces (all exercised by tests/test_fault_tolerance.py):
   * failure handling — ``FailureController`` wraps the training loop:
     on a (simulated or real) host failure it (1) restores the latest
     checkpoint, (2) re-plans task placement on the surviving machines via
-    ``repro.dynamics.replan.Replanner.on_leave`` (warm-started,
-    migration-aware ETP — orders of magnitude fewer transitions than
-    planning from scratch; failure is just the "machine leave" case of
-    the general incremental re-plan path), (3) resumes;
+    ``repro.dynamics.replan.Replanner.on_leave`` (warm-started ETP whose
+    migration bill is SIMULATED: candidate moves and the dead machine's
+    forced restores run as real engine flows over the survivors' NICs,
+    overlapped with training traffic — orders of magnitude fewer
+    transitions than planning from scratch; failure is just the "machine
+    leave" case of the general incremental re-plan path), (3) resumes —
+    the committed ``ReplanRecord`` (``last_record``) carries the state
+    flows the training loop must drain before the gated tasks restart;
   * straggler mitigation — at the flow level OES's degree-based rate
     sharing already prevents one slow transfer from starving a NIC
     (Lemma 1); at the step level ``StragglerPolicy`` tracks a robust
@@ -74,6 +78,7 @@ class FailureController:
     cache_config: Optional[object] = None  # repro.cache.CacheConfig
 
     failures: List[int] = field(default_factory=list)
+    last_record: Optional[object] = None  # repro.dynamics.ReplanRecord
 
     def replanner(self, seed: int = 0) -> Replanner:
         """The controller's ONE live re-planner: created on first use and
@@ -98,10 +103,14 @@ class FailureController:
         return rp
 
     def on_failure(self, machine: int, seed: int = 0):
-        """Returns (new_cluster, new_placement, replan_result)."""
+        """Returns (new_cluster, new_placement, replan_result); the full
+        ``ReplanRecord`` — including the forced-restore and discretionary
+        ``MigrationFlow``s to drain before gated tasks restart — is kept
+        on ``self.last_record``."""
         self.failures.append(machine)
         rp = self.replanner(seed)
         rec = rp.on_leave(machine)
+        self.last_record = rec
         self.cluster = rp.cluster
         self.placement = rp.placement
         return self.cluster, self.placement, rec.etp
@@ -111,6 +120,7 @@ class FailureController:
         is the joining machine's feature-cache budget (heterogeneous)."""
         rp = self.replanner(seed)
         rec = rp.on_join(machine, cache_gb=cache_gb)
+        self.last_record = rec
         self.cluster = rp.cluster
         self.placement = rp.placement
         return self.cluster, self.placement, rec.etp

@@ -1,12 +1,19 @@
 """Dynamics tier: time-varying traces, engine parity, incremental re-planning.
 
-Certificates pinned here (ISSUE 3 acceptance):
+Certificates pinned here (ISSUE 3 + ISSUE 4 acceptance):
   * scalar/batched engine parity is BIT-IDENTICAL on dynamic bandwidth
-    traces for all five rate policies;
+    traces for all five rate policies — WITH and WITHOUT migration flows;
   * the slotted Alg.-1 oracle agrees with the event engine on a dynamic
-    trace within discretisation error, tightening as slot -> 0;
+    trace within discretisation error, tightening as slot -> 0, including
+    migration-loaded runs;
+  * migration flows gate their relocated task's first iteration and an
+    empty flow set is bit-identical to the static path;
   * a re-plan with zero migration cost is never worse in objective than
     the incumbent; drift thresholds trigger exactly when exceeded;
+  * the on_leave path bills forced evictions as flows on the SURVIVORS'
+    NICs (post-leave indices; the pre-fix analytic bill either charged
+    nothing for them or bincounted stale pre-leave indices against the
+    post-leave bandwidth arrays);
   * machine join/leave run through the same warm re-plan path
     (FailureController is now a client of Replanner) and the warm path
     reaches cold-replan quality with fewer evaluations;
@@ -17,6 +24,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    MigrationFlow,
     build_gnn_workload,
     expected_makespan,
     heterogeneous_cluster,
@@ -34,6 +42,7 @@ from repro.dynamics import (
     Replanner,
     constant_trace,
     drift_trace,
+    migration_drain_bound,
     migration_time,
     run_scenario,
     trace_from_events,
@@ -196,6 +205,145 @@ def test_slotted_oracle_agrees_on_dynamic_trace():
         last_rel = rel
 
 
+# ---------------------------------------------------------------------------
+# migration flows in the engine (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+def _mig_flows(wl, p, M):
+    """A deterministic mixed flow set: a gated store restore, a gated
+    last-task move, and an ungated bulk transfer."""
+    return [
+        MigrationFlow(src=int((p.y[0] + 1) % M), dst=int(p.y[0]), gb=2.0, task=0),
+        MigrationFlow(
+            src=int((p.y[wl.J - 1] + 2) % M), dst=int(p.y[wl.J - 1]),
+            gb=0.7, task=wl.J - 1,
+        ),
+        MigrationFlow(src=0, dst=min(1, M - 1), gb=1.0),
+    ]
+
+
+def test_empty_migrations_is_static_path():
+    wl = small_job(seed=1)
+    cluster = heterogeneous_cluster(3, seed=1)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    ref = simulate(wl, cluster, p, r, record=True)
+    got = simulate(wl, cluster, p, r, record=True, migrations=[])
+    assert ref.makespan == got.makespan
+    assert ref.n_events == got.n_events
+    assert ref.task_events == got.task_events
+    assert ref.flow_log == got.flow_log
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_migration_flows_gate_and_compete(policy):
+    """State flows share NICs with training flows under every policy: the
+    gated store cannot start until its restore lands, and injecting flows
+    never speeds the job up."""
+    wl = small_job(seed=1)
+    cluster = heterogeneous_cluster(3, seed=1)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    migs = _mig_flows(wl, p, cluster.M)
+    res = simulate(wl, cluster, p, r, policy=policy, record=True, migrations=migs)
+    starts = res.task_start_matrix(wl.J, r.n_iters)
+    store_restore_end = [f for f in res.flow_log if f[0] == wl.E][0][3]
+    assert starts[0, 0] >= store_restore_end - 1e-12
+    base = simulate(wl, cluster, p, r, policy=policy).makespan
+    assert res.makespan >= base - 1e-9
+    # the drain bound certifies from below for every policy
+    assert res.makespan >= migration_drain_bound(cluster, migs) - 1e-9
+
+
+def test_zero_and_self_migrations_never_gate():
+    """A flow that ships nothing (zero bytes or src == dst) completes
+    instantly: identical schedule to the unmigrated run."""
+    wl = small_job(seed=2)
+    cluster = heterogeneous_cluster(3, seed=2)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    migs = [
+        MigrationFlow(src=int(p.y[0]), dst=int(p.y[0]), gb=5.0, task=0),
+        MigrationFlow(src=0, dst=1, gb=0.0, task=wl.J - 1),
+    ]
+    ref = simulate(wl, cluster, p, r, record=True)
+    got = simulate(wl, cluster, p, r, record=True, migrations=migs)
+    assert ref.makespan == got.makespan
+    assert ref.task_events == got.task_events
+
+
+def test_stale_migration_flow_rejected():
+    wl = small_job(seed=0)
+    cluster = heterogeneous_cluster(3, seed=0)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=0)
+    bad = [MigrationFlow(src=3, dst=0, gb=1.0)]  # machine 3 of a 3-cluster
+    with pytest.raises(ValueError, match="stale pre-leave"):
+        simulate(wl, cluster, p, r, migrations=bad)
+    with pytest.raises(ValueError, match="stale pre-leave"):
+        simulate_batch(wl, cluster, [p], [r], migrations=[bad])
+    with pytest.raises(ValueError, match="stale pre-leave"):
+        simulate_slotted(wl, cluster, p, r, migrations=bad)
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_batch_matches_scalar_with_migration_flows(policy):
+    """Bit-identical lock-step parity with HETEROGENEOUS per-instance
+    migration flow sets (including none) on a dynamic drift trace."""
+    for seed in range(2):
+        wl = small_job(seed=seed)
+        cluster = heterogeneous_cluster(3, seed=seed)
+        try:
+            placements = [ifs_placement(wl, cluster, seed=s) for s in range(3)]
+        except ValueError:
+            continue
+        reals = [wl.realize(seed=s) for s in range(3)]
+        tr = drift_trace(cluster, horizon_s=8.0, n_segments=5, seed=seed)
+        mlists = [
+            _mig_flows(wl, placements[0], cluster.M),
+            None,
+            [MigrationFlow(src=2, dst=0, gb=0.5, task=wl.J - 1)],
+        ]
+        batch = simulate_batch(
+            wl, cluster, placements, reals, policy=policy, record=True,
+            trace=tr, migrations=mlists,
+        )
+        for b, (p, r, m) in enumerate(zip(placements, reals, mlists)):
+            ref = simulate(
+                wl, cluster, p, r, policy=policy, record=True, trace=tr,
+                migrations=m,
+            )
+            assert ref.makespan == batch[b].makespan, (policy, seed, b)
+            assert ref.n_events == batch[b].n_events, (policy, seed, b)
+            assert ref.task_events == batch[b].task_events, (policy, seed, b)
+            assert ref.flow_log == batch[b].flow_log, (policy, seed, b)
+
+
+def test_slotted_oracle_agrees_with_migration_flows():
+    """Slot->0 agreement still certifies the engine when migration flows
+    ride the same NICs (static and dynamic cluster)."""
+    wl = small_job(seed=4)
+    cluster = heterogeneous_cluster(3, seed=4)
+    p = ifs_placement(wl, cluster, seed=0)
+    r = wl.realize(seed=2)
+    migs = _mig_flows(wl, p, cluster.M)
+    tr = trace_from_events(
+        cluster, [DynamicsEvent(t0=2.0, t1=6.0, machine=0, bw_scale=0.5)]
+    )
+    for trace in (None, tr):
+        ev = simulate(
+            wl, cluster, p, r, policy="oes_strict", trace=trace, migrations=migs
+        ).makespan
+        last_rel = np.inf
+        for slot, tol in ((0.25, 0.35), (0.05, 0.1), (0.01, 0.02)):
+            sl = simulate_slotted(
+                wl, cluster, p, r, slot=slot, trace=trace, migrations=migs
+            ).makespan * slot
+            rel = abs(sl - ev) / ev
+            assert rel <= tol, (trace is not None, slot, sl, ev)
+            assert rel <= last_rel + 1e-9  # converging
+            last_rel = rel
+
+
 def test_bandwidth_dip_slows_job_and_recovery_matters():
     """Sanity on semantics: a mid-run bandwidth dip increases makespan; a
     dip that ends sooner hurts less."""
@@ -278,16 +426,107 @@ def test_drift_threshold_gates_replanning():
 
 
 def test_migration_cost_discourages_moves():
-    """With an enormous migration weight every move is unaffordable, so
-    the re-plan keeps the incumbent placement exactly."""
+    """With an enormous migration weight, only moves whose SIMULATED
+    overlap is zero (state transfers that hide entirely inside existing
+    compute/network bubbles) remain affordable — the old analytic bill
+    charged even provably-free moves the full serial drain."""
     wl = replan_job()
     cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
     p0 = ifs_placement(wl, cluster, seed=0)
     cfg = ReplanConfig(budget=40, sim_iters=8, migration_weight=1e9)
     rp = Replanner(wl, cluster, p0.copy(), config=cfg)
     rec = rp.replan()
-    assert rec.moved_tasks == 0 and rec.migration_s == 0.0
-    assert np.array_equal(rp.placement.y, p0.y)
+    # nothing the search committed may cost any overlap at this weight
+    assert rec.overlap_s <= 1e-9
+    # ... so the searched objective IS the raw makespan (no migration term)
+    assert rec.objective == pytest.approx(rec.makespan)
+    # and the committed raw makespan can only improve on the incumbent
+    inc = expected_makespan(wl, cluster, p0, n_iters=8, n_draws=1, seed=0)
+    assert rec.makespan <= inc + 1e-9
+
+
+def test_replan_record_separates_makespan_and_objective():
+    """Satellite regression: ``makespan`` is the raw simulated cost of the
+    committed placement; ``objective`` adds the AMORTISED non-negative
+    overlap — records with different amortize_over are now comparable and
+    scenario totals cannot double-count migration."""
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p0 = ifs_placement(wl, cluster, seed=0)
+    cfg = ReplanConfig(budget=40, sim_iters=8)
+    rp = Replanner(wl, cluster, p0.copy(), config=cfg)
+    rec = rp.replan(amortize_over=3)
+    # raw makespan = the committed placement's own migration-free cost
+    got = expected_makespan(
+        wl, cluster, rp.placement, n_iters=cfg.sim_iters,
+        n_draws=cfg.sim_draws, seed=cfg.seed,
+    )
+    assert rec.makespan == pytest.approx(got)
+    # objective = makespan + (weight / amortize_over) * max(0, overlap)
+    assert rec.objective == pytest.approx(
+        rec.makespan + max(0.0, rec.overlap_s) / 3.0
+    )
+    # the unamortised physical quantities are reported separately
+    assert rec.migration_s == pytest.approx(
+        migration_drain_bound(cluster, rec.flows)
+    )
+
+
+def test_migration_time_rejects_stale_preleave_indices():
+    """Regression (on_leave bincount bug): pre-leave machine indices
+    bincounted against the post-leave ``bw_in``/``bw_out`` arrays either
+    mis-shaped (numpy broadcast error) or silently charged the WRONG
+    machine's NIC.  The bill now refuses stale indices with a clear
+    error instead."""
+    cluster4 = heterogeneous_cluster(4, seed=0)
+    old = np.array([4, 0, 1, 2])  # pre-leave indices of a 5-machine set
+    new = np.array([0, 0, 1, 2])
+    with pytest.raises(ValueError, match="stale pre-leave"):
+        migration_time(cluster4, old, new, np.ones(4))
+    with pytest.raises(ValueError, match="stale pre-leave"):
+        migration_drain_bound(
+            cluster4, [MigrationFlow(src=4, dst=0, gb=1.0)]
+        )
+
+
+def test_on_leave_charges_forced_evictions_on_survivor_nics():
+    """Regression (on_leave path): the dead machine's orphans must be
+    billed — as restores over the SURVIVING machines' NICs only, in
+    post-leave indices — while the discretionary term still covers only
+    moves beyond the warm start.  Pre-fix code charged nothing for the
+    forced restores (``migration_s`` ignored them entirely)."""
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p0 = ifs_placement(wl, cluster, seed=0)
+    rp = Replanner(
+        wl, cluster, p0.copy(), config=ReplanConfig(budget=30, sim_iters=6)
+    )
+    # kill the machine hosting store 0 (the heaviest movable state)
+    dead = int(p0.y[0])
+    orphan_gb = float(rp.state_gb[p0.y == dead].sum())
+    assert orphan_gb > 1.0  # the store partition alone is > 1 GB
+    rec = rp.on_leave(dead)
+    assert rec.trigger == "leave"
+    assert rec.forced_gb == pytest.approx(orphan_gb)
+    # every committed flow lives strictly on the 3 survivors
+    M_new = rp.cluster.M
+    assert M_new == 3
+    assert all(0 <= f.src < M_new and 0 <= f.dst < M_new for f in rec.flows)
+    # the forced restores are in the record's flow set, gated on their task
+    orphans = set(np.nonzero(p0.y == dead)[0].tolist())
+    gated = {f.task for f in rec.flows}
+    assert orphans <= gated
+    # single-hop restores: exactly ONE flow per orphan (replica holder ->
+    # committed host) — never a restore chained with a discretionary hop
+    # that would double-bill the warm host's NICs
+    per_orphan = [f for f in rec.flows if f.task in orphans]
+    assert len(per_orphan) == len(orphans)
+    assert all(f.dst == rp.placement.y[f.task] for f in per_orphan)
+    # and the analytic bound now sees them: billed > 0 on survivor NICs
+    assert rec.migration_s > 0.0
+    assert rec.migration_s == pytest.approx(
+        migration_drain_bound(rp.cluster, rec.flows)
+    )
 
 
 def test_elastic_join_and_leave_roundtrip():
@@ -325,6 +564,32 @@ def test_scenario_replan_beats_static_under_drift():
     assert static.n_replans == 0
     assert replan.n_replans >= 1
     assert replan.total_s < static.total_s
+
+
+def test_scenario_charges_overlapped_migration_not_serial():
+    """Satellite regression: scenario totals changed — wall-clock is the
+    sum of interval makespans WITH the committed flows riding them
+    (overlap accounting), while the old serial books (migration-free
+    compute + analytic drain bills) survive as ``serial_total_s``."""
+    wl = replan_job()
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    tr = drift_trace(cluster, horizon_s=60.0, n_segments=8, seed=1)
+    out = run_scenario(
+        wl, cluster, tr, strategy="replan",
+        n_intervals=3, iters_per_interval=8, seed=0,
+        replan_config=ReplanConfig(budget=40, sim_iters=8),
+    )
+    assert out.total_s == pytest.approx(
+        sum(iv.makespan_s for iv in out.intervals)
+    )
+    assert out.serial_total_s == pytest.approx(
+        out.compute_s + out.migration_total_s
+    )
+    moved = [iv for iv in out.intervals if iv.replanned and iv.migration_s > 0]
+    assert moved, "the drift trace must force at least one paying re-plan"
+    # the overlapped cost undercuts the serial bill on this testbed
+    assert out.overlap_total_s < out.migration_total_s
+    assert out.total_s < out.serial_total_s
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,15 @@ For random jobs, clusters, drift traces and re-plan states:
       evaluation is always in the race;
   D3  the batched engine stays bit-identical to the scalar engine on
       randomly drawn dynamic traces (the static-engine certificate,
-      re-stated under time variation).
+      re-stated under time variation);
+  D4  the drift measure is bounded in [0, 1] even when a trace segment
+      drives a planned NIC to ~0 (the unguarded ratio exploded to ~1e9,
+      spurious re-plan storms);
+  D5  migration-as-flows completion is >= the analytic per-NIC drain
+      bound for ANY flow set, policy and live workload — and equals it
+      (within float tolerance) on an idle cluster when the flows are
+      NIC-disjoint: the closed form is a certified LOWER bound, no longer
+      the model.
 
 D1/D2 run derandomized: they are near-universal rather than adversarially
 proven properties (event-order anomalies are conceivable in theory), so CI
@@ -22,6 +30,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import (
+    MigrationFlow,
     build_gnn_workload,
     expected_makespan,
     heterogeneous_cluster,
@@ -29,7 +38,14 @@ from repro.core import (
     simulate,
     simulate_batch,
 )
-from repro.dynamics import BandwidthTrace, ReplanConfig, Replanner, drift_trace
+from repro.core.workload import Realization
+from repro.dynamics import (
+    BandwidthTrace,
+    ReplanConfig,
+    Replanner,
+    drift_trace,
+    migration_drain_bound,
+)
 
 job_st = st.fixed_dictionaries(
     {
@@ -105,6 +121,101 @@ def test_zero_migration_replan_never_worse(j):
     rp = Replanner(wl, cluster, p.copy(), config=cfg)
     rec = rp.replan(migration_free=True)
     assert rec.objective <= inc + 1e-9, (rec.objective, inc)
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(
+    job_st,
+    st.floats(0.0, 1e-9),  # the collapsed planned bandwidth
+    st.floats(0.1, 3.0),  # the recovery scale
+    st.integers(0, 3),
+)
+def test_drift_bounded_under_near_zero_bandwidth(j, tiny, recover, m_idx):
+    """D4: a trace segment that drove a NIC to ~0 at plan time must not
+    make the next snapshot read as unbounded drift."""
+    wl = build_gnn_workload(
+        n_stores=j["n_stores"], n_workers=j["n_workers"],
+        samplers_per_worker=j["samplers_per_worker"], n_ps=1,
+        n_iters=j["n_iters"], store_to_sampler_gb=j["vol"],
+        sampler_to_worker_gb=j["vol"] / 2, grad_gb=0.05, store_exec_s=0.1,
+        sampler_exec_s=0.2, worker_exec_s=0.4, ps_exec_s=0.1, pmr=1.3,
+    )
+    cluster = heterogeneous_cluster(j["n_stores"], seed=j["seed"])
+    try:
+        p = ifs_placement(wl, cluster, seed=j["seed"])
+    except ValueError:
+        assume(False)
+    # the incumbent was planned against a snapshot with one NIC collapsed
+    dipped_in = cluster.bw_in.copy()
+    dipped_in[m_idx % cluster.M] = tiny
+    rp = Replanner(
+        wl, cluster.with_bandwidth(dipped_in, cluster.bw_out), p.copy(),
+        config=ReplanConfig(budget=5, sim_iters=3, seed=j["seed"]),
+    )
+    d = rp.drift(cluster.bw_in * recover, cluster.bw_out * recover)
+    assert np.isfinite(d)
+    assert 0.0 <= d <= 1.0 + 1e-12
+    # a genuine recovery still registers as drift (no false suppression)
+    if recover >= 0.5:
+        assert d >= 0.25
+
+
+flows_st = st.lists(
+    st.tuples(
+        st.integers(0, 7),  # src (mod M)
+        st.integers(0, 7),  # dst (mod M)
+        st.floats(0.05, 8.0),  # GB
+    ),
+    min_size=1,
+    max_size=6,
+)
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(job_st, flows_st, st.integers(0, 4))
+def test_flow_completion_dominates_drain_bound(j, raw_flows, pidx):
+    """D5 (>=): with a LIVE workload competing for the NICs, the flow-based
+    migration completion — hence the makespan — can never beat the
+    analytic drain bound, under every rate policy."""
+    wl, cluster, p, r = build(j)
+    migs = [
+        MigrationFlow(src=s % cluster.M, dst=d % cluster.M, gb=gb)
+        for s, d, gb in raw_flows
+    ]
+    assume(any(f.src != f.dst for f in migs))
+    policy = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")[pidx]
+    mk = simulate(wl, cluster, p, r, policy=policy, migrations=migs).makespan
+    bound = migration_drain_bound(cluster, migs)
+    assert mk >= bound * (1 - 1e-9)
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(job_st, st.integers(0, 10_000), st.integers(0, 4))
+def test_flow_completion_equals_bound_on_idle_disjoint(j, fseed, pidx):
+    """D5 (=): an EMPTY workload (zero exec, zero volumes) with
+    NIC-disjoint flows completes exactly at the drain bound — each flow
+    owns its two NICs, so every policy serves it min(B_out, B_in) and the
+    last drain IS the bound (float tolerance for progressive filling's
+    increment accumulation)."""
+    wl, cluster, p, _ = build(j)
+    idle = Realization(
+        volumes=np.zeros((wl.E, 1)), exec_times=np.zeros((wl.J, 1))
+    )
+    rng = np.random.default_rng(fseed)
+    perm = rng.permutation(cluster.M)
+    # disjoint src->dst pairs: each machine appears in at most one flow
+    migs = [
+        MigrationFlow(
+            src=int(perm[2 * i]), dst=int(perm[2 * i + 1]),
+            gb=float(rng.uniform(0.1, 6.0)),
+        )
+        for i in range(cluster.M // 2)
+    ]
+    assume(migs)
+    policy = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")[pidx]
+    mk = simulate(wl, cluster, p, idle, policy=policy, migrations=migs).makespan
+    bound = migration_drain_bound(cluster, migs)
+    assert mk == pytest.approx(bound, rel=1e-9, abs=1e-9)
 
 
 @settings(max_examples=8, deadline=None)

@@ -3,8 +3,10 @@
 The engine is the substrate every search, cache and dynamics result rests
 on, and its contract is EXACT: same inputs -> bit-identical schedules.
 This suite pins the makespan and the full task-start matrix of all five
-rate policies on three small fixed jobs — each under the static cluster
-AND under a fixed dynamic bandwidth/straggler trace — against checked-in
+rate policies on three small fixed jobs — each under the static cluster,
+under a fixed dynamic bandwidth/straggler trace, AND under that trace
+with a fixed migration-flow set riding the NICs (a gated store restore,
+a gated tail-task move, an ungated bulk transfer) — against checked-in
 JSON (``tests/golden/golden_schedules.json``), so an engine refactor that
 shifts any schedule by even one ULP fails loudly instead of silently
 re-basing every downstream number.
@@ -19,6 +21,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    MigrationFlow,
     build_gnn_workload,
     heterogeneous_cluster,
     ifs_placement,
@@ -66,14 +69,32 @@ def _cases():
                 DynamicsEvent(t0=3.0, machine=None, bw_scale=0.75, slowdown=1.2),
             ],
         )
-        for regime, trace in (("static", None), ("dynamic", dyn)):
-            yield name, regime, wl, cluster, placement, realization, trace
+        y = placement.y
+        migs = [
+            # gated restore into store 0's machine, gated move of the last
+            # task, and an ungated bulk transfer — all competing with the
+            # training flows under the dynamic trace
+            MigrationFlow(
+                src=int((y[0] + 1) % cluster.M), dst=int(y[0]), gb=1.2, task=0
+            ),
+            MigrationFlow(
+                src=int((y[wl.J - 1] + 2) % cluster.M),
+                dst=int(y[wl.J - 1]), gb=0.8, task=wl.J - 1,
+            ),
+            MigrationFlow(src=0, dst=1, gb=0.5),
+        ]
+        for regime, trace, flows in (
+            ("static", None, None),
+            ("dynamic", dyn, None),
+            ("migration", dyn, migs),
+        ):
+            yield name, regime, wl, cluster, placement, realization, trace, flows
 
 
-def _schedule(wl, cluster, placement, realization, policy, trace):
+def _schedule(wl, cluster, placement, realization, policy, trace, flows):
     res = simulate(
         wl, cluster, placement, realization, policy=policy,
-        record=True, trace=trace,
+        record=True, trace=trace, migrations=flows,
     )
     starts = res.task_start_matrix(wl.J, realization.n_iters)
     assert not np.isnan(starts).any()
@@ -86,9 +107,11 @@ def _schedule(wl, cluster, placement, realization, policy, trace):
 
 def _generate():
     golden = {}
-    for name, regime, wl, cluster, placement, realization, trace in _cases():
+    for name, regime, wl, cluster, placement, realization, trace, flows in _cases():
         golden.setdefault(name, {})[regime] = {
-            policy: _schedule(wl, cluster, placement, realization, policy, trace)
+            policy: _schedule(
+                wl, cluster, placement, realization, policy, trace, flows
+            )
             for policy in POLICIES
         }
     return golden
@@ -105,19 +128,24 @@ def golden():
     return json.loads(GOLDEN_PATH.read_text())
 
 
+REGIMES = ("static", "dynamic", "migration")
+
+
 @pytest.mark.parametrize(
     "name,regime",
-    [(n, r) for n in ("fanin", "chain", "ring") for r in ("static", "dynamic")],
+    [(n, r) for n in ("fanin", "chain", "ring") for r in REGIMES],
 )
 def test_schedules_match_golden(golden, name, regime):
     cases = {
-        (n, r): (wl, cluster, p, real, trace)
-        for n, r, wl, cluster, p, real, trace in _cases()
+        (n, r): (wl, cluster, p, real, trace, flows)
+        for n, r, wl, cluster, p, real, trace, flows in _cases()
     }
-    wl, cluster, placement, realization, trace = cases[(name, regime)]
+    wl, cluster, placement, realization, trace, flows = cases[(name, regime)]
     want = golden[name][regime]
     for policy in POLICIES:
-        got = _schedule(wl, cluster, placement, realization, policy, trace)
+        got = _schedule(
+            wl, cluster, placement, realization, policy, trace, flows
+        )
         ref = want[policy]
         assert got["makespan"] == ref["makespan"], (
             name, regime, policy, got["makespan"], ref["makespan"],
@@ -130,7 +158,7 @@ def test_schedules_match_golden(golden, name, regime):
 
 def test_golden_covers_every_case(golden):
     for name in ("fanin", "chain", "ring"):
-        for regime in ("static", "dynamic"):
+        for regime in REGIMES:
             assert set(golden[name][regime]) == set(POLICIES), (name, regime)
 
 

@@ -3,6 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    MigrationFlow,
     Placement,
     etp_search,
     heterogeneous_cluster,
@@ -13,6 +14,7 @@ from repro.core import (
 from repro.core.multijob import (
     EPS_EXEC,
     joint_search,
+    merge_migrations,
     merge_workloads,
     merged_batch_cost,
     per_job_makespans,
@@ -51,6 +53,51 @@ def test_merge_and_schedule():
     assert max_degree(mj.workload, p, cluster) >= max(
         max_degree(j1, ifs_placement(j1, cluster, seed=0), cluster), 1
     )
+
+
+def test_merged_migration_flows_offset_and_gate_per_job():
+    """Per-job migration flows lift onto the merged index space: gated
+    task ids shift by the job's task offset (machines pass through), the
+    relocated job's tasks wait for their state, and per-job completion
+    accounting sees the delay honestly on the shared NICs."""
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p = ifs_placement(mj.workload, cluster, seed=0)
+    r = realize_merged(mj, [j1, j2], seed=0)
+    # job 2 relocates its first worker (task 4 in its own index space)
+    j2_task = 4
+    flows_j2 = [
+        MigrationFlow(
+            src=int((p.y[mj.task_offsets[1] + j2_task] + 1) % cluster.M),
+            dst=int(p.y[mj.task_offsets[1] + j2_task]),
+            gb=3.0, task=j2_task,
+        ),
+        MigrationFlow(src=0, dst=1, gb=0.5),  # ungated bulk move
+    ]
+    merged = merge_migrations(mj, [[], flows_j2])
+    assert merged[0].task == mj.task_offsets[1] + j2_task
+    assert merged[1].task == -1
+    assert (merged[0].src, merged[0].dst) == (flows_j2[0].src, flows_j2[0].dst)
+    base = simulate(mj.workload, cluster, p, r, policy="oes", record=True)
+    res = simulate(
+        mj.workload, cluster, p, r, policy="oes", record=True,
+        migrations=merged,
+    )
+    # the gated worker's first iteration waits for its 3 GB of state
+    restore_end = [f for f in res.flow_log if f[0] == mj.workload.E][0][3]
+    first_start = res.task_start_matrix(mj.workload.J, r.n_iters)[
+        mj.task_offsets[1] + j2_task, 0
+    ]
+    assert first_start >= restore_end - 1e-12
+    # per-job accounting: the migrating job pays, and completion stays
+    # bounded by the global makespan for both jobs
+    spans_base = per_job_makespans(mj, base)
+    spans_mig = per_job_makespans(mj, res)
+    assert spans_mig[1] >= spans_base[1] - 1e-9
+    assert max(spans_mig) <= res.makespan + 1e-6
+    with pytest.raises(ValueError, match="flow sets"):
+        merge_migrations(mj, [flows_j2])
 
 
 def test_joint_search_improves_fairly():
