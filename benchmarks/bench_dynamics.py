@@ -1,6 +1,6 @@
 """Dynamics-tier benchmarks: what re-planning buys under bandwidth drift.
 
-Two studies, both on the ogbn-products testbed job:
+Three studies, all on the ogbn-products testbed job:
 
   * ``strategy_comparison`` — static-plan vs warm incremental re-plan vs
     oracle-replan total wall-clock under random sustained-drift traces
@@ -16,6 +16,11 @@ Two studies, both on the ogbn-products testbed job:
     regime shift: ETP warm-started from the incumbent vs from-scratch
     search at growing budgets, reporting the budget multiple cold needs
     to match warm's quality.
+  * ``migration_shaping`` — what traffic-class shaping of migration flows
+    shaves off the residual overlap: the post-leave forced-restore bill
+    (the PR 4 testbed's 0.57s paid overlap) under unshaped / strict /
+    deadline shaping, plus the full drift scenario re-run per shaping mode
+    to certify the replan strategy's total wall-clock does not regress.
 
 Run: ``PYTHONPATH=src python -m benchmarks.run --only dynamics``
 (add ``--smoke`` for the CI-sized version) or
@@ -147,9 +152,110 @@ def warm_vs_cold_replan(smoke: bool = False, seed: int = 0):
     )
 
 
+def migration_shaping(smoke: bool = False, seed: int = 0):
+    """Residual-overlap shave from traffic-class shaping (ISSUE 5).
+
+    Part 1 — the post-leave restore (where PR 4 measured 0.57s of paid
+    overlap on 8.05 GB of forced restores): re-run ``Replanner.on_leave``
+    with the rate-policy engine unshaped vs strict vs deadline and report
+    the simulated overlap actually paid by the committed flows.
+
+    Part 2 — the drift-scenario guard: the replan strategy re-run under
+    each shaping mode must not regress total wall-clock vs unshaped."""
+    from repro.dynamics import Replanner
+
+    wl = testbed_job(n_iters=12)
+    cluster = testbed_cluster()
+    inc_budget = 60 if smoke else 200
+    budget = 40 if smoke else 60
+    inc = etp_multichain(
+        wl, cluster, n_chains=2, budget=inc_budget, sim_iters=10, seed=seed
+    ).placement
+    leave_recs = {}
+    for mode in (None, "strict", "deadline"):
+        rp = Replanner(
+            wl, cluster, inc.copy(),
+            config=ReplanConfig(budget=budget, sim_iters=10, shaping=mode),
+        )
+        with Timer() as t:
+            rec = rp.on_leave(3)
+        leave_recs[mode] = rec
+        emit(
+            f"dynamics_shaping_leave_{mode or 'unshaped'}", t.us,
+            f"overlap={rec.overlap_s:.3f}s drain_bound={rec.migration_s:.3f}s "
+            f"forced_gb={rec.forced_gb:.2f} moved={rec.moved_tasks} "
+            f"makespan={rec.makespan:.3f}s objective={rec.objective:.3f}s",
+        )
+    base = leave_recs[None]
+    best_mode = min(("strict", "deadline"), key=lambda m: leave_recs[m].overlap_s)
+    best = leave_recs[best_mode]
+    emit(
+        "dynamics_shaping_leave_gain", 0.0,
+        f"best={best_mode} overlap {base.overlap_s:.3f}s->{best.overlap_s:.3f}s "
+        f"shaved={base.overlap_s - best.overlap_s:.3f}s "
+        f"makespan_delta={best.makespan - base.makespan:+.3f}s "
+        f"shaves={'y' if best.overlap_s < base.overlap_s else 'N'}",
+    )
+
+    # part 2: the same drift testbed as strategy_comparison, replan only
+    n_intervals = 3 if smoke else 5
+    iters = 6 if smoke else 10
+    sbudget = 40 if smoke else 150
+    wl2 = testbed_job(n_iters=n_intervals * iters)
+    from repro.core import ifs_placement, simulate
+
+    p0 = ifs_placement(wl2, cluster, seed=seed)
+    undisturbed = simulate(
+        wl2, cluster, p0, wl2.realize(seed=seed, n_iters=n_intervals * iters)
+    ).makespan
+    tr = drift_trace(
+        cluster, horizon_s=undisturbed * 1.5, n_segments=2 * n_intervals,
+        seed=seed, bw_scale_range=(0.25, 1.0),
+    )
+    outs = {}
+    for mode in (None, "strict", "deadline"):
+        cfg = ReplanConfig(
+            budget=sbudget, sim_iters=iters, drift_threshold=0.2, shaping=mode
+        )
+        with Timer() as t:
+            out = run_scenario(
+                wl2, cluster, tr, strategy="replan",
+                n_intervals=n_intervals, iters_per_interval=iters, seed=seed,
+                replan_config=cfg,
+            )
+        outs[mode] = out
+        emit(
+            f"dynamics_shaping_scenario_{mode or 'unshaped'}", t.us,
+            f"total={out.total_s:.2f}s overlap={out.overlap_total_s:.3f}s "
+            f"drain_bill={out.migration_total_s:.3f}s replans={out.n_replans}",
+        )
+    base_out = outs[None]
+    # the acceptance criterion is joint: least overlap AMONG the modes
+    # that do not regress total wall-clock (strict can tie on overlap
+    # while regressing total — it must not win the report)
+    eligible = [
+        m for m in ("strict", "deadline")
+        if outs[m].total_s <= base_out.total_s + 1e-6
+    ]
+    best_mode = min(
+        eligible or ("strict", "deadline"),
+        key=lambda m: outs[m].overlap_total_s,
+    )
+    best_out = outs[best_mode]
+    emit(
+        "dynamics_shaping_scenario_gain", 0.0,
+        f"best={best_mode} overlap "
+        f"{base_out.overlap_total_s:.3f}s->{best_out.overlap_total_s:.3f}s "
+        f"total {base_out.total_s:.2f}s->{best_out.total_s:.2f}s "
+        f"no_regression={'y' if eligible else 'N'}",
+    )
+    return leave_recs, outs
+
+
 def main(smoke: bool = False):
     strategy_comparison(smoke=smoke)
     warm_vs_cold_replan(smoke=smoke)
+    migration_shaping(smoke=smoke)
 
 
 if __name__ == "__main__":

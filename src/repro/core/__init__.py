@@ -24,18 +24,24 @@ from .cluster import (
 )
 from .dgtp import Plan, plan, plan_baseline
 from .engine import (
+    CLASS_MIGRATION,
+    CLASS_TRAINING,
     FIFORate,
     MigrationFlow,
     MRTFRate,
     OESRate,
+    OESStrictRate,
     OMCoflowRate,
     POLICIES,
+    SHAPING_MODES,
     ScheduleResult,
+    ShapedPolicy,
     check_migration_flows,
     expected_makespan,
     expected_makespan_many,
     mean_batch_makespans,
     monte_carlo_draws,
+    resolve_policy,
     simulate,
     simulate_batch,
 )

@@ -25,6 +25,13 @@ a third event source, and the dependency constraints (5)-(12) are untouched
 while the capacity constraints (13)(14) hold pointwise against B(t) — see
 ``simulate``'s docstring for the exact semantics.
 
+Flows additionally carry a TRAFFIC CLASS (training / migration / per-job
+QoS): under a ``ShapedPolicy`` wrapper the rate policy serves classes in
+priority order against leftover capacity (work-conserving strict
+de-prioritisation), optionally with EDF deadline escalation for gated
+state moves — see the traffic-class section below.  Unshaped policies
+ignore classes entirely and match the pre-class engine bit-for-bit.
+
 Implementation notes: because constraint (11) serialises a logical edge's
 instances, *at most one instance per edge is ever in flight* — the active
 flow set is a boolean mask over the E logical edges, and all per-event work
@@ -46,6 +53,12 @@ from .cluster import ClusterSpec, Placement
 from .workload import Realization, Workload
 
 EPS = 1e-9
+
+# Traffic-class ids (see ShapedPolicy): LOWER id = HIGHER priority.  Training
+# flows default to class 0 and migration flows to class 1; merged multi-job
+# workloads may assign any integer per-job QoS class (multijob.merged_edge_classes).
+CLASS_TRAINING = 0
+CLASS_MIGRATION = 1
 
 
 # ---------------------------------------------------------------------------
@@ -142,8 +155,11 @@ class _WaterfillRate(RatePolicy):
         raise NotImplementedError
 
     def rates(self, src_m, dst_m, remaining, release, group, bw_in, bw_out):
-        rem_in = bw_in.copy()
-        rem_out = bw_out.copy()
+        # float64 coercion matters: a user-built ClusterSpec can carry
+        # integer bandwidth arrays, and an int `rem` silently truncates the
+        # in-place `rem -= give` arithmetic below (same coercion as OESRate)
+        rem_in = bw_in.astype(np.float64)
+        rem_out = bw_out.astype(np.float64)
         r = np.zeros(len(src_m))
         for i in self.order(src_m, dst_m, remaining, release, bw_in, bw_out):
             give = min(rem_in[dst_m[i]], rem_out[src_m[i]])
@@ -169,7 +185,10 @@ class MRTFRate(_WaterfillRate):
     name = "mrtf"
 
     def order(self, src_m, dst_m, remaining, release, bw_in, bw_out):
-        t_rem = remaining / np.minimum(bw_in[dst_m], bw_out[src_m])
+        # a dynamic-trace segment can drive a NIC's bandwidth to exactly 0;
+        # an unguarded denominator makes t_rem inf/NaN and poisons the
+        # argsort order — the EPS floor sorts dead-NIC flows last instead
+        t_rem = remaining / np.maximum(np.minimum(bw_in[dst_m], bw_out[src_m]), EPS)
         return np.argsort(t_rem, kind="stable")
 
 
@@ -188,11 +207,17 @@ class OMCoflowRate(RatePolicy):
     rounds = 4
 
     def rates(self, src_m, dst_m, remaining, release, group, bw_in, bw_out):
-        pred = np.maximum(remaining, EPS) / np.minimum(bw_in[dst_m], bw_out[src_m])
+        # zero bandwidth (dynamic-trace dip) made ``pred`` inf, ``w`` 0 and
+        # a coflow whose flows all hit dead NICs got ``gsum == 0`` — the
+        # resulting NaN survived the iterative scaling and poisoned the
+        # engine's ``remaining`` arithmetic; both denominators are floored
+        pred = np.maximum(remaining, EPS) / np.maximum(
+            np.minimum(bw_in[dst_m], bw_out[src_m]), EPS
+        )
         w = 1.0 / pred
         gsum = np.zeros(group.max() + 1)
         np.add.at(gsum, group, w)
-        w = w / gsum[group]
+        w = w / np.maximum(gsum[group], EPS)
         r = w * min(bw_in.max(), bw_out.max())
         for _ in range(self.rounds):
             load_out = np.bincount(src_m, weights=r, minlength=len(bw_out))
@@ -210,6 +235,193 @@ POLICIES: Dict[str, Callable[[], RatePolicy]] = {
     "mrtf": MRTFRate,
     "omcoflow": OMCoflowRate,
 }
+
+
+# ---------------------------------------------------------------------------
+# Traffic classes: every flow carries an integer class id (lower = higher
+# priority).  Training edges default to CLASS_TRAINING, migration flows to
+# CLASS_MIGRATION, and merged multi-job workloads may assign arbitrary
+# per-job QoS classes (``multijob.merged_edge_classes``).  ``ShapedPolicy``
+# is the class-aware shaping wrapper: it composes with ANY base rate policy
+# by running one capacity pass per class in priority order.
+# ---------------------------------------------------------------------------
+SHAPING_MODES = ("strict", "deadline")
+
+
+def _effective_classes(mode, cls, deadline, remaining, src_m, dst_m, bw_in, bw_out, now):
+    """Class each flow is scheduled in THIS instant.
+
+    ``strict`` keeps the declared classes.  ``deadline`` escalates a
+    background flow EDF-style once its slack is consumed: when the time
+    left to its deadline no longer covers the transfer time at the best
+    rate its two NICs could ever give it, the flow is promoted STRICTLY
+    above every class currently present (``min(classes, CLASS_TRAINING)
+    - 1``), because earliest-deadline-FIRST means the urgent transfer
+    must now outrank the very traffic that was starving it — promoting to
+    an equal share cannot beat a work-conserving policy's fair split
+    (which is what left the PR 4 restore overlap on the table), and a
+    fixed promotion class would sit below user QoS classes < 0.  Earlier-
+    deadline flows promote first because their slack runs out first.
+    Flows without a deadline (inf) never promote, so deadline mode
+    degrades to strict for them."""
+    eff = np.asarray(cls, dtype=np.int64)
+    if mode != "deadline":
+        return eff
+    lim = np.minimum(bw_in[dst_m], bw_out[src_m])
+    need = remaining / np.maximum(lim, EPS)
+    urgent = (eff > CLASS_TRAINING) & ((deadline - now) <= need)
+    if not urgent.any():
+        return eff
+    top = min(int(eff.min()), CLASS_TRAINING) - 1
+    eff = eff.copy()
+    eff[urgent] = top
+    return eff
+
+
+def _class_shaped_rates(
+    mode, cls, deadline, remaining, src_m, dst_m, bw_in, bw_out, now,
+    minlength, base_call,
+):
+    """The per-class leftover-capacity loop shared by the scalar
+    ``ShapedPolicy.rates`` and the pooled batch path: classes ascending,
+    each rated by ``base_call(mask, rem_in, rem_out)`` against what the
+    classes above left over, single class short-circuiting to a full-
+    capacity pass-through (``mask=None``).  One implementation keeps the
+    scalar and pooled engines bit-identical by construction."""
+    eff = _effective_classes(
+        mode, cls, deadline, remaining, src_m, dst_m, bw_in, bw_out, now
+    )
+    levels = np.unique(eff)
+    if len(levels) == 1:
+        return base_call(None, bw_in, bw_out)
+    r = np.zeros(len(src_m))
+    rem_in = bw_in.astype(np.float64)
+    rem_out = bw_out.astype(np.float64)
+    for i, c in enumerate(levels):
+        m = eff == c
+        sub = base_call(m, rem_in, rem_out)
+        r[m] = sub
+        if i + 1 < len(levels):
+            rem_in -= np.bincount(dst_m[m], weights=sub, minlength=minlength)
+            rem_out -= np.bincount(src_m[m], weights=sub, minlength=minlength)
+            np.maximum(rem_in, 0.0, out=rem_in)
+            np.maximum(rem_out, 0.0, out=rem_out)
+    return r
+
+
+class ShapedPolicy(RatePolicy):
+    """Class-aware shaping wrapper composing with every base rate policy.
+
+    Classes are served in ascending id order; each class's flows are rated
+    by the BASE policy against the capacity LEFT OVER by the classes before
+    it, so class 0 (training) never sees lower-class contention while lower
+    classes soak up whatever training leaves idle — strict de-prioritisation
+    that stays work-conserving.  ``mode="deadline"`` additionally promotes a
+    background flow STRICTLY ABOVE the training pass once its deadline slack is
+    consumed (see ``_effective_classes``); with no finite deadlines it is
+    exactly ``strict``.
+
+    With a single class present (e.g. a clean run without migrations) the
+    wrapper is a bit-identical pass-through to the base policy, which is
+    what keeps shaped clean-variant simulations comparable to unshaped ones.
+    """
+
+    def __init__(self, base: RatePolicy | str, mode: str = "strict"):
+        if isinstance(base, str):
+            base = POLICIES[base]()
+        if isinstance(base, ShapedPolicy):
+            raise ValueError("ShapedPolicy cannot wrap another ShapedPolicy")
+        if mode not in SHAPING_MODES:
+            raise ValueError(f"unknown shaping mode {mode!r}; known: {SHAPING_MODES}")
+        self.base = base
+        self.mode = mode
+        self.name = f"{base.name}+{mode}"
+
+    def rates(
+        self, src_m, dst_m, remaining, release, group, bw_in, bw_out,
+        cls=None, deadline=None, now=0.0,
+    ):
+        if cls is None:  # no class info: single-class pass-through
+            return self.base.rates(
+                src_m, dst_m, remaining, release, group, bw_in, bw_out
+            )
+        if deadline is None:
+            deadline = np.full(len(src_m), np.inf)
+
+        def base_call(m, rem_in, rem_out):
+            if m is None:
+                return self.base.rates(
+                    src_m, dst_m, remaining, release, group, rem_in, rem_out
+                )
+            return self.base.rates(
+                src_m[m], dst_m[m], remaining[m], release[m],
+                group[m] if group is not None else None,
+                rem_in, rem_out,
+            )
+
+        return _class_shaped_rates(
+            self.mode, cls, deadline, remaining, src_m, dst_m,
+            bw_in, bw_out, now, len(bw_in), base_call,
+        )
+
+
+def resolve_policy(policy: "RatePolicy | str", shaping: Optional[str] = None) -> RatePolicy:
+    """Resolve a policy spec (+ optional shaping mode) into a RatePolicy.
+
+    Accepts a policy name (``"oes"``), a shaped name (``"oes+strict"``), a
+    policy instance, or a ``ShapedPolicy``; ``shaping`` wraps an unshaped
+    policy and must agree with an already-shaped one."""
+    if isinstance(policy, str):
+        if "+" in policy:
+            base, _, mode = policy.partition("+")
+            policy = ShapedPolicy(POLICIES[base](), mode)
+        else:
+            policy = POLICIES[policy]()
+    if shaping is not None:
+        if isinstance(policy, ShapedPolicy):
+            if policy.mode != shaping:
+                raise ValueError(
+                    f"policy is already shaped with mode {policy.mode!r} but "
+                    f"shaping={shaping!r} was requested"
+                )
+        else:
+            policy = ShapedPolicy(policy, shaping)
+    return policy
+
+
+def _policy_traits(
+    policy: RatePolicy, inert_deadlines: bool = False
+) -> Tuple[RatePolicy, bool, bool, bool]:
+    """(inner, needs_group, rates_cacheable, topo_cacheable) for the batch
+    engine's rate caching.  Shaped ``strict`` keeps the base policy's
+    cacheability (rates are still a pure function of the active-flow
+    topology + classes, and classes are fixed per column); ``deadline``
+    reads ``remaining`` and the clock, so it must be recomputed every
+    event, exactly like mrtf/omcoflow — UNLESS the run carries no finite
+    deadline at all (``inert_deadlines``), where deadline mode is
+    certified bit-identical to strict and keeps strict's caches."""
+    if isinstance(policy, ShapedPolicy):
+        inner = policy.base
+        static_shaping = policy.mode == "strict" or inert_deadlines
+    else:
+        inner = policy
+        static_shaping = True
+    needs_group = inner.name not in ("oes", "oes_strict", "fifo", "mrtf")
+    rates_cacheable = static_shaping and inner.name in ("oes", "oes_strict", "fifo")
+    topo_cacheable = static_shaping and inner.name in ("oes", "oes_strict")
+    return inner, needs_group, rates_cacheable, topo_cacheable
+
+
+def _check_edge_classes(edge_classes, E: int) -> Optional[np.ndarray]:
+    if edge_classes is None:
+        return None
+    ec = np.asarray(edge_classes, dtype=np.int64)
+    if ec.shape != (E,):
+        raise ValueError(
+            f"edge_classes must give one class id per logical edge "
+            f"(expected shape ({E},), got {ec.shape})"
+        )
+    return ec
 
 
 # ---------------------------------------------------------------------------
@@ -232,12 +444,24 @@ class MigrationFlow:
     task: that task may not start its FIRST simulated iteration until this
     flow completes (the post-replan gating rule) — ``-1`` leaves the flow
     ungated.  A flow whose ``src`` equals ``dst`` (or whose volume is ~0)
-    ships nothing: it completes instantly and never gates."""
+    ships nothing: it completes instantly and never gates.
+
+    ``cls`` is the flow's traffic class (``CLASS_MIGRATION`` by default;
+    only consumed when the simulation runs under a ``ShapedPolicy`` —
+    unshaped policies arbitrate all classes as equals).  ``deadline`` is
+    the absolute simulation time by which the flow should have completed
+    so it delays nothing — under ``shaping="deadline"`` the flow is
+    promoted strictly above the training class once its slack is consumed
+    (EDF: the urgent transfer must outrank what starves it); ``inf``
+    (the default) never promotes.  The replanner fills deadlines from the
+    gated task's clean-variant start time (its slack absent migration)."""
 
     src: int
     dst: int
     gb: float
     task: int = -1
+    cls: int = CLASS_MIGRATION
+    deadline: float = float("inf")
 
 
 def check_migration_flows(
@@ -266,6 +490,8 @@ def check_migration_flows(
             )
         if f.gb < 0:
             raise ValueError(f"migration flow {f} has negative volume")
+        if np.isnan(f.deadline):
+            raise ValueError(f"migration flow {f} has a NaN deadline")
     return migs
 
 
@@ -308,6 +534,8 @@ def simulate(
     max_events: int = 50_000_000,
     trace=None,
     migrations: Optional[Sequence[MigrationFlow]] = None,
+    shaping: Optional[str] = None,
+    edge_classes=None,
 ) -> ScheduleResult:
     """Run one training job to completion under ``policy``; return schedule.
 
@@ -319,6 +547,19 @@ def simulate(
     flow that names a ``task`` gates that task's first iteration on the
     flow's completion.  An ungated flow that outlives every task extends the
     reported makespan (the run is not over until its state has landed).
+
+    ``shaping`` (``None`` | ``"strict"`` | ``"deadline"``) wraps the policy
+    in a class-aware ``ShapedPolicy``: flows are scheduled by traffic class
+    (training edges class 0 unless ``edge_classes`` says otherwise,
+    migration flows their ``MigrationFlow.cls``), lower ids first, each
+    class rated by the base policy against the capacity left over by the
+    classes above it.  ``"deadline"`` additionally promotes a background
+    flow strictly above the training class once its ``deadline`` slack is
+    consumed (EDF escalation).
+    Equivalent to passing an already-wrapped ``ShapedPolicy`` (or a
+    ``"<policy>+<mode>"`` name) as ``policy``.  ``edge_classes`` ([E] int)
+    assigns per-edge QoS classes to the workload's own flows (multi-job
+    merges); it is inert without a shaped policy.
 
     ``trace`` (a ``repro.dynamics.traces.BandwidthTrace``, duck-typed on
     ``times`` / ``bw_in`` / ``bw_out`` / ``slow``) makes the cluster
@@ -337,15 +578,18 @@ def simulate(
     START time only — a task spanning a boundary keeps its original finish
     time, mirroring how a straggling host delays the work it has already
     admitted."""
-    if isinstance(policy, str):
-        policy = POLICIES[policy]()
+    policy = resolve_policy(policy, shaping)
+    shaped = isinstance(policy, ShapedPolicy)
     N = realization.n_iters
     J, E = workload.J, workload.E
     y = placement.y
     src_t, dst_t, lag = workload.edge_src, workload.edge_dst, workload.edge_lag
     vol = realization.volumes
     ex = realization.exec_times
-    bw_in, bw_out = cluster.bw_in, cluster.bw_out
+    # no-copy for ClusterSpec's own float64 arrays; coerces user-supplied
+    # integer bandwidth vectors before any policy arithmetic sees them
+    bw_in = np.asarray(cluster.bw_in, dtype=np.float64)
+    bw_out = np.asarray(cluster.bw_out, dtype=np.float64)
     seg, n_segs, seg_times = 0, 1, None
     slow_cur = None
     if trace is not None:
@@ -385,6 +629,21 @@ def simulate(
         # unique coflow group per migration flow, disjoint from task groups
         dst_t_grp = np.concatenate([dst_t, J + np.arange(G)])
         lag_grp = np.concatenate([lag, np.zeros(G, dtype=np.int64)])
+
+    # traffic class + deadline per flow column (only consumed when shaped)
+    flow_cls = np.zeros(EG, dtype=np.int64)
+    flow_dl = np.full(EG, np.inf)
+    ec = _check_edge_classes(edge_classes, E)
+    if ec is not None:
+        flow_cls[:E] = ec
+    if G:
+        flow_cls[E:] = [f.cls for f in migs]
+        flow_dl[E:] = [f.deadline for f in migs]
+    # all-inf deadlines make deadline mode bit-identical to strict: skip
+    # the per-event escalation-wake scan entirely
+    dl_events = (
+        shaped and policy.mode == "deadline" and bool(np.isfinite(flow_dl).any())
+    )
 
     # per-edge instance state (constraint (11): <=1 active instance per edge)
     delivered = np.zeros(EG, dtype=np.int64)
@@ -478,17 +737,20 @@ def simulate(
             raise RuntimeError("event limit exceeded — dependency deadlock?")
         (idx,) = np.nonzero(active)
         if len(idx):
-            rates = policy.rates(
-                src_m_all[idx],
-                dst_m_all[idx],
-                remaining[idx],
-                release[idx],
-                # coflow group id: destination task instance, encoded densely
-                # (migration pseudo-edges get their own singleton groups)
-                dst_t_grp[idx] * (N + 2) + delivered[idx] + 1 + lag_grp[idx],
-                bw_in,
-                bw_out,
-            )
+            # coflow group id: destination task instance, encoded densely
+            # (migration pseudo-edges get their own singleton groups)
+            grp = dst_t_grp[idx] * (N + 2) + delivered[idx] + 1 + lag_grp[idx]
+            if shaped:
+                rates = policy.rates(
+                    src_m_all[idx], dst_m_all[idx], remaining[idx],
+                    release[idx], grp, bw_in, bw_out,
+                    cls=flow_cls[idx], deadline=flow_dl[idx], now=t,
+                )
+            else:
+                rates = policy.rates(
+                    src_m_all[idx], dst_m_all[idx], remaining[idx],
+                    release[idx], grp, bw_in, bw_out,
+                )
             with np.errstate(divide="ignore"):
                 dt = np.where(rates > EPS, remaining[idx] / np.maximum(rates, EPS), np.inf)
             dt_min = dt.min()
@@ -498,7 +760,23 @@ def simulate(
             t_flow = np.inf
         t_task = task_heap[0][0] if task_heap else np.inf
         t_break = seg_times[seg + 1] if seg + 1 < n_segs else np.inf
-        t_next = min(t_task, t_flow, t_break)
+        # deadline shaping adds a fourth event source: the earliest moment
+        # a still-background flow's slack could run out.  Without it a
+        # zero-rate (starved) flow contributes no flow event, and its
+        # escalation would wait for an unrelated event — arbitrarily late.
+        # ``remaining`` at t is an upper bound on remaining at the wake
+        # time, so the estimate errs early and the wake simply re-checks.
+        t_esc = np.inf
+        if dl_events and len(idx):
+            cand = np.isfinite(flow_dl[idx]) & (flow_cls[idx] > CLASS_TRAINING)
+            if cand.any():
+                sel = idx[cand]
+                lim = np.minimum(bw_in[dst_m_all[sel]], bw_out[src_m_all[sel]])
+                esc = flow_dl[sel] - remaining[sel] / np.maximum(lim, EPS)
+                fut = esc[esc > t + EPS]
+                if fut.size:
+                    t_esc = float(fut.min())
+        t_next = min(t_task, t_flow, t_break, t_esc)
         if not np.isfinite(t_next):  # pragma: no cover
             raise RuntimeError("no progress: flows active but zero rates")
         if len(idx):
@@ -600,13 +878,25 @@ def _batch_rates_factory(
     current segment and pooled calls gather the present instances' rows
     fresh; without one every row is identical, so pooled calls keep the
     old zero-copy slice of the flat tiling.  Callers must run inside an
-    ``np.errstate(divide/invalid ignored)`` context."""
+    ``np.errstate(divide/invalid ignored)`` context.
+
+    A ``ShapedPolicy`` pools too: the per-class capacity passes run over
+    the pooled disjoint union (instances never share NICs, so per-class
+    leftovers stay instance-local by construction) with each class's flows
+    rated by the BASE policy's pooled rule — per-instance heterogeneous
+    class sets (e.g. only some instances carrying migration flows) are
+    exact because a class absent from an instance contributes nothing to
+    that instance's capacity arithmetic.  ``rates_fn`` then takes three
+    extra per-flow arrays (``cls`` / ``dl`` / ``now``), ``None`` when the
+    policy is unshaped."""
     M = cluster.M
+    shaped = isinstance(policy, ShapedPolicy)
+    inner = policy.base if shaped else policy
     if not dynamic:
         bw_in_flat = bw_in_mat.reshape(-1)
         bw_out_flat = bw_out_mat.reshape(-1)
 
-    if policy.name == "oes_strict":
+    if inner.name == "oes_strict":
 
         def strict_pool(nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, inst):
             d_out = np.bincount(src, minlength=nb * M)
@@ -618,15 +908,15 @@ def _batch_rates_factory(
 
         pool_rates = strict_pool
 
-    elif policy.name in ("fifo", "mrtf"):
+    elif inner.name in ("fifo", "mrtf"):
         # Sequential waterfill: a stable sort keeps each instance's internal
         # priority order, and capacity updates are per-NIC, so interleaving
         # instances changes nothing within any one of them.
         def waterfill_pool(nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, inst):
-            rem_in = bw_in_p.copy()
-            rem_out = bw_out_p.copy()
+            rem_in = bw_in_p.astype(np.float64)  # int bw would truncate rem -= give
+            rem_out = bw_out_p.astype(np.float64)
             r = np.zeros(len(src))
-            order = policy.order(src, dst, remaining, release, rem_in, rem_out)
+            order = inner.order(src, dst, remaining, release, rem_in, rem_out)
             for i in order:
                 give = min(rem_in[dst[i]], rem_out[src[i]])
                 if give > EPS:
@@ -637,18 +927,21 @@ def _batch_rates_factory(
 
         pool_rates = waterfill_pool
 
-    elif policy.name == "omcoflow":
+    elif inner.name == "omcoflow":
         # The scalar rule's only global quantity, min(bw_in.max(), bw_out.max()),
         # is computed per instance from its own current bandwidth row, so
         # pooling stays exact under both static and dynamic clusters.
-        rounds = policy.rounds
+        rounds = inner.rounds
 
         def omcoflow_pool(nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, inst):
-            pred = np.maximum(remaining, EPS) / np.minimum(bw_in_p[dst], bw_out_p[src])
+            # zero-bandwidth guards mirror the scalar rule bit-for-bit
+            pred = np.maximum(remaining, EPS) / np.maximum(
+                np.minimum(bw_in_p[dst], bw_out_p[src]), EPS
+            )
             w = 1.0 / pred
             gsum = np.zeros(group.max() + 1)
             np.add.at(gsum, group, w)
-            w = w / gsum[group]
+            w = w / np.maximum(gsum[group], EPS)
             ref_b = np.minimum(
                 bw_in_p.reshape(nb, M).max(axis=1),
                 bw_out_p.reshape(nb, M).max(axis=1),
@@ -664,7 +957,7 @@ def _batch_rates_factory(
 
         pool_rates = omcoflow_pool
 
-    elif policy.name == "oes":
+    elif inner.name == "oes":
         # Per-instance progressive filling in lock-step: every round, each
         # still-filling instance raises its unfrozen flows by ITS OWN
         # bottleneck increment (not a global water level), reproducing the
@@ -712,7 +1005,35 @@ def _batch_rates_factory(
     else:
         pool_rates = None  # unknown/custom policy: per-segment scalar calls
 
-    def rates_fn(inst, src_l, dst_l, remaining, release, group):
+    if shaped and pool_rates is not None:
+        base_pool = pool_rates
+
+        def shaped_pool(nb, src, dst, remaining, release, group,
+                        bw_in_p, bw_out_p, inst, cls, dl, now):
+            # the shared per-class loop over the pooled disjoint union:
+            # the leftover arithmetic is per-NIC, hence per-instance, so
+            # processing a class an instance doesn't have leaves that
+            # instance's arrays bit-identical (x - 0 == x and the >=0
+            # clamp is idempotent).
+            def base_call(m, rem_in, rem_out):
+                if m is None:
+                    return base_pool(
+                        nb, src, dst, remaining, release, group,
+                        rem_in, rem_out, inst,
+                    )
+                return base_pool(
+                    nb, src[m], dst[m], remaining[m], release[m],
+                    group[m] if group is not None else None,
+                    rem_in, rem_out, inst[m],
+                )
+
+            return _class_shaped_rates(
+                policy.mode, cls, dl, remaining, src, dst,
+                bw_in_p, bw_out_p, now, nb * M, base_call,
+            )
+
+    def rates_fn(inst, src_l, dst_l, remaining, release, group,
+                 cls=None, dl=None, now=None):
         # boundaries of the (sorted) instance segments in the pool
         cut = np.empty(len(inst), dtype=bool)
         cut[0] = True
@@ -720,6 +1041,11 @@ def _batch_rates_factory(
         nb = int(cut.sum())
         if nb == 1:
             b = int(inst[0])
+            if shaped:
+                return policy.rates(
+                    src_l, dst_l, remaining, release, group,
+                    bw_in_mat[b], bw_out_mat[b], cls=cls, deadline=dl, now=now,
+                )
             return policy.rates(
                 src_l, dst_l, remaining, release, group,
                 bw_in_mat[b], bw_out_mat[b],
@@ -730,10 +1056,19 @@ def _batch_rates_factory(
             starts = np.nonzero(cut)[0].tolist() + [len(inst)]
             for lo, hi in zip(starts[:-1], starts[1:]):
                 b = int(inst[lo])
-                r[lo:hi] = policy.rates(
-                    src_l[lo:hi], dst_l[lo:hi], remaining[lo:hi],
-                    release[lo:hi], group[lo:hi], bw_in_mat[b], bw_out_mat[b],
-                )
+                if shaped:
+                    r[lo:hi] = policy.rates(
+                        src_l[lo:hi], dst_l[lo:hi], remaining[lo:hi],
+                        release[lo:hi], group[lo:hi],
+                        bw_in_mat[b], bw_out_mat[b],
+                        cls=cls[lo:hi], deadline=dl[lo:hi], now=now[lo:hi],
+                    )
+                else:
+                    r[lo:hi] = policy.rates(
+                        src_l[lo:hi], dst_l[lo:hi], remaining[lo:hi],
+                        release[lo:hi], group[lo:hi],
+                        bw_in_mat[b], bw_out_mat[b],
+                    )
             return r
         if dynamic:
             bw_in_p = bw_in_mat[present].ravel()
@@ -744,8 +1079,13 @@ def _batch_rates_factory(
         dense = np.cumsum(cut) - 1  # 0..nb-1 per flow
         src = src_l + dense * M
         dst = dst_l + dense * M
-        if policy.name == "omcoflow":
+        if inner.name == "omcoflow":
             group = group + dense * group_stride
+        if shaped:
+            return shaped_pool(
+                nb, src, dst, remaining, release, group,
+                bw_in_p, bw_out_p, dense, cls, dl, now,
+            )
         return pool_rates(
             nb, src, dst, remaining, release, group, bw_in_p, bw_out_p, dense
         )
@@ -763,6 +1103,8 @@ def simulate_batch(
     max_events: int = 50_000_000,
     trace=None,
     migrations: Optional[Sequence[Optional[Sequence[MigrationFlow]]]] = None,
+    shaping: Optional[str] = None,
+    edge_classes=None,
 ) -> List[ScheduleResult]:
     """Run ``B = len(placements)`` independent jobs to completion in
     lock-step; instance ``b`` pairs ``placements[b]`` with
@@ -783,9 +1125,13 @@ def simulate_batch(
     through its segments on their own clocks — each instance carries its
     own segment pointer and per-machine bandwidth row, so the lock-step
     batch stays bit-identical to per-instance scalar runs on the same
-    trace (certified by tests/test_dynamics.py)."""
-    if isinstance(policy, str):
-        policy = POLICIES[policy]()
+    trace (certified by tests/test_dynamics.py).
+
+    ``shaping`` / ``edge_classes`` follow ``simulate``: traffic classes are
+    per-instance heterogeneous through the per-instance migration flow sets
+    (``edge_classes`` is shared — one workload, one class per edge)."""
+    policy = resolve_policy(policy, shaping)
+    shaped = isinstance(policy, ShapedPolicy)
     B = len(placements)
     if B == 0:
         return []
@@ -814,6 +1160,13 @@ def simulate_batch(
     Gmax = max((len(m) for m in mig_lists), default=0)
     EG = E + Gmax
     dst_t_grp, lag_grp = dst_t, lag
+    # traffic class + deadline per (instance, flow column); only gathered
+    # when the policy is shaped
+    flow_cls = np.zeros((B, EG), dtype=np.int64)
+    flow_dl = np.full((B, EG), np.inf)
+    ec = _check_edge_classes(edge_classes, E)
+    if ec is not None:
+        flow_cls[:, :E] = ec
     if Gmax:
         vol = np.concatenate([vol, np.zeros((B, Gmax, N))], axis=1)
         src_m = np.concatenate([src_m, np.zeros((B, Gmax), dtype=np.int64)], axis=1)
@@ -826,13 +1179,15 @@ def simulate_batch(
                 dst_m[b, e] = f.dst
                 vol[b, e, 0] = f.gb
                 local[b, e] = (f.src == f.dst) or (f.gb <= EPS)
+                flow_cls[b, e] = f.cls
+                flow_dl[b, e] = f.deadline
         dst_t_grp = np.concatenate([dst_t, J + np.arange(Gmax)])
         lag_grp = np.concatenate([lag, np.zeros(Gmax, dtype=np.int64)])
 
     # per-instance NIC capacity rows (and, with a trace, segment pointers)
     if trace is None:
-        bw_in_mat = np.tile(cluster.bw_in, (B, 1))
-        bw_out_mat = np.tile(cluster.bw_out, (B, 1))
+        bw_in_mat = np.tile(np.asarray(cluster.bw_in, dtype=np.float64), (B, 1))
+        bw_out_mat = np.tile(np.asarray(cluster.bw_out, dtype=np.float64), (B, 1))
         seg_times, n_segs, seg_b = None, 1, None
         slow_l = None
         t_break = np.full(B, np.inf)
@@ -855,8 +1210,18 @@ def simulate_batch(
     # coflow group ids are only consumed by omcoflow (and custom policies);
     # the built-in oes / oes_strict / fifo / mrtf rules ignore them, so the
     # per-event group computation (and the numpy `delivered` mirror it
-    # gathers from) is skipped for those.
-    needs_group = policy.name not in ("oes", "oes_strict", "fifo", "mrtf")
+    # gathers from) is skipped for those.  Shaping keeps the BASE policy's
+    # traits: strict mode is still a pure function of the flow topology
+    # (classes are fixed per column), deadline mode reads remaining + clock
+    # and must be recomputed every event — unless no flow in the whole
+    # batch carries a finite deadline, where it IS strict and keeps the
+    # caches (and skips the per-event escalation-wake scan).
+    dl_events = (
+        shaped and policy.mode == "deadline" and bool(np.isfinite(flow_dl).any())
+    )
+    _, needs_group, rates_cacheable, topo_cacheable = _policy_traits(
+        policy, inert_deadlines=shaped and policy.mode == "deadline" and not dl_events
+    )
     delivered_np = np.zeros((B, EG), dtype=np.int64) if needs_group else None
     sending = np.zeros((B, EG), dtype=np.int64)
     remaining = np.zeros((B, EG), dtype=np.float64)
@@ -880,15 +1245,14 @@ def simulate_batch(
     # per-flow rates stay valid until a flow starts or completes, so only
     # "dirty" instances re-enter the (expensive) rate computation.  mrtf /
     # omcoflow read ``remaining`` and must be recomputed every event.
-    rates_cacheable = policy.name in ("oes", "oes_strict", "fifo")
     rate_cache = np.zeros((B, EG), dtype=np.float64)
     dirty = np.ones(B, dtype=bool)
     # oes / oes_strict rates are a pure function of the active EDGE SET
     # (placement fixed per instance, bw shared) — and training iterations
     # revisit the same flow frontiers over and over, so memoise per-instance
-    # rates by active-set key.  fifo additionally depends on release times,
-    # so it only gets the dirty-tracking cache above.
-    topo_cacheable = policy.name in ("oes", "oes_strict")
+    # rates by active-set key (classes are part of the key for free: a
+    # column's class never changes).  fifo additionally depends on release
+    # times, so it only gets the dirty-tracking cache above.
     topo_caches: List[Dict[bytes, np.ndarray]] = [{} for _ in range(B)]
 
     # Hot per-(b, e) lookups in the completion handlers go through plain
@@ -986,6 +1350,8 @@ def simulate_batch(
 
     alive = np.array([bool(heaps[b]) or n_active[b] > 0 for b in range(B)])
     iters = 0
+    flow_cls_flat = flow_cls.ravel()
+    flow_dl_flat = flow_dl.ravel()
     with np.errstate(divide="ignore", invalid="ignore"):
         while alive.any():
             n_events[alive] += 1
@@ -1009,6 +1375,9 @@ def simulate_batch(
                                 drows, src_m.ravel()[dflat],
                                 dst_m.ravel()[dflat], rem_f[dmask],
                                 release.ravel()[dflat], None,
+                                flow_cls_flat[dflat] if shaped else None,
+                                flow_dl_flat[dflat] if shaped else None,
+                                t[drows] if shaped else None,
                             )
                         elif drows.size:
                             dflat = flat[dmask]
@@ -1038,6 +1407,9 @@ def simulate_batch(
                                     dst_m.ravel()[mflat],
                                     remaining.ravel()[mflat],
                                     release.ravel()[mflat], None,
+                                    flow_cls_flat[mflat] if shaped else None,
+                                    flow_dl_flat[mflat] if shaped else None,
+                                    t[drows[sel]] if shaped else None,
                                 )
                                 rc_flat[mflat] = rr
                                 k = 0
@@ -1056,6 +1428,9 @@ def simulate_batch(
                     rates = rates_fn(
                         rows, src_m.ravel()[flat], dst_m.ravel()[flat], rem_f,
                         release.ravel()[flat], grp,
+                        flow_cls_flat[flat] if shaped else None,
+                        flow_dl_flat[flat] if shaped else None,
+                        t[rows] if shaped else None,
                     )
                 dt = np.where(rates > EPS, rem_f / np.maximum(rates, EPS), np.inf)
                 counts = np.bincount(rows, minlength=B)
@@ -1068,6 +1443,26 @@ def simulate_batch(
                 [heaps[b][0][0] if heaps[b] else np.inf for b in range(B)]
             )
             t_next = np.minimum(np.minimum(t_task, t_flow), t_break)
+            # deadline shaping: per-instance earliest possible escalation,
+            # mirroring the scalar engine's fourth event source bit-for-bit
+            if dl_events and rows.size:
+                cand = (
+                    np.isfinite(flow_dl_flat[flat])
+                    & (flow_cls_flat[flat] > CLASS_TRAINING)
+                )
+                if cand.any():
+                    rsel = rows[cand]
+                    csel = flat[cand]
+                    lim = np.minimum(
+                        bw_in_mat[rsel, dst_m.ravel()[csel]],
+                        bw_out_mat[rsel, src_m.ravel()[csel]],
+                    )
+                    esc = flow_dl_flat[csel] - remaining.ravel()[csel] / np.maximum(lim, EPS)
+                    fut = esc > t[rsel] + EPS
+                    if fut.any():
+                        t_esc = np.full(B, np.inf)
+                        np.minimum.at(t_esc, rsel[fut], esc[fut])
+                        t_next = np.minimum(t_next, t_esc)
             if bool((alive & ~np.isfinite(t_next)).any()):  # pragma: no cover
                 raise RuntimeError("no progress: flows active but zero rates")
 

@@ -110,9 +110,31 @@ def merge_migrations(
                 MigrationFlow(
                     src=f.src, dst=f.dst, gb=f.gb,
                     task=f.task + off if f.task >= 0 else -1,
+                    cls=f.cls, deadline=f.deadline,
                 )
             )
     return out
+
+
+def merged_edge_classes(
+    mj: MergedJob, job_classes: Sequence[int]
+) -> np.ndarray:
+    """[E_merged] traffic-class ids: job ``ji``'s edges get
+    ``job_classes[ji]``.  Feed the result to
+    ``simulate(..., edge_classes=..., shaping=...)`` to run a merged
+    workload with per-job QoS classes — a latency-critical job's flows
+    (lower class id) are then never contended by a batch job's traffic,
+    while the batch job stays work-conserving on the leftover capacity.
+    Edges are attributed to jobs via their source task's offset range, so
+    the mapping survives any future reordering of the merge."""
+    if len(job_classes) != len(mj.task_offsets):
+        raise ValueError(
+            f"job_classes gives {len(job_classes)} entries but the merged "
+            f"job has {len(mj.task_offsets)} jobs"
+        )
+    bounds = np.asarray(mj.task_offsets + [mj.workload.J])
+    job_of = np.searchsorted(bounds, mj.workload.edge_src, side="right") - 1
+    return np.asarray(job_classes, dtype=np.int64)[job_of]
 
 
 def realize_merged(mj: MergedJob, jobs: Sequence[Workload], seed: int = 0) -> Realization:

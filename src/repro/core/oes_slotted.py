@@ -45,6 +45,8 @@ def simulate_slotted(
     max_slots: int = 2_000_000,
     trace=None,
     migrations=None,
+    shaping=None,
+    edge_classes=None,
 ) -> SlottedResult:
     """``trace`` (repro.dynamics.traces.BandwidthTrace) makes the oracle
     time-varying: slot ``t`` transmits with the bandwidth of the segment
@@ -59,7 +61,26 @@ def simulate_slotted(
     rate rule with the training flows; a gated task is unavailable until
     the slot after its state flow drains — mirroring the event engine's
     release-at-t=0 + first-iteration gating, so slot->0 agreement holds for
-    migration-loaded runs too."""
+    migration-loaded runs too.
+
+    ``shaping`` (``None`` | ``"strict"`` | ``"deadline"``) mirrors the
+    event engine's class-aware shaping over the line-21 rule: classes are
+    served in ascending id order, each class degree-balanced against the
+    capacity left over by the classes above it; ``"deadline"`` promotes a
+    background flow strictly above class 0 once its deadline slack is
+    consumed (EDF escalation).
+    ``edge_classes`` ([E] int) assigns the workload's own flows to QoS
+    classes.  Agreement with ``simulate(..., shaping=...)`` under the
+    ``oes_strict+<mode>`` policy tightens as slot -> 0."""
+    from .engine import (
+        SHAPING_MODES,
+        _check_edge_classes,
+        _class_shaped_rates,
+        _effective_classes,
+    )
+
+    if shaping is not None and shaping not in SHAPING_MODES:
+        raise ValueError(f"unknown shaping mode {shaping!r}; known: {SHAPING_MODES}")
     N = realization.n_iters
     J, E = workload.J, workload.E
     y = placement.y
@@ -96,6 +117,8 @@ def simulate_slotted(
     from .engine import EPS as _ENG_EPS, check_migration_flows
 
     migs = check_migration_flows(migrations, cluster.M, J)
+    ec = _check_edge_classes(edge_classes, E)
+    edge_cls = ec if ec is not None else np.zeros(E, dtype=np.int64)
     mig_rem: Dict[int, float] = {}
     mig_left = np.zeros(J, dtype=np.int64)
     for g, f in enumerate(migs):
@@ -188,6 +211,8 @@ def simulate_slotted(
 
         # lines 18-21: transmit for one slot with degree-balanced rates;
         # active migration flows share the NIC degrees with training flows
+        # (unshaped) or are served from the leftover capacity per class
+        # (shaped), mirroring the event engine's ShapedPolicy
         if f_act or mig_rem:
             edges = list(f_act.keys())
             mig_ids = list(mig_rem.keys())
@@ -199,20 +224,59 @@ def simulate_slotted(
                 [y[dst_t[e]] for e in edges] + [migs[g].dst for g in mig_ids],
                 dtype=np.int64,
             )
-            d_out = np.bincount(srcs, minlength=cluster.M)
-            d_in = np.bincount(dsts, minlength=cluster.M)
-            for e, sm, dm in zip(edges, srcs[: len(edges)], dsts[: len(edges)]):
-                k = min(bw_in[dm] / d_in[dm], bw_out[sm] / d_out[sm])
-                f_act[e][1] -= k
+            if shaping is None:
+                d_out = np.bincount(srcs, minlength=cluster.M)
+                d_in = np.bincount(dsts, minlength=cluster.M)
+                rate = np.minimum(
+                    bw_in[dsts] / d_in[dsts], bw_out[srcs] / d_out[srcs]
+                )
+            else:
+                cls_arr = np.concatenate(
+                    [edge_cls[edges].astype(np.int64) if edges else
+                     np.zeros(0, dtype=np.int64),
+                     np.array([migs[g].cls for g in mig_ids], dtype=np.int64)]
+                )
+                if shaping == "deadline" and mig_ids:
+                    rem_arr = np.array(
+                        [f_act[e][1] for e in edges] + [mig_rem[g] for g in mig_ids]
+                    )
+                    dl_arr = np.array(
+                        [np.inf] * len(edges)
+                        + [migs[g].deadline for g in mig_ids]
+                    )
+                    # ONE escalation rule with the event engine: bw arrays
+                    # here are GB per SLOT, so rescale to GB/s for the
+                    # seconds-based slack test
+                    cls_arr = _effective_classes(
+                        "deadline", cls_arr, dl_arr, rem_arr, srcs, dsts,
+                        bw_in / slot, bw_out / slot, (t - 1) * slot,
+                    )
+
+                # ONE leftover-capacity loop with the event engine, the
+                # base rule being line 21's degree-balanced share; classes
+                # were already escalated above, so mode "strict" here
+                def line21(m, rem_in_cap, rem_out_cap):
+                    sm = srcs if m is None else srcs[m]
+                    dm = dsts if m is None else dsts[m]
+                    d_out = np.bincount(sm, minlength=cluster.M)
+                    d_in = np.bincount(dm, minlength=cluster.M)
+                    return np.minimum(
+                        rem_in_cap[dm] / d_in[dm], rem_out_cap[sm] / d_out[sm]
+                    )
+
+                rate = _class_shaped_rates(
+                    "strict", cls_arr, None, None, srcs, dsts,
+                    bw_in, bw_out, 0.0, cluster.M, line21,
+                )
+            for i, e in enumerate(edges):
+                f_act[e][1] -= rate[i]
                 if f_act[e][1] <= EPS:
                     n = int(f_act[e][0])
                     delivered[e] = n
                     del f_act[e]
                     finished_flows_prev.append((e, n))
             for i, g in enumerate(mig_ids):
-                sm, dm = srcs[len(edges) + i], dsts[len(edges) + i]
-                k = min(bw_in[dm] / d_in[dm], bw_out[sm] / d_out[sm])
-                mig_rem[g] -= k
+                mig_rem[g] -= rate[len(edges) + i]
                 if mig_rem[g] <= EPS:
                     del mig_rem[g]
                     tsk = migs[g].task

@@ -11,6 +11,7 @@ from .replan import (
     ReplanConfig,
     ReplanRecord,
     Replanner,
+    annotate_deadlines,
     build_migration_flows,
     default_task_state_gb,
     migration_drain_bound,

@@ -112,6 +112,31 @@ def build_migration_flows(
     ]
 
 
+def annotate_deadlines(
+    flows: Sequence[MigrationFlow], clean_results
+) -> List[MigrationFlow]:
+    """Fill each gated flow's ``deadline`` with the gated task's slack: the
+    earliest start of its FIRST iteration across the recorded clean-variant
+    simulations — the task's earliest possible start absent migration.  A
+    flow that lands by then provably delays nothing, so deadline shaping
+    keeps it in the background exactly as long as that slack allows and
+    escalates it EDF-style once the slack is consumed.  Ungated flows pass
+    through untouched (``inf`` deadline: never escalates)."""
+    starts: Dict[int, float] = {}
+    for res in clean_results:
+        for ev in res.task_events:
+            if ev.iter == 1:
+                cur = starts.get(ev.task)
+                if cur is None or ev.start < cur:
+                    starts[ev.task] = ev.start
+    return [
+        dataclasses.replace(f, deadline=float(starts.get(f.task, float("inf"))))
+        if f.task >= 0
+        else f
+        for f in flows
+    ]
+
+
 def migration_drain_bound(
     cluster: ClusterSpec, flows: Sequence[MigrationFlow]
 ) -> float:
@@ -174,7 +199,18 @@ def migration_time(
 
 @dataclass
 class ReplanConfig:
-    """Knobs of the incremental re-planner."""
+    """Knobs of the incremental re-planner.
+
+    ``shaping`` selects the traffic-class treatment of migration flows in
+    BOTH the candidate-scoring simulations and the committed schedule:
+    ``None`` (migration competes as an equal, the pre-class behaviour),
+    ``"strict"`` (migration only gets leftover NIC capacity) or
+    ``"deadline"`` (strict until a gated flow's slack — the gated task's
+    earliest possible start in the clean variant — is consumed, then the
+    flow escalates strictly above the training class, EDF-style).
+    Deadlines are
+    filled automatically from the clean-variant simulation the objective
+    already runs."""
 
     drift_threshold: float = 0.25  # max relative NIC change tolerated
     budget: int = 250  # warm ETP transitions per re-plan
@@ -182,6 +218,7 @@ class ReplanConfig:
     sim_draws: int = 1
     policy: str = "oes"
     migration_weight: float = 1.0  # 0 disables the migration term
+    shaping: Optional[str] = None  # None | "strict" | "deadline"
     seed: int = 0
 
 
@@ -295,7 +332,11 @@ class Replanner:
         interval WITH the flows injected (both variants share one
         ``simulate_batch`` call).  A move whose transfer hides entirely
         inside compute/network bubbles is genuinely free — the old analytic
-        bill charged it the full serial drain regardless.
+        bill charged it the full serial drain regardless.  Under
+        ``cfg.shaping`` the loaded variant runs with migration traffic
+        shaped by class (strict leftover-only, or deadline-escalating), so
+        candidates are scored under exactly the schedule the committed
+        flows will ride.
 
         ``amortize_over``: the number of plan intervals the new placement
         is expected to persist for.  The overlap is paid once in the first
@@ -340,25 +381,48 @@ class Replanner:
             from ..cache.adjust import CacheRewriter
 
             rewriter = CacheRewriter(self.workload, cluster_now, self.hit_model)
-        # per-placement (base, overlap) for the committed record, filled by
-        # the objective as the chain measures candidates (memoised upstream
-        # by placement key, so each unique candidate is simulated once)
-        side: Dict[bytes, Tuple[float, float]] = {}
+        # per-placement (base, overlap, flows) for the committed record,
+        # filled by the objective as the chain measures candidates (memoised
+        # upstream by placement key, so each unique candidate is simulated
+        # once); flows carry deadline annotations under deadline shaping
+        side: Dict[bytes, Tuple[float, float, List[MigrationFlow]]] = {}
 
         def sim_pair(
             p: Placement, migs: List[MigrationFlow]
-        ) -> Tuple[float, float]:
-            """(clean, loaded) mean makespans; the loaded variant injects
-            ``migs`` — both run in ONE lock-step batch.  With a cache tier
-            the draws are rewritten to ``p``'s cache-adjusted traffic
-            first, so the overlap is priced against the contention the
-            flows will ACTUALLY see (matching the scenario's interval
-            simulation), not the heavier uncached phantom traffic."""
+        ) -> Tuple[float, float, List[MigrationFlow]]:
+            """(clean, loaded, flows) mean makespans; the loaded variant
+            injects ``migs`` under ``cfg.shaping`` — with strict/no shaping
+            both variants run in ONE lock-step batch (a shaped policy with
+            no migration flows is a bit-identical pass-through, so the
+            clean legs stay comparable to unshaped records).  Deadline
+            shaping needs the clean variant FIRST: it is recorded, the
+            gated flows' deadlines are filled from its task starts
+            (``annotate_deadlines``), and the loaded variant runs second —
+            the returned ``flows`` carry those deadlines so the committed
+            record (and the scenario's true interval simulation) reuse
+            them.  With a cache tier the draws are rewritten to ``p``'s
+            cache-adjusted traffic first, so the overlap is priced against
+            the contention the flows will ACTUALLY see (matching the
+            scenario's interval simulation), not the heavier uncached
+            phantom traffic."""
             rs = [rewriter.adjust(p, r) for r in reals] if rewriter else reals
-            if migs:
+            if migs and cfg.shaping == "deadline":
+                clean_res = simulate_batch(
+                    self.workload, cluster_now, [p] * n_d, rs,
+                    policy=cfg.policy, record=True,
+                )
+                clean = sum(r.makespan for r in clean_res) / n_d
+                migs = annotate_deadlines(migs, clean_res)
+                loaded_res = simulate_batch(
+                    self.workload, cluster_now, [p] * n_d, rs,
+                    policy=cfg.policy, shaping="deadline",
+                    migrations=[migs] * n_d,
+                )
+                loaded = sum(r.makespan for r in loaded_res) / n_d
+            elif migs:
                 res = simulate_batch(
                     self.workload, cluster_now, [p] * (2 * n_d), rs + rs,
-                    policy=cfg.policy,
+                    policy=cfg.policy, shaping=cfg.shaping,
                     migrations=[None] * n_d + [migs] * n_d,
                 )
                 clean = sum(r.makespan for r in res[:n_d]) / n_d
@@ -370,7 +434,7 @@ class Replanner:
                 )
                 clean = sum(r.makespan for r in res) / n_d
                 loaded = clean
-            return clean, loaded
+            return clean, loaded, migs
 
         def flows_for(p: Placement) -> List[MigrationFlow]:
             restores = [
@@ -390,15 +454,15 @@ class Replanner:
                 base = cache_cost(p)
                 overlap = 0.0
                 if migs and weight > 0:
-                    clean, loaded = sim_pair(p, migs)
+                    clean, loaded, migs = sim_pair(p, migs)
                     overlap = loaded - clean
             elif migs and weight > 0:
-                base, loaded = sim_pair(p, migs)
+                base, loaded, migs = sim_pair(p, migs)
                 overlap = loaded - base
             else:
-                base, _ = sim_pair(p, [])
+                base, _, _ = sim_pair(p, [])
                 overlap = 0.0
-            side[p.key()] = (base, overlap)
+            side[p.key()] = (base, overlap, migs)
             # gating can perturb event phasing enough that the loaded run
             # occasionally finishes EARLIER (a scheduling anomaly, not a
             # migration rebate) — price only non-negative overlap so a
@@ -419,12 +483,11 @@ class Replanner:
             extra_violation=extra,
         )
         committed = res.placement
-        base, overlap = side[committed.key()]
-        flows = flows_for(committed)
+        base, overlap, flows = side[committed.key()]
         if flows and weight == 0.0:
             # the objective never priced migration (migration_free): still
             # report the physical overlap of whatever moves it chose
-            clean, loaded = sim_pair(committed, flows)
+            clean, loaded, flows = sim_pair(committed, flows)
             overlap = loaded - clean
         moved = (committed.y != old_y_disc) & (old_y_disc >= 0)
         same_m = len(cluster_now.bw_in) == len(self._planned_bw_in)

@@ -53,6 +53,7 @@ class IntervalOutcome:
 @dataclass
 class ScenarioOutcome:
     strategy: str
+    shaping: Optional[str] = None  # traffic-class mode the flows rode under
     intervals: List[IntervalOutcome] = field(default_factory=list)
     placements: List[Placement] = field(default_factory=list)
 
@@ -118,7 +119,10 @@ def run_scenario(
         workload, cluster, placement.copy(), config=cfg,
         hit_model=hit_model, cache_config=cache_config,
     )
-    out = ScenarioOutcome(strategy=strategy)
+    # only the replan strategy commits migration flows, so only it can
+    # ride them under a traffic-class shaping mode (cfg.shaping)
+    shaping = cfg.shaping if strategy == "replan" else None
+    out = ScenarioOutcome(strategy=strategy, shaping=shaping)
     now = 0.0
     model = hit_model
     for i in range(n_intervals):
@@ -158,9 +162,14 @@ def run_scenario(
 
             r_iv = CacheRewriter(workload, cluster, model).adjust(placement, r_iv)
         tw = trace.window(now)
+        # committed flows ride the TRUE interval simulation under the
+        # replanner's shaping mode (their deadline annotations, if any,
+        # travel with them); the clean reference never carries flows, so
+        # shaping would be a bit-identical no-op there and is skipped
         res_iv = simulate(
             workload, cluster, placement, r_iv,
             policy=policy, trace=tw, migrations=flows or None,
+            shaping=shaping if flows else None,
         )
         overlap_s = 0.0
         if flows:

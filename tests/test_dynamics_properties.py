@@ -17,11 +17,16 @@ For random jobs, clusters, drift traces and re-plan states:
       bound for ANY flow set, policy and live workload — and equals it
       (within float tolerance) on an idle cluster when the flows are
       NIC-disjoint: the closed form is a certified LOWER bound, no longer
-      the model.
+      the model;
+  D6  strict traffic-class de-prioritisation of UNGATED migration flows
+      never increases the training tasks' completion time relative to
+      unshaped equal-priority competition, under every rate policy — the
+      class-0 pass computes training rates as if migration did not exist.
 
-D1/D2 run derandomized: they are near-universal rather than adversarially
-proven properties (event-order anomalies are conceivable in theory), so CI
-pins the explored example set instead of gambling on fresh draws.
+D1/D2/D6 run derandomized: they are near-universal rather than
+adversarially proven properties (event-order anomalies are conceivable in
+theory), so CI pins the explored example set instead of gambling on fresh
+draws.
 """
 import numpy as np
 import pytest
@@ -216,6 +221,38 @@ def test_flow_completion_equals_bound_on_idle_disjoint(j, fseed, pidx):
     mk = simulate(wl, cluster, p, idle, policy=policy, migrations=migs).makespan
     bound = migration_drain_bound(cluster, migs)
     assert mk == pytest.approx(bound, rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(job_st, flows_st, st.integers(0, 4))
+def test_strict_shaping_never_increases_training_makespan(j, raw_flows, pidx):
+    """D6: de-prioritised (class-shaped strict) UNGATED state flows can
+    only help the training tasks vs unshaped equal-priority competition —
+    training rates are computed from the training flow set alone, so its
+    trajectory is the migration-free one.  mrtf/omcoflow rates read
+    ``remaining`` and see a refined event grid, hence the small relative
+    tolerance (the perturbation is the grid, not migration contention)."""
+    wl, cluster, p, r = build(j)
+    migs = [
+        MigrationFlow(src=s % cluster.M, dst=d % cluster.M, gb=gb)
+        for s, d, gb in raw_flows
+    ]
+    assume(any(f.src != f.dst for f in migs))
+    policy = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")[pidx]
+    unshaped = simulate(
+        wl, cluster, p, r, policy=policy, migrations=migs, record=True
+    )
+    shaped = simulate(
+        wl, cluster, p, r, policy=policy, migrations=migs, record=True,
+        shaping="strict",
+    )
+    t_un = max(ev.end for ev in unshaped.task_events)
+    t_sh = max(ev.end for ev in shaped.task_events)
+    tol = 1e-9 if policy in ("oes", "oes_strict", "fifo") else 1e-2
+    assert t_sh <= t_un * (1 + tol), (policy, t_sh, t_un)
+    # and the training trajectory is the clean one
+    clean = simulate(wl, cluster, p, r, policy=policy).makespan
+    assert t_sh == pytest.approx(clean, rel=max(tol, 1e-9))
 
 
 @settings(max_examples=8, deadline=None)

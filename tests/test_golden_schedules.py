@@ -4,15 +4,20 @@ The engine is the substrate every search, cache and dynamics result rests
 on, and its contract is EXACT: same inputs -> bit-identical schedules.
 This suite pins the makespan and the full task-start matrix of all five
 rate policies on three small fixed jobs — each under the static cluster,
-under a fixed dynamic bandwidth/straggler trace, AND under that trace
-with a fixed migration-flow set riding the NICs (a gated store restore,
-a gated tail-task move, an ungated bulk transfer) — against checked-in
-JSON (``tests/golden/golden_schedules.json``), so an engine refactor that
-shifts any schedule by even one ULP fails loudly instead of silently
-re-basing every downstream number.
+under a fixed dynamic bandwidth/straggler trace, under that trace with a
+fixed migration-flow set riding the NICs (a gated store restore, a gated
+tail-task move, an ungated bulk transfer), AND under the same flows
+deadline-SHAPED by traffic class (the "priority" regime: one tight
+deadline that escalates mid-run, one loose, one ungated background flow)
+— against checked-in JSON (``tests/golden/golden_schedules.json``), so an
+engine refactor that shifts any schedule by even one ULP fails loudly
+instead of silently re-basing every downstream number.
 
 Regenerate (ONLY when a semantics change is intended, with the diff
 reviewed):  PYTHONPATH=src python tests/test_golden_schedules.py --regen
+<regime...>.  Regimes already pinned in the JSON are NEVER overwritten
+unless named explicitly — bare ``--regen`` only fills in missing regimes,
+so adding a new regime cannot silently re-pin static/dynamic/migration.
 """
 import json
 from pathlib import Path
@@ -31,6 +36,7 @@ from repro.dynamics import DynamicsEvent, trace_from_events
 
 GOLDEN_PATH = Path(__file__).parent / "golden" / "golden_schedules.json"
 POLICIES = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")
+JOBS = ("fanin", "chain", "ring")
 
 
 def _jobs():
@@ -83,18 +89,37 @@ def _cases():
             ),
             MigrationFlow(src=0, dst=1, gb=0.5),
         ]
-        for regime, trace, flows in (
-            ("static", None, None),
-            ("dynamic", dyn, None),
-            ("migration", dyn, migs),
+        # the same flow set under deadline shaping: the store restore's
+        # tight deadline escalates it into the training class mid-run, the
+        # tail move's loose deadline keeps it in the background for most of
+        # the schedule, the ungated transfer never escalates
+        migs_pri = [
+            MigrationFlow(
+                src=migs[0].src, dst=migs[0].dst, gb=1.2, task=0, deadline=0.5
+            ),
+            MigrationFlow(
+                src=migs[1].src, dst=migs[1].dst, gb=0.8, task=wl.J - 1,
+                deadline=3.0,
+            ),
+            MigrationFlow(src=0, dst=1, gb=0.5),
+        ]
+        for regime, trace, flows, shaping in (
+            ("static", None, None, None),
+            ("dynamic", dyn, None, None),
+            ("migration", dyn, migs, None),
+            ("priority", dyn, migs_pri, "deadline"),
         ):
-            yield name, regime, wl, cluster, placement, realization, trace, flows
+            yield (
+                name, regime, wl, cluster, placement, realization, trace,
+                flows, shaping,
+            )
 
 
-def _schedule(wl, cluster, placement, realization, policy, trace, flows):
+def _schedule(wl, cluster, placement, realization, policy, trace, flows,
+              shaping=None):
     res = simulate(
         wl, cluster, placement, realization, policy=policy,
-        record=True, trace=trace, migrations=flows,
+        record=True, trace=trace, migrations=flows, shaping=shaping,
     )
     starts = res.task_start_matrix(wl.J, realization.n_iters)
     assert not np.isnan(starts).any()
@@ -105,16 +130,55 @@ def _schedule(wl, cluster, placement, realization, policy, trace, flows):
     }
 
 
-def _generate():
+def _generate(needed=None):
+    """Simulate the golden cells; ``needed`` (a set of (job, regime))
+    restricts generation so a partial regen doesn't pay for schedules it
+    will discard anyway."""
     golden = {}
-    for name, regime, wl, cluster, placement, realization, trace, flows in _cases():
+    for (
+        name, regime, wl, cluster, placement, realization, trace, flows,
+        shaping,
+    ) in _cases():
+        if needed is not None and (name, regime) not in needed:
+            continue
         golden.setdefault(name, {})[regime] = {
             policy: _schedule(
-                wl, cluster, placement, realization, policy, trace, flows
+                wl, cluster, placement, realization, policy, trace, flows,
+                shaping,
             )
             for policy in POLICIES
         }
     return golden
+
+
+def regen_golden(named=None, path=GOLDEN_PATH, generate=_generate):
+    """Regenerate the golden file WITHOUT silently re-pinning history.
+
+    Regimes already present in ``path`` are preserved byte-identically
+    unless listed in ``named``; regimes missing from the file are always
+    filled in (and only those cells are simulated).  Returns
+    ``(golden, written, preserved)`` where the lists name the
+    (job, regime) cells that were freshly generated / kept."""
+    named = set(named or ())
+    unknown = named - set(REGIMES)
+    if unknown:
+        raise ValueError(f"unknown regime(s) {sorted(unknown)}; known: {REGIMES}")
+    existing = json.loads(path.read_text()) if path.exists() else {}
+    all_cells = [(n, r) for n in JOBS for r in REGIMES]
+    needed = {
+        (n, r) for n, r in all_cells
+        if r in named or existing.get(n, {}).get(r) is None
+    }
+    fresh = generate(needed)
+    out, written, preserved = {}, [], []
+    for n, r in all_cells:
+        if (n, r) in needed:
+            out.setdefault(n, {})[r] = fresh[n][r]
+            written.append((n, r))
+        else:
+            out.setdefault(n, {})[r] = existing[n][r]
+            preserved.append((n, r))
+    return out, written, preserved
 
 
 @pytest.fixture(scope="module")
@@ -128,23 +192,25 @@ def golden():
     return json.loads(GOLDEN_PATH.read_text())
 
 
-REGIMES = ("static", "dynamic", "migration")
+REGIMES = ("static", "dynamic", "migration", "priority")
 
 
 @pytest.mark.parametrize(
     "name,regime",
-    [(n, r) for n in ("fanin", "chain", "ring") for r in REGIMES],
+    [(n, r) for n in JOBS for r in REGIMES],
 )
 def test_schedules_match_golden(golden, name, regime):
     cases = {
-        (n, r): (wl, cluster, p, real, trace, flows)
-        for n, r, wl, cluster, p, real, trace, flows in _cases()
+        (n, r): (wl, cluster, p, real, trace, flows, shaping)
+        for n, r, wl, cluster, p, real, trace, flows, shaping in _cases()
     }
-    wl, cluster, placement, realization, trace, flows = cases[(name, regime)]
+    wl, cluster, placement, realization, trace, flows, shaping = cases[
+        (name, regime)
+    ]
     want = golden[name][regime]
     for policy in POLICIES:
         got = _schedule(
-            wl, cluster, placement, realization, policy, trace, flows
+            wl, cluster, placement, realization, policy, trace, flows, shaping
         )
         ref = want[policy]
         assert got["makespan"] == ref["makespan"], (
@@ -157,7 +223,7 @@ def test_schedules_match_golden(golden, name, regime):
 
 
 def test_golden_covers_every_case(golden):
-    for name in ("fanin", "chain", "ring"):
+    for name in JOBS:
         for regime in REGIMES:
             assert set(golden[name][regime]) == set(POLICIES), (name, regime)
 
@@ -166,8 +232,19 @@ if __name__ == "__main__":
     import sys
 
     if "--regen" in sys.argv:
+        named = [a for a in sys.argv[sys.argv.index("--regen") + 1:]
+                 if not a.startswith("-")]
+        golden, written, preserved = regen_golden(named)
         GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
-        GOLDEN_PATH.write_text(json.dumps(_generate(), indent=1) + "\n")
+        GOLDEN_PATH.write_text(json.dumps(golden, indent=1) + "\n")
         print(f"wrote {GOLDEN_PATH}")
+        for name, regime in written:
+            print(f"  generated {name}/{regime}")
+        kept = sorted({r for _, r in preserved})
+        if kept:
+            print(
+                f"  preserved pinned regimes {kept} byte-identically — "
+                "name a regime after --regen to deliberately re-pin it"
+            )
     else:
         print(__doc__)
