@@ -13,7 +13,9 @@ benches).  Prints ``name,us_per_call,derived`` CSV rows.
   dynamics        drift-trace re-planning: static vs replan vs oracle,
                   warm-vs-cold evaluations-to-quality (bench_dynamics;
                   ``--smoke`` shrinks budgets to CI size)
-  engine_*        event-engine throughput
+  engine_*        event-engine throughput: numpy vs jitted jax backend
+                  across batch width and workload scale (bench_engine;
+                  every row asserts makespan parity first)
   attn/ssd/flash  kernel-layer benches (XLA mirrors + interpret allclose)
   roofline_*      summary rows from the dry-run roofline table
 """
@@ -29,6 +31,7 @@ from . import (
     bench_algorithms,
     bench_cache,
     bench_dynamics,
+    bench_engine,
     bench_etp,
     bench_figures,
     bench_kernels,
@@ -70,12 +73,12 @@ def main() -> None:
         "--only", default=None,
         choices=[
             None, "figures", "algorithms", "kernels", "roofline", "etp",
-            "cache", "dynamics",
+            "cache", "dynamics", "engine",
         ],
     )
     ap.add_argument(
         "--smoke", action="store_true",
-        help="CI-sized budgets (currently honoured by the dynamics bench)",
+        help="CI-sized budgets (honoured by the dynamics and engine benches)",
     )
     args = ap.parse_args()
     print("name,us_per_call,derived")
@@ -83,6 +86,8 @@ def main() -> None:
         bench_algorithms.main()
     if args.only in (None, "etp"):
         bench_etp.main()
+    if args.only in (None, "engine"):
+        bench_engine.main(smoke=args.smoke)
     if args.only in (None, "cache"):
         bench_cache.main()
     if args.only in (None, "dynamics"):

@@ -100,6 +100,7 @@ def cache_cost_fns(
     seed: int = 0,
     policy: str = "oes",
     machine_models=None,
+    backend: Optional[str] = None,
 ) -> Tuple[
     Callable[[Placement], float],
     Callable[[Sequence[Placement]], List[float]],
@@ -113,7 +114,9 @@ def cache_cost_fns(
     (candidate x draw) pair in ONE ``simulate_batch`` call — the PR-1 fast
     path is preserved, only the volumes fed to it change per candidate.
     ``machine_models`` (machine -> HitModel) overrides the shared model on
-    specific machines (heterogeneous budgets)."""
+    specific machines (heterogeneous budgets).  ``backend`` selects the
+    simulation engine (``engine.resolve_backend``) — the rewritten volumes
+    feed either engine unchanged."""
     draws = monte_carlo_draws(
         workload, seed=seed, n_iters=sim_iters, n_draws=sim_draws
     )
@@ -123,7 +126,9 @@ def cache_cost_fns(
         groups = [
             (p, [rewriter.adjust(p, r) for r in draws]) for p in placements
         ]
-        return mean_batch_makespans(workload, cluster, groups, policy=policy)
+        return mean_batch_makespans(
+            workload, cluster, groups, policy=policy, backend=backend
+        )
 
     def scalar_cost(p: Placement) -> float:
         return batch_cost([p])[0]
@@ -144,6 +149,7 @@ def cache_aware_etp(
     seed: int = 0,
     policy: str = "oes",
     machine_models=None,
+    backend: Optional[str] = None,
     **kw,
 ) -> ETPResult:
     """Multi-chain ETP whose objective and capacity model are cache-aware.
@@ -162,7 +168,7 @@ def cache_aware_etp(
     _, batch_cost, _ = cache_cost_fns(
         workload, cluster, model,
         sim_iters=sim_iters, sim_draws=sim_draws, seed=seed, policy=policy,
-        machine_models=machine_models,
+        machine_models=machine_models, backend=backend,
     )
     return etp_multichain(
         workload,
@@ -218,11 +224,15 @@ def cache_aware_plan(
     adjusted = cache_adjusted_realization(
         workload, cluster, etp.placement, realization, model
     )
+    # committed/audit simulations stay on the reference numpy engine (the
+    # recorded flow_log is the audit artifact) even under REPRO_ENGINE_BACKEND
     schedule = simulate(
-        workload, cluster, etp.placement, adjusted, policy=policy, record=True
+        workload, cluster, etp.placement, adjusted, policy=policy, record=True,
+        backend="numpy",
     )
     uncached = simulate(
-        workload, cluster, etp.placement, realization, policy=policy
+        workload, cluster, etp.placement, realization, policy=policy,
+        backend="numpy",
     ).makespan
     return CachePlan(
         placement=etp.placement,

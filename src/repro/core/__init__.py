@@ -26,6 +26,7 @@ from .dgtp import Plan, plan, plan_baseline
 from .engine import (
     CLASS_MIGRATION,
     CLASS_TRAINING,
+    ENGINE_BACKENDS,
     FIFORate,
     MigrationFlow,
     MRTFRate,
@@ -41,6 +42,7 @@ from .engine import (
     expected_makespan_many,
     mean_batch_makespans,
     monte_carlo_draws,
+    resolve_backend,
     resolve_policy,
     simulate,
     simulate_batch,

@@ -12,7 +12,7 @@ from typing import Optional
 
 from .analysis import ChainCertificate, chain_lower_bound, max_degree, traffic_summary
 from .cluster import ClusterSpec, Placement
-from .engine import ScheduleResult, simulate
+from .engine import ScheduleResult, resolve_backend, simulate
 from .placement import (
     ETPResult,
     distdgl_placement,
@@ -21,6 +21,17 @@ from .placement import (
     ifs_placement,
 )
 from .workload import Realization, Workload
+
+# Default ETP chain count per engine backend, re-derived from the measured
+# chain sweep (ROADMAP perf log; pinned by tests/test_jax_engine.py).
+# numpy: 8 — the PR-1 sweet spot.  jax: 16 — on the planner-scale sweep
+# (budget 512, 6 machines) the jitted engine plans in ~1.0s at 16 chains
+# vs ~0.8s at 8 and vs numpy-8's ~6.2s, with best-makespan flat from 8 up
+# — doubling the basin count is nearly free on the jax backend.  Beyond 16
+# the per-chain memoisation caches stop overlapping their own history
+# (more cache misses = more simulations), costing wall with no measured
+# quality gain.
+DEFAULT_N_CHAINS = {"numpy": 8, "jax": 16}
 
 
 @dataclass
@@ -46,7 +57,8 @@ def plan(
     policy: str = "oes",
     search: bool = True,
     time_budget_s: Optional[float] = None,
-    n_chains: int = 8,
+    n_chains: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> Plan:
     """Run DGTP: search placement (ETP) then schedule online (OES).
 
@@ -64,8 +76,21 @@ def plan(
     chains explore more basins but walk each less; the two effects roughly
     cancel on the testbed jobs).  Raising ``n_chains`` with ``budget``
     scaled proportionally is never worse — chains are seed-nested in that
-    regime (tests/test_cache.py)."""
+    regime (tests/test_cache.py).
+
+    ``backend`` selects the simulation engine for the search's batched
+    evaluations (``engine.resolve_backend``: explicit >
+    ``REPRO_ENGINE_BACKEND`` > numpy) and with it the ``n_chains``
+    default (``DEFAULT_N_CHAINS``): the jax engine evaluates each
+    lock-step batch in one jitted call, so its default runs MORE chains
+    at the same budget (wider batches, more basins — re-derived from the
+    measured sweep in benchmarks/bench_engine.py).  The final committed
+    schedule always runs on the reference numpy engine: it is ONE
+    simulation, and its recorded ``flow_log`` feeds the audit artifacts."""
     realization = realization or workload.realize(seed=seed)
+    backend = resolve_backend(backend)
+    if n_chains is None:
+        n_chains = DEFAULT_N_CHAINS[backend]
     etp: Optional[ETPResult] = None
     if search:
         etp = etp_multichain(
@@ -79,12 +104,17 @@ def plan(
             seed=seed,
             policy=policy,
             time_budget_s=time_budget_s,
+            backend=backend,
         )
         placement = etp.placement
     else:
         placement = ifs_placement(workload, cluster, seed=seed)
+    # committed schedule: pinned to numpy even when REPRO_ENGINE_BACKEND=jax —
+    # the certificate's chain construction follows the recorded flow_log,
+    # which the jax engine does not produce (ONE simulation; never hot).
     schedule = simulate(
-        workload, cluster, placement, realization, policy=policy, record=True
+        workload, cluster, placement, realization, policy=policy, record=True,
+        backend="numpy",
     )
     cert = chain_lower_bound(workload, cluster, placement, realization, schedule)
     return Plan(
@@ -116,7 +146,8 @@ def plan_baseline(
         placement = ifs_placement(workload, cluster, seed=seed)
         policy = baseline
     schedule = simulate(
-        workload, cluster, placement, realization, policy=policy, record=True
+        workload, cluster, placement, realization, policy=policy, record=True,
+        backend="numpy",
     )
     cert = chain_lower_bound(workload, cluster, placement, realization, schedule)
     return Plan(

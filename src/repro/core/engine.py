@@ -40,10 +40,26 @@ loop, so constant factors matter: ``simulate_batch`` advances many
 independent (placement, realization) instances in lock-step so the
 per-event numpy overhead is amortised across the whole batch
 (benchmarks/bench_etp.py measures the resulting planning-loop throughput).
+
+Backends: ``simulate`` / ``simulate_batch`` / ``expected_makespan`` (and
+every consumer that threads the knob — placement search, re-planning, the
+cache-aware and multi-job objectives) accept ``backend="numpy" | "jax"``,
+defaulting to the ``REPRO_ENGINE_BACKEND`` environment variable and then
+to ``"numpy"``.  The numpy engine in this module is the REFERENCE
+implementation: exact event-by-event float64, bit-identical batch vs
+scalar, full ``flow_log``.  ``backend="jax"`` routes batched calls through
+``engine_jax.simulate_batch_jax`` — one jitted ``lax.while_loop`` array
+program per (width-bucket, topology, policy) that agrees with this engine
+at ``engine_jax.PARITY_RTOL`` (certified by tests/test_jax_engine.py) and
+multiplies planner placement-evaluations/sec on planner-scale workloads
+(measured in benchmarks/bench_engine.py and the ROADMAP perf log).  The
+jax backend supports the five built-in policies (custom ``RatePolicy``
+callables raise a clear error) and does not record ``flow_log``.
 """
 from __future__ import annotations
 
 import heapq
+import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -53,6 +69,40 @@ from .cluster import ClusterSpec, Placement
 from .workload import Realization, Workload
 
 EPS = 1e-9
+
+# Selectable simulation backends (see the module docstring's backend
+# section).  "numpy" is the reference event loop below; "jax" is the jitted
+# array program in engine_jax.py, parity-certified at PARITY_RTOL.
+ENGINE_BACKENDS = ("numpy", "jax")
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve the engine backend: explicit argument > the
+    ``REPRO_ENGINE_BACKEND`` environment variable > ``"numpy"``.
+
+    Raises ``ValueError`` for unknown names and ``RuntimeError`` (with the
+    original import error) when ``"jax"`` is requested but jax cannot be
+    imported — a mis-set environment fails loudly at the first simulation
+    instead of silently falling back to the slow path."""
+    if backend is None:
+        backend = os.environ.get("REPRO_ENGINE_BACKEND", "").strip() or "numpy"
+    backend = backend.lower()
+    if backend not in ENGINE_BACKENDS:
+        raise ValueError(
+            f"unknown engine backend {backend!r}; expected one of "
+            f"{ENGINE_BACKENDS} (explicit backend= or REPRO_ENGINE_BACKEND)"
+        )
+    if backend == "jax":
+        from . import engine_jax
+
+        if not engine_jax.HAVE_JAX:
+            raise RuntimeError(
+                "engine backend 'jax' requested (backend= or "
+                "REPRO_ENGINE_BACKEND) but jax is not importable: "
+                f"{engine_jax.JAX_IMPORT_ERROR!r} — install jax or use "
+                "backend='numpy'"
+            )
+    return backend
 
 # Traffic-class ids (see ShapedPolicy): LOWER id = HIGHER priority.  Training
 # flows default to class 0 and migration flows to class 1; merged multi-job
@@ -536,8 +586,16 @@ def simulate(
     migrations: Optional[Sequence[MigrationFlow]] = None,
     shaping: Optional[str] = None,
     edge_classes=None,
+    backend: Optional[str] = None,
 ) -> ScheduleResult:
     """Run one training job to completion under ``policy``; return schedule.
+
+    ``backend`` selects the simulation engine (``resolve_backend``:
+    explicit > ``REPRO_ENGINE_BACKEND`` > numpy).  ``"jax"`` runs the job
+    as a width-1 ``engine_jax.simulate_batch_jax`` call — same event
+    semantics at ``PARITY_RTOL``, no ``flow_log`` (see the module
+    docstring's backend section); scalar simulation is numpy's home turf,
+    the knob exists so a jax-selected stack never silently mixes engines.
 
     ``migrations`` (a sequence of ``MigrationFlow``) injects one-shot state
     moves released at t=0 that compete for NIC bandwidth with the training
@@ -578,6 +636,15 @@ def simulate(
     START time only — a task spanning a boundary keeps its original finish
     time, mirroring how a straggling host delays the work it has already
     admitted."""
+    if resolve_backend(backend) == "jax":
+        from .engine_jax import simulate_batch_jax
+
+        return simulate_batch_jax(
+            workload, cluster, [placement], [realization], policy=policy,
+            record=record, max_events=max_events, trace=trace,
+            migrations=[migrations] if migrations is not None else None,
+            shaping=shaping, edge_classes=edge_classes,
+        )[0]
     policy = resolve_policy(policy, shaping)
     shaped = isinstance(policy, ShapedPolicy)
     N = realization.n_iters
@@ -1105,6 +1172,7 @@ def simulate_batch(
     migrations: Optional[Sequence[Optional[Sequence[MigrationFlow]]]] = None,
     shaping: Optional[str] = None,
     edge_classes=None,
+    backend: Optional[str] = None,
 ) -> List[ScheduleResult]:
     """Run ``B = len(placements)`` independent jobs to completion in
     lock-step; instance ``b`` pairs ``placements[b]`` with
@@ -1129,7 +1197,20 @@ def simulate_batch(
 
     ``shaping`` / ``edge_classes`` follow ``simulate``: traffic classes are
     per-instance heterogeneous through the per-instance migration flow sets
-    (``edge_classes`` is shared — one workload, one class per edge)."""
+    (``edge_classes`` is shared — one workload, one class per edge).
+
+    ``backend`` (``resolve_backend``: explicit > ``REPRO_ENGINE_BACKEND``
+    > numpy) routes the whole batch through the jitted jax engine — this
+    is the throughput path the knob exists for (see the module docstring's
+    backend section and benchmarks/bench_engine.py)."""
+    if resolve_backend(backend) == "jax":
+        from .engine_jax import simulate_batch_jax
+
+        return simulate_batch_jax(
+            workload, cluster, placements, realizations, policy=policy,
+            record=record, max_events=max_events, trace=trace,
+            migrations=migrations, shaping=shaping, edge_classes=edge_classes,
+        )
     policy = resolve_policy(policy, shaping)
     shaped = isinstance(policy, ShapedPolicy)
     B = len(placements)
@@ -1579,12 +1660,14 @@ def expected_makespan(
     n_draws: int = 3,
     seed: int = 0,
     batch: Optional[bool] = None,
+    backend: Optional[str] = None,
 ) -> float:
     """Monte-Carlo estimate of T'_Y (paper §V-B): simulate ``n_iters``
     iterations a few times with fresh draws from the traffic profile.
 
     With ``batch`` (default: whenever ``n_draws > 1``) all draws advance in
-    one fused ``simulate_batch`` call — bit-identical result, one event loop."""
+    one fused ``simulate_batch`` call — bit-identical result, one event loop.
+    ``backend`` is threaded to the engine (see ``resolve_backend``)."""
     if batch is None:
         batch = n_draws > 1
     reals = monte_carlo_draws(
@@ -1592,12 +1675,16 @@ def expected_makespan(
     )
     if batch:
         results = simulate_batch(
-            workload, cluster, [placement] * n_draws, reals, policy=policy
+            workload, cluster, [placement] * n_draws, reals, policy=policy,
+            backend=backend,
         )
         makespans = [r.makespan for r in results]
     else:
         makespans = [
-            simulate(workload, cluster, placement, r, policy=policy).makespan
+            simulate(
+                workload, cluster, placement, r, policy=policy,
+                backend=backend,
+            ).makespan
             for r in reals
         ]
     total = 0.0
@@ -1611,6 +1698,7 @@ def mean_batch_makespans(
     cluster: ClusterSpec,
     groups: Sequence[Tuple[Placement, Sequence[Realization]]],
     policy: RatePolicy | str = "oes",
+    backend: Optional[str] = None,
 ) -> List[float]:
     """One ``simulate_batch`` over ``(placement, realizations)`` groups;
     returns each group's mean makespan over its realizations (summed in
@@ -1624,7 +1712,9 @@ def mean_batch_makespans(
         batch_p += [p] * len(reals)
         batch_r += list(reals)
         sizes.append(len(reals))
-    results = simulate_batch(workload, cluster, batch_p, batch_r, policy=policy)
+    results = simulate_batch(
+        workload, cluster, batch_p, batch_r, policy=policy, backend=backend
+    )
     out: List[float] = []
     k = 0
     for s in sizes:
@@ -1644,6 +1734,7 @@ def expected_makespan_many(
     n_iters: int = 20,
     n_draws: int = 3,
     seed: int = 0,
+    backend: Optional[str] = None,
 ) -> List[float]:
     """Fused T'_Y for many candidate placements sharing one draw seed: all
     placements x draws run in ONE ``simulate_batch`` call.  Bit-identical
@@ -1656,5 +1747,6 @@ def expected_makespan_many(
         workload, seed=seed, n_iters=n_iters, n_draws=n_draws
     )
     return mean_batch_makespans(
-        workload, cluster, [(p, reals) for p in placements], policy=policy
+        workload, cluster, [(p, reals) for p in placements], policy=policy,
+        backend=backend,
     )

@@ -1,0 +1,879 @@
+"""JAX backend for the batched event engine: jitted rate solves + advancement.
+
+This module ports ``engine.simulate_batch``'s lock-step inner loop to a
+single jitted ``lax.while_loop`` array program so the planner's
+placement-evaluations/sec scale with batch width instead of paying Python
+per-event overhead per instance.  The event calculus is identical to the
+numpy engine (the reference implementation):
+
+  * one outer iteration = one lock-step event per still-alive instance:
+    a SETTLE fixpoint (task completions -> flow completions/migration
+    gating -> flow arming incl. zero-volume cascades -> task starts,
+    repeated until nothing changes at the current instant) followed by an
+    ADVANCE step (rate solve, next-event time over task ends / flow
+    drains / dynamic-trace segment boundaries / deadline-escalation
+    wakes, remaining-volume decrement, per-instance segment pointers);
+  * all five built-in rate policies (oes / oes_strict / fifo / mrtf /
+    omcoflow) are expressed as masked ``[B, EG]`` array programs over the
+    per-instance ``[B, M]`` NIC capacity rows — the sequential waterfill
+    (fifo/mrtf) optionally runs as a Pallas kernel
+    (``repro.kernels.waterfill``, Mosaic-fallback idiom) where it pays;
+  * ``ShapedPolicy`` class shaping is a statically unrolled loop over the
+    run's concrete class levels (plus the EDF escalation level in
+    deadline mode), each level rated against the leftovers of the levels
+    above it, exactly like ``engine._class_shaped_rates``.
+
+Precision/parity contract: the backend runs in float64 (x64 is enabled at
+import, an explicit and tested choice — see tests/test_jax_engine.py) and
+agrees with the numpy engine on makespans and task-start schedules at
+``PARITY_RTOL`` (XLA may fuse multiply-adds, so bit-equality is not
+promised the way numpy batch-vs-scalar is).  Known divergences, by design:
+``n_events`` counts jitted lock-step iterations (zero-duration cascades
+settle in one iteration instead of several) and ``flow_log`` is not
+recorded (``record=True`` still yields exact ``task_events``).
+
+Batch widths are padded to the next power of two (repeating instance 0)
+so the jit cache sees a handful of shapes instead of one per width; the
+compiled program cache is keyed on (padded width, workload topology,
+policy, shaping levels, trace length, record).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from .cluster import ClusterSpec, Placement
+from .engine import (
+    CLASS_TRAINING,
+    EPS,
+    MigrationFlow,
+    RatePolicy,
+    ScheduleResult,
+    ShapedPolicy,
+    TaskEvent,
+    _check_edge_classes,
+    check_migration_flows,
+    resolve_policy,
+)
+from .workload import Realization, Workload
+
+try:  # pragma: no cover - exercised only when jax is absent
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from jax import lax
+
+    HAVE_JAX = True
+    JAX_IMPORT_ERROR: Optional[BaseException] = None
+except Exception as _exc:  # pragma: no cover
+    HAVE_JAX = False
+    JAX_IMPORT_ERROR = _exc
+
+# Pinned jax-vs-numpy agreement tolerance (documented in ROADMAP.md):
+# both engines run float64 and perform the same arithmetic, but XLA is
+# free to contract multiply-adds, so schedules can drift by a few ULPs
+# per event.  Certified by tests/test_jax_engine.py.
+PARITY_RTOL = 1e-6
+PARITY_ATOL = 1e-9
+
+JAX_POLICIES = ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")
+
+_RUNNERS: Dict[tuple, object] = {}
+
+
+def _use_pallas_waterfill() -> bool:
+    """Pallas waterfill where it pays: opt-in via env on CPU (interpret
+    mode traces the same program XLA already runs), default on TPU."""
+    env = os.environ.get("REPRO_WATERFILL_PALLAS", "").strip().lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    return HAVE_JAX and jax.default_backend() == "tpu"
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+class _State(NamedTuple):
+    k: object  # outer iteration counter (scalar)
+    t: object  # [B] clock
+    nev: object  # [B] lock-step iterations survived
+    stuck: object  # [B] zero-rate deadlock flag
+    seg: object  # [B] trace segment pointer
+    delivered: object  # [B, EG]
+    thresh: object  # [B, EG] completion threshold EPS*max(1, vol) of the
+    #   in-flight instance (an active column is always sending
+    #   delivered + 1, so no separate `sending` array is carried)
+    remaining: object  # [B, EG]
+    release: object  # [B, EG]
+    active: object  # [B, EG]
+    done: object  # [B, J]
+    running: object  # [B, J]
+    tend: object  # [B, J]
+    migleft: object  # [B, J]
+    start_rec: object  # [B, J, N] (nan when not recorded)
+    end_rec: object  # [B, J, N]
+
+
+def _build_runner(
+    *,
+    B: int,
+    E: int,
+    Gmax: int,
+    J: int,
+    N: int,
+    M: int,
+    S: int,
+    policy_name: str,
+    mode: Optional[str],
+    dl_events: bool,
+    use_slow: bool,
+    no_cascade: bool,
+    levels: tuple,
+    rounds: int,
+    record: bool,
+    max_events: int,
+    use_pallas: bool,
+    src_t: np.ndarray,
+    dst_t: np.ndarray,
+    lag: np.ndarray,
+):
+    """Compile the lock-step program for one static configuration."""
+    EG = E + Gmax
+    top_level = min(min(levels), CLASS_TRAINING) - 1 if levels else -1
+
+    # int32 throughout: every count here is bounded by max(J, N, M) and
+    # int32 halves the bytes the integer state drags through each round
+    src_t_e = jnp.asarray(src_t, dtype=jnp.int32)
+    dst_t_e = jnp.asarray(dst_t, dtype=jnp.int32)
+    lag_e = jnp.asarray(lag, dtype=jnp.int32)
+    last_eg = jnp.asarray(
+        np.concatenate([N - lag, np.zeros(Gmax, dtype=np.int64)]), dtype=jnp.int32
+    )
+    src_t_eg = jnp.asarray(
+        np.concatenate([src_t, np.zeros(Gmax, dtype=np.int64)]), dtype=jnp.int32
+    )
+    dst_t_grp = jnp.asarray(
+        np.concatenate([dst_t, J + np.arange(Gmax, dtype=np.int64)]),
+        dtype=jnp.int32,
+    )
+    lag_grp = jnp.asarray(
+        np.concatenate([lag, np.zeros(Gmax, dtype=np.int64)]), dtype=jnp.int32
+    )
+    # static in-edge incidence: in_adj[e, j] = 1 iff edge e feeds task j.
+    # The per-task dependency check runs as one violation-count matmul
+    # instead of a scatter-min — XLA CPU serialises scatter, and this sits
+    # on the innermost event loop.  float32 is exact for counts <= E.
+    in_adj_np = np.zeros((E, J), dtype=np.float32)
+    in_adj_np[np.arange(E), dst_t] = 1.0
+    in_adj = jnp.asarray(in_adj_np)
+
+    def run(
+        vol,  # [B, EG, N] f64
+        ex,  # [B, J, N] f64
+        src_mx,  # [B, EG] i64 machine per flow column
+        dst_mx,  # [B, EG] i64
+        armable,  # [B, EG] bool (training edge, non-local)
+        local_e,  # [B, E] bool
+        flow_cls,  # [B, EG] i64
+        flow_dl,  # [B, EG] f64
+        gate_task,  # [B, EG] i64 (-1 = ungated / not a migration column)
+        y_mat,  # [B, J] i64 task machine (slowdown lookup)
+        delivered0,
+        thresh0,
+        remaining0,
+        active0,
+        migleft0,
+        tr_times,  # [S] f64
+        tr_bw_in,  # [S, M] f64
+        tr_bw_out,  # [S, M] f64
+        tr_slow,  # [S, M] f64
+    ):
+        def gather_dst(a2d):  # [B, M] -> [B, EG] by dst machine
+            return jnp.take_along_axis(a2d, dst_mx, axis=1)
+
+        def gather_src(a2d):
+            return jnp.take_along_axis(a2d, src_mx, axis=1)
+
+        # fixed per run: boolean NIC incidences laid out [B, M, EG] so
+        # every per-machine reduction runs over the minor-most axis — XLA
+        # fuses the compare, select and sum into one fast pass (a
+        # middle-axis reduce lowers to a slow reduce-window on CPU, and a
+        # scatter would serialise outright; both sit on the innermost
+        # event loop).
+        oh_dst = dst_mx[:, None, :] == jnp.arange(M, dtype=dst_mx.dtype)[None, :, None]
+        oh_src = src_mx[:, None, :] == jnp.arange(M, dtype=src_mx.dtype)[None, :, None]
+
+        def sum_dst(vals):  # [B, EG] f64 -> [B, M]
+            return jnp.sum(jnp.where(oh_dst, vals[:, None, :], 0.0), axis=2)
+
+        def sum_src(vals):
+            return jnp.sum(jnp.where(oh_src, vals[:, None, :], 0.0), axis=2)
+
+        def cnt_dst(bools):  # [B, EG] bool -> [B, M] f64 counts
+            return jnp.sum(
+                oh_dst & bools[:, None, :], axis=2
+            ).astype(jnp.float64)
+
+        def cnt_src(bools):
+            return jnp.sum(
+                oh_src & bools[:, None, :], axis=2
+            ).astype(jnp.float64)
+
+        # ---- rate policies: masked [B, EG] programs over [B, M] caps ----
+        def rates_oes_strict(mask, cap_in, cap_out, remaining, release, grp):
+            d_in = cnt_dst(mask)
+            d_out = cnt_src(mask)
+            r = jnp.minimum(
+                gather_dst(cap_in) / jnp.maximum(gather_dst(d_in), 1.0),
+                gather_src(cap_out) / jnp.maximum(gather_src(d_out), 1.0),
+            )
+            return jnp.where(mask, r, 0.0)
+
+        def rates_oes(mask, cap_in, cap_out, remaining, release, grp):
+            # lock-step progressive filling, mirroring engine.oes_pool:
+            # each instance raises its unfrozen flows by ITS OWN bottleneck
+            # increment until a NIC saturates; frozen flows keep their level.
+            def cond(c):
+                flows = c[5]
+                return flows.any() & (c[6] < 4 * M)
+
+            def body(c):
+                r, rem_i, rem_o, unfrozen, live, flows, k = c
+                cnt_i = cnt_dst(flows)
+                cnt_o = cnt_src(flows)
+                inc_i = jnp.min(
+                    jnp.where(cnt_i > 0, rem_i / jnp.maximum(cnt_i, 1.0), jnp.inf),
+                    axis=1,
+                )
+                inc_o = jnp.min(
+                    jnp.where(cnt_o > 0, rem_o / jnp.maximum(cnt_o, 1.0), jnp.inf),
+                    axis=1,
+                )
+                inc_b = jnp.minimum(inc_i, inc_o)
+                live = live & jnp.isfinite(inc_b)
+                flows = flows & live[:, None]
+                r = r + jnp.where(flows, inc_b[:, None], 0.0)
+                inc_f = jnp.where(live, inc_b, 0.0)
+                rem_i = rem_i - inc_f[:, None] * cnt_i
+                rem_o = rem_o - inc_f[:, None] * cnt_o
+                sat_i = (rem_i <= EPS) & (cnt_i > 0)
+                sat_o = (rem_o <= EPS) & (cnt_o > 0)
+                newly = flows & (gather_dst(sat_i) | gather_src(sat_o))
+                live = live & newly.any(axis=1)
+                unfrozen = unfrozen & ~newly
+                flows = unfrozen & live[:, None]
+                return r, rem_i, rem_o, unfrozen, live, flows, k + 1
+
+            init = (
+                jnp.zeros((B, EG)),
+                cap_in,
+                cap_out,
+                mask,
+                jnp.ones(B, dtype=bool),
+                mask,
+                jnp.int64(0),
+            )
+            r = lax.while_loop(cond, body, init)[0]
+            return jnp.where(mask, r, 0.0)
+
+        def rates_waterfill(mask, cap_in, cap_out, remaining, release, grp):
+            if policy_name == "fifo":
+                key = jnp.where(mask, release, jnp.inf)
+            else:  # mrtf: remaining time at the best rate the caps allow
+                lim = jnp.minimum(gather_dst(cap_in), gather_src(cap_out))
+                key = jnp.where(
+                    mask, remaining / jnp.maximum(lim, EPS), jnp.inf
+                )
+            order = jnp.argsort(key, axis=1)  # stable: ties by column
+            if use_pallas:
+                from ..kernels.waterfill import waterfill_fill
+
+                return waterfill_fill(
+                    order.astype(jnp.int32),
+                    src_mx.astype(jnp.int32),
+                    dst_mx.astype(jnp.int32),
+                    mask,
+                    cap_in,
+                    cap_out,
+                )
+
+            def body(kk, carry):
+                r, rem_i, rem_o = carry
+                i = order[:, kk]
+                ohd = jnp.take_along_axis(oh_dst, i[:, None, None], axis=2)[..., 0]
+                ohs = jnp.take_along_axis(oh_src, i[:, None, None], axis=2)[..., 0]
+                give = jnp.minimum(
+                    jnp.sum(jnp.where(ohd, rem_i, 0.0), axis=1),
+                    jnp.sum(jnp.where(ohs, rem_o, 0.0), axis=1),
+                )
+                m_i = jnp.take_along_axis(mask, i[:, None], axis=1)[:, 0]
+                give = jnp.where(m_i & (give > EPS), give, 0.0)
+                sel = jnp.arange(EG)[None, :] == i[:, None]
+                r = r + jnp.where(sel, give[:, None], 0.0)
+                rem_i = rem_i - jnp.where(ohd, give[:, None], 0.0)
+                rem_o = rem_o - jnp.where(ohs, give[:, None], 0.0)
+                return r, rem_i, rem_o
+
+            r, _, _ = lax.fori_loop(
+                0, EG, body, (jnp.zeros((B, EG)), cap_in, cap_out)
+            )
+            return r
+
+        def rates_omcoflow(mask, cap_in, cap_out, remaining, release, grp):
+            ci = gather_dst(cap_in)
+            co = gather_src(cap_out)
+            pred = jnp.maximum(remaining, EPS) / jnp.maximum(
+                jnp.minimum(ci, co), EPS
+            )
+            w = jnp.where(mask, 1.0 / pred, 0.0)
+            # per-coflow weight sums: the same-group compare fuses into the
+            # reduction (group ids change with `delivered`, so no static
+            # one-hot; the [B, EG, EG] comparison never materialises)
+            gsum = jnp.sum(
+                jnp.where(
+                    grp[:, :, None] == grp[:, None, :], w[:, None, :], 0.0
+                ),
+                axis=2,
+            )
+            w = w / jnp.maximum(gsum, EPS)
+            ref_b = jnp.minimum(cap_in.max(axis=1), cap_out.max(axis=1))
+            r = w * ref_b[:, None]
+
+            def rnd(_, r):
+                rm = jnp.where(mask, r, 0.0)
+                load_out = sum_src(rm)
+                load_in = sum_dst(rm)
+                s_out = cap_out / jnp.maximum(load_out, EPS)
+                s_in = cap_in / jnp.maximum(load_in, EPS)
+                return r * jnp.minimum(
+                    1.0, jnp.minimum(gather_src(s_out), gather_dst(s_in))
+                )
+
+            r = lax.fori_loop(0, rounds, rnd, r)
+            return jnp.where(mask, r, 0.0)
+
+        base = {
+            "oes": rates_oes,
+            "oes_strict": rates_oes_strict,
+            "fifo": rates_waterfill,
+            "mrtf": rates_waterfill,
+            "omcoflow": rates_omcoflow,
+        }[policy_name]
+
+        def compute_rates(active, remaining, release, delivered, cap_in, cap_out, t):
+            grp = None
+            if policy_name == "omcoflow":
+                grp = dst_t_grp[None, :] * (N + 2) + delivered + 1 + lag_grp[None, :]
+            if mode is None:
+                return base(active, cap_in, cap_out, remaining, release, grp)
+            # class shaping: statically unrolled ascending-level passes
+            # against leftovers (engine._class_shaped_rates).  Levels absent
+            # from an instance leave its capacity arithmetic untouched, so
+            # one unrolled program serves heterogeneous class sets exactly.
+            if mode == "deadline" and dl_events:
+                lim = jnp.minimum(gather_dst(cap_in), gather_src(cap_out))
+                need = remaining / jnp.maximum(lim, EPS)
+                urgent = (
+                    (flow_cls > CLASS_TRAINING)
+                    & ((flow_dl - t[:, None]) <= need)
+                )
+                eff = jnp.where(urgent, top_level, flow_cls)
+                level_list = (top_level,) + tuple(levels)
+            else:
+                eff = flow_cls
+                level_list = tuple(levels)
+            if len(level_list) == 1:
+                return base(active, cap_in, cap_out, remaining, release, grp)
+            r = jnp.zeros((B, EG))
+            rem_i, rem_o = cap_in, cap_out
+            for c in level_list:
+                m = active & (eff == c)
+                sub = base(m, rem_i, rem_o, remaining, release, grp)
+                r = jnp.where(m, sub, r)
+                sm = jnp.where(m, sub, 0.0)
+                rem_i = jnp.maximum(rem_i - sum_dst(sm), 0.0)
+                rem_o = jnp.maximum(rem_o - sum_src(sm), 0.0)
+            return r
+
+        # ---- settle: fixpoint of same-instant completions/arms/starts ----
+        def settle_round(s: _State):
+            t = s.t
+            comp = s.running & (s.tend <= t[:, None] + EPS)
+            done = s.done + comp.astype(jnp.int32)
+            running = s.running & ~comp
+            tend = jnp.where(comp, jnp.inf, s.tend)
+
+            fin = s.active & (s.remaining <= s.thresh)
+            delivered = jnp.where(fin, s.delivered + 1, s.delivered)
+            migleft = s.migleft
+            if Gmax:
+                # Gmax is tiny: a static loop of dense compares beats a
+                # scatter on every settle round
+                for g in range(Gmax):
+                    col = E + g
+                    dec = fin[:, col, None] & (
+                        gate_task[:, col, None]
+                        == jnp.arange(J, dtype=jnp.int32)[None, :]
+                    )
+                    migleft = migleft - dec.astype(jnp.int32)
+            remaining = jnp.where(fin, 0.0, s.remaining)
+            active = s.active & ~fin
+
+            nxt = delivered + 1
+            src_done = done[:, src_t_eg]
+            ready = (
+                armable
+                & ~active
+                & (nxt <= last_eg[None, :])
+                & (src_done >= nxt)
+            )
+            vn = jnp.take_along_axis(
+                vol, jnp.clip(nxt - 1, 0, N - 1)[:, :, None], axis=2
+            )[..., 0]
+            if no_cascade:  # statically no zero-volume instances anywhere
+                zero = None
+                arm = ready
+            else:
+                zero = ready & (vn <= EPS)
+                arm = ready & (vn > EPS)
+                delivered = jnp.where(zero, nxt, delivered)
+            thresh = jnp.where(arm, EPS * jnp.maximum(1.0, vn), s.thresh)
+            remaining = jnp.where(arm, vn, remaining)
+            # only fifo's priority key ever reads release times
+            release = (
+                jnp.where(arm, t[:, None], s.release)
+                if policy_name == "fifo"
+                else s.release
+            )
+            active = active | arm
+
+            ncand = done + 1
+            need = ncand[:, dst_t_e] - lag_e[None, :]
+            ok = (need <= 0) | jnp.where(
+                local_e, done[:, src_t_e] >= need, delivered[:, :E] >= need
+            )
+            # dep[b, j] iff no in-edge of j is violated: one matmul with the
+            # static incidence instead of a scatter-min
+            viol = jnp.einsum("be,ej->bj", (~ok).astype(jnp.float32), in_adj)
+            dep = viol == 0.0
+            can = (
+                ~running
+                & (ncand <= N)
+                & dep
+                & ~((ncand == 1) & (migleft > 0))
+            )
+            exn = jnp.take_along_axis(
+                ex, jnp.clip(ncand - 1, 0, N - 1)[:, :, None], axis=2
+            )[..., 0]
+            if use_slow:
+                slow_t = jnp.take_along_axis(tr_slow[s.seg], y_mat, axis=1)
+                end_new = t[:, None] + exn * slow_t
+            else:  # no slowdowns anywhere in the trace: ex * 1.0 == ex
+                end_new = t[:, None] + exn
+            tend = jnp.where(can, end_new, tend)
+            running = running | can
+            start_rec, end_rec = s.start_rec, s.end_rec
+            if record:
+                sel = can[:, :, None] & (
+                    jnp.arange(N)[None, None, :]
+                    == jnp.clip(ncand - 1, 0, N - 1)[:, :, None]
+                )
+                start_rec = jnp.where(sel, t[:, None, None], start_rec)
+                end_rec = jnp.where(sel, end_new[:, :, None], end_rec)
+
+            # Everything a round changes is already visible to the later
+            # steps of the SAME round (comp -> done -> arm/start, fin ->
+            # delivered/migleft -> arm/start), so another round is needed
+            # only for genuinely chained same-instant events: zero-volume
+            # deliveries (which unlock the NEXT arming of that edge) and
+            # zero-duration task starts (which complete next round).  When
+            # the inputs statically rule both out, the fixpoint is one
+            # round and the convergence check compiles away entirely.
+            if no_cascade:
+                changed = jnp.bool_(False)
+            else:
+                changed = zero.any() | (
+                    can & (end_new <= t[:, None] + EPS)
+                ).any()
+            return (
+                s._replace(
+                    delivered=delivered,
+                    thresh=thresh,
+                    remaining=remaining,
+                    release=release,
+                    active=active,
+                    done=done,
+                    running=running,
+                    tend=tend,
+                    migleft=migleft,
+                    start_rec=start_rec,
+                    end_rec=end_rec,
+                ),
+                changed,
+            )
+
+        if no_cascade:
+
+            def settle(s: _State) -> _State:
+                return settle_round(s)[0]
+
+        else:
+
+            def settle(s: _State) -> _State:
+                def cond(c):
+                    return c[1]
+
+                def body(c):
+                    return settle_round(c[0])
+
+                return lax.while_loop(cond, body, (s, jnp.bool_(True)))[0]
+
+        # ---- advance: rate solve + next-event time + volume decrement ----
+        def advance(s: _State) -> _State:
+            if S > 1:
+                cap_in = tr_bw_in[s.seg]
+                cap_out = tr_bw_out[s.seg]
+            else:  # static cluster: one shared capacity row
+                cap_in = jnp.broadcast_to(tr_bw_in[0], (B, M))
+                cap_out = jnp.broadcast_to(tr_bw_out[0], (B, M))
+            # every rate rule returns 0 on inactive columns, so r > EPS
+            # already implies active — no extra masking pass needed
+            r = compute_rates(
+                s.active, s.remaining, s.release, s.delivered, cap_in, cap_out, s.t
+            )
+            dt = jnp.where(
+                r > EPS,
+                s.remaining / jnp.maximum(r, EPS),
+                jnp.inf,
+            )
+            t_flow = s.t + jnp.min(dt, axis=1)
+            # tend is inf whenever a task is not running, so no mask needed
+            t_task = jnp.min(s.tend, axis=1)
+            if S > 1:
+                t_break = jnp.where(
+                    s.seg + 1 < S,
+                    tr_times[jnp.clip(s.seg + 1, 0, S - 1)],
+                    jnp.inf,
+                )
+            else:
+                t_break = jnp.full(B, jnp.inf)
+            t_next = jnp.minimum(t_task, jnp.minimum(t_flow, t_break))
+            if dl_events:
+                # fourth event source: earliest possible EDF escalation of a
+                # still-background flow (errs early; the wake re-checks)
+                lim = jnp.minimum(gather_dst(cap_in), gather_src(cap_out))
+                esc = flow_dl - s.remaining / jnp.maximum(lim, EPS)
+                cand = (
+                    s.active
+                    & jnp.isfinite(flow_dl)
+                    & (flow_cls > CLASS_TRAINING)
+                    & (esc > s.t[:, None] + EPS)
+                )
+                t_esc = jnp.min(jnp.where(cand, esc, jnp.inf), axis=1)
+                t_next = jnp.minimum(t_next, t_esc)
+            alive = s.running.any(axis=1) | s.active.any(axis=1)
+            bad = alive & ~jnp.isfinite(t_next)
+            adv = alive & ~bad
+            dtb = jnp.where(adv, t_next - s.t, 0.0)
+            remaining = s.remaining - r * dtb[:, None]
+            t = jnp.where(adv, t_next, s.t)
+            seg = s.seg
+            if S > 1:
+                new_seg = (
+                    jnp.searchsorted(tr_times, t, side="right").astype(jnp.int32)
+                    - 1
+                )
+                seg = jnp.where(
+                    adv, jnp.maximum(seg, jnp.clip(new_seg, 0, S - 1)), seg
+                )
+            return s._replace(
+                t=t,
+                nev=s.nev + adv.astype(jnp.int64),
+                stuck=s.stuck | bad,
+                seg=seg,
+                remaining=remaining,
+                # freeze deadlocked instances so the outer loop terminates
+                active=s.active & ~bad[:, None],
+                running=s.running & ~bad[:, None],
+            )
+
+        rec_shape = (B, J, N) if record else (1, 1, 1)
+        s = _State(
+            k=jnp.int64(0),
+            t=jnp.zeros(B),
+            nev=jnp.zeros(B, dtype=jnp.int64),
+            stuck=jnp.zeros(B, dtype=bool),
+            seg=jnp.zeros(B, dtype=jnp.int32),
+            delivered=delivered0,
+            thresh=thresh0,
+            remaining=remaining0,
+            release=jnp.zeros((B, EG)),
+            active=active0,
+            done=jnp.zeros((B, J), dtype=jnp.int32),
+            running=jnp.zeros((B, J), dtype=bool),
+            tend=jnp.full((B, J), jnp.inf),
+            migleft=migleft0,
+            start_rec=jnp.full(rec_shape, jnp.nan),
+            end_rec=jnp.full(rec_shape, jnp.nan),
+        )
+        s = settle(s)
+
+        def cond(s: _State):
+            return (s.running.any() | s.active.any()) & (s.k < max_events)
+
+        def body(s: _State):
+            s = advance(s)
+            s = settle(s)
+            return s._replace(k=s.k + 1)
+
+        s = lax.while_loop(cond, body, s)
+        alive = s.running.any(axis=1) | s.active.any(axis=1)
+        return s.t, s.nev, s.stuck, alive, s.start_rec, s.end_rec
+
+    return jax.jit(run)
+
+
+def _runner_for(key, build_kwargs):
+    fn = _RUNNERS.get(key)
+    if fn is None:
+        fn = _build_runner(**build_kwargs)
+        _RUNNERS[key] = fn
+    return fn
+
+
+def simulate_batch_jax(
+    workload: Workload,
+    cluster: ClusterSpec,
+    placements: Sequence[Placement],
+    realizations: Sequence[Realization],
+    policy: "RatePolicy | str" = "oes",
+    record: bool = False,
+    max_events: int = 50_000_000,
+    trace=None,
+    migrations: Optional[Sequence[Optional[Sequence[MigrationFlow]]]] = None,
+    shaping: Optional[str] = None,
+    edge_classes=None,
+) -> List[ScheduleResult]:
+    """``engine.simulate_batch`` on the jitted JAX backend.
+
+    Same signature and event semantics; returns one ``ScheduleResult`` per
+    instance agreeing with the numpy engine at ``PARITY_RTOL`` (float64).
+    ``flow_log`` is always empty and ``n_events`` counts jitted lock-step
+    iterations — see the module docstring for the exact contract.
+    """
+    if not HAVE_JAX:  # pragma: no cover
+        raise RuntimeError(
+            "backend='jax' requested but jax is not importable: "
+            f"{JAX_IMPORT_ERROR!r}"
+        )
+    policy = resolve_policy(policy, shaping)
+    shaped = isinstance(policy, ShapedPolicy)
+    inner = policy.base if shaped else policy
+    if inner.name not in JAX_POLICIES:
+        raise ValueError(
+            f"the jax engine backend supports the built-in rate policies "
+            f"{JAX_POLICIES}, got {inner.name!r} — use backend='numpy' for "
+            "custom policies"
+        )
+    B = len(placements)
+    if B == 0:
+        return []
+    if len(realizations) != B:
+        raise ValueError("placements and realizations must have equal length")
+    N = realizations[0].n_iters
+    if any(r.n_iters != N for r in realizations):
+        raise ValueError("all realizations in a batch must share n_iters")
+    J, E, M = workload.J, workload.E, cluster.M
+    src_t, dst_t, lag = workload.edge_src, workload.edge_dst, workload.edge_lag
+
+    vol = np.stack([r.volumes for r in realizations]).astype(np.float64)
+    ex = np.stack([r.exec_times for r in realizations]).astype(np.float64)
+    src_m = np.stack([p.y[src_t] for p in placements]).astype(np.int32)
+    dst_m = np.stack([p.y[dst_t] for p in placements]).astype(np.int32)
+    local = src_m == dst_m
+    y_mat = np.stack([p.y for p in placements]).astype(np.int32)
+
+    if migrations is not None and len(migrations) != B:
+        raise ValueError(
+            "migrations must give one (possibly None) entry per instance"
+        )
+    mig_lists = [
+        check_migration_flows(m, M, J)
+        for m in (migrations if migrations is not None else [None] * B)
+    ]
+    Gmax = max((len(m) for m in mig_lists), default=0)
+    EG = E + Gmax
+    flow_cls = np.zeros((B, EG), dtype=np.int32)
+    flow_dl = np.full((B, EG), np.inf)
+    gate_task = np.full((B, EG), -1, dtype=np.int32)
+    ec = _check_edge_classes(edge_classes, E)
+    if ec is not None:
+        flow_cls[:, :E] = ec
+    if Gmax:
+        vol = np.concatenate([vol, np.zeros((B, Gmax, N))], axis=1)
+        src_m = np.concatenate(
+            [src_m, np.zeros((B, Gmax), dtype=np.int32)], axis=1
+        )
+        dst_m = np.concatenate(
+            [dst_m, np.zeros((B, Gmax), dtype=np.int32)], axis=1
+        )
+        local = np.concatenate([local, np.ones((B, Gmax), dtype=bool)], axis=1)
+        for b, ms in enumerate(mig_lists):
+            for g, f in enumerate(ms):
+                e = E + g
+                src_m[b, e] = f.src
+                dst_m[b, e] = f.dst
+                vol[b, e, 0] = f.gb
+                local[b, e] = (f.src == f.dst) or (f.gb <= EPS)
+                flow_cls[b, e] = f.cls
+                flow_dl[b, e] = f.deadline
+
+    # initial flow state: migration columns pre-armed exactly like the
+    # numpy engine (local / zero-volume flows delivered instantly)
+    delivered0 = np.zeros((B, EG), dtype=np.int32)
+    remaining0 = np.zeros((B, EG), dtype=np.float64)
+    active0 = np.zeros((B, EG), dtype=bool)
+    migleft0 = np.zeros((B, J), dtype=np.int32)
+    for b, ms in enumerate(mig_lists):
+        for g, f in enumerate(ms):
+            e = E + g
+            if local[b, e]:
+                delivered0[b, e] = 1
+                continue
+            remaining0[b, e] = vol[b, e, 0]
+            active0[b, e] = True
+            if f.task >= 0:
+                migleft0[b, f.task] += 1
+                gate_task[b, e] = f.task
+    thresh0 = np.where(active0, EPS * np.maximum(1.0, remaining0), 0.0)
+
+    # trace arrays (S=1 static row when no trace: the same program serves
+    # both, with the boundary/slowdown logic compiled out for S == 1)
+    if trace is None:
+        S = 1
+        tr_times = np.zeros(1)
+        tr_bw_in = np.asarray(cluster.bw_in, dtype=np.float64)[None, :]
+        tr_bw_out = np.asarray(cluster.bw_out, dtype=np.float64)[None, :]
+        tr_slow = np.ones((1, M))
+    else:
+        if trace.bw_in.shape[1] != M:
+            raise ValueError(
+                f"trace covers {trace.bw_in.shape[1]} machines but the "
+                f"cluster has {M} — rebuild the trace after membership "
+                "changes"
+            )
+        tr_times = np.asarray(trace.times, dtype=np.float64)
+        S = len(tr_times)
+        tr_bw_in = np.asarray(trace.bw_in, dtype=np.float64)
+        tr_bw_out = np.asarray(trace.bw_out, dtype=np.float64)
+        tr_slow = np.asarray(trace.slow, dtype=np.float64)
+
+    mode = policy.mode if shaped else None
+    use_slow = bool(trace is not None and not np.all(tr_slow == 1.0))
+    # statically rule out same-instant cascades: every training-edge
+    # instance carries real volume and no (slowdown-scaled) task runs in
+    # zero time, so one settle round is always a fixpoint (migration
+    # columns never re-arm: their zero-volume/local cases are resolved at
+    # init and last_eg is 0 for them)
+    min_slow = float(tr_slow.min()) if use_slow else 1.0
+    no_cascade = bool(
+        (E == 0 or vol[:, :E, :].min() > EPS)
+        and float(ex.min()) * min_slow > EPS
+    )
+    dl_events = bool(
+        shaped and policy.mode == "deadline" and np.isfinite(flow_dl).any()
+    )
+    levels = tuple(int(c) for c in np.unique(flow_cls)) if shaped else (0,)
+
+    # pad the batch to a power of two (repeat instance 0) so the jit cache
+    # sees a handful of widths; padding rows are discarded on return
+    Bp = _next_pow2(B)
+    if Bp != B:
+        pad = Bp - B
+
+        def _pad(a):
+            return np.concatenate([a, np.repeat(a[:1], pad, axis=0)], axis=0)
+
+        vol, ex, src_m, dst_m, local, flow_cls, flow_dl, gate_task = (
+            _pad(a)
+            for a in (
+                vol, ex, src_m, dst_m, local, flow_cls, flow_dl, gate_task
+            )
+        )
+        y_mat, delivered0, thresh0, remaining0, active0, migleft0 = (
+            _pad(a)
+            for a in (
+                y_mat, delivered0, thresh0, remaining0, active0, migleft0
+            )
+        )
+
+    key = (
+        Bp, E, Gmax, J, N, M, S, inner.name, mode, dl_events, use_slow,
+        no_cascade, levels,
+        int(getattr(inner, "rounds", 4)), record, max_events,
+        _use_pallas_waterfill(),
+        src_t.tobytes(), dst_t.tobytes(), lag.tobytes(),
+    )
+    runner = _runner_for(
+        key,
+        dict(
+            B=Bp, E=E, Gmax=Gmax, J=J, N=N, M=M, S=S,
+            policy_name=inner.name, mode=mode, dl_events=dl_events,
+            use_slow=use_slow, no_cascade=no_cascade,
+            levels=levels, rounds=int(getattr(inner, "rounds", 4)),
+            record=record, max_events=max_events,
+            use_pallas=_use_pallas_waterfill(),
+            src_t=src_t, dst_t=dst_t, lag=lag,
+        ),
+    )
+    t, nev, stuck, alive, start_rec, end_rec = runner(
+        vol, ex, src_m, dst_m,
+        ~local & (np.arange(EG) < E)[None, :],  # armable
+        local[:, :E], flow_cls, flow_dl, gate_task, y_mat,
+        delivered0, thresh0, remaining0, active0, migleft0,
+        tr_times, tr_bw_in, tr_bw_out, tr_slow,
+    )
+    t = np.asarray(t)[:B]
+    nev = np.asarray(nev)[:B]
+    stuck = np.asarray(stuck)[:B]
+    alive = np.asarray(alive)[:B]
+    if stuck.any():  # pragma: no cover - mirrors the numpy engine's guard
+        raise RuntimeError("no progress: flows active but zero rates")
+    if alive.any():  # pragma: no cover
+        raise RuntimeError("event limit exceeded — dependency deadlock?")
+
+    out: List[ScheduleResult] = []
+    if record:
+        start_rec = np.asarray(start_rec)[:B]
+        end_rec = np.asarray(end_rec)[:B]
+    for b in range(B):
+        events: List[TaskEvent] = []
+        if record:
+            order = sorted(
+                (
+                    (start_rec[b, j, n], j, n)
+                    for j in range(J)
+                    for n in range(N)
+                    if not np.isnan(start_rec[b, j, n])
+                ),
+            )
+            events = [
+                TaskEvent(j, n + 1, float(st), float(end_rec[b, j, n]))
+                for st, j, n in order
+            ]
+        out.append(
+            ScheduleResult(
+                makespan=float(t[b]),
+                task_events=events,
+                flow_log=[],
+                n_events=int(nev[b]),
+                policy=policy.name,
+            )
+        )
+    return out

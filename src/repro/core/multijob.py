@@ -12,7 +12,7 @@ all jobs, exactly the quantity the shared-network guarantee should use.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -165,6 +165,7 @@ def merged_batch_cost(
     n_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
+    backend: Optional[str] = None,
 ):
     """Batched merged-job objective for ETP: ``f(placements) -> makespans``.
 
@@ -178,7 +179,8 @@ def merged_batch_cost(
 
     def cost(placements) -> List[float]:
         return mean_batch_makespans(
-            mj.workload, cluster, [(p, reals) for p in placements], policy=policy
+            mj.workload, cluster, [(p, reals) for p in placements],
+            policy=policy, backend=backend,
         )
 
     return cost
@@ -193,17 +195,20 @@ def joint_search(
     n_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
+    backend: Optional[str] = None,
     **kw,
 ):
     """Joint multi-job DGTP placement search (paper conclusion): merge the
     jobs, then run lock-step multi-chain ETP where every chain's proposal is
     evaluated against shared-NIC merged realizations in one simulation
-    batch.  Returns ``(MergedJob, ETPResult)``."""
+    batch.  Returns ``(MergedJob, ETPResult)``.  ``backend`` selects the
+    engine the merged objective simulates on (``engine.resolve_backend``)."""
     from .placement import etp_multichain  # local import: placement imports engine
 
     mj = merge_workloads(jobs)
     cost = merged_batch_cost(
-        mj, jobs, cluster, n_draws=n_draws, seed=seed, policy=policy
+        mj, jobs, cluster, n_draws=n_draws, seed=seed, policy=policy,
+        backend=backend,
     )
     etp = etp_multichain(
         mj.workload, cluster, n_chains=n_chains, budget=budget, seed=seed,

@@ -301,6 +301,7 @@ class _Chain:
         group_moves: float,
         anneal: bool,
         extra_violation: Optional[Callable[[Placement], float]] = None,
+        backend: Optional[str] = None,
     ) -> None:
         self.workload = workload
         self.cluster = cluster
@@ -316,6 +317,7 @@ class _Chain:
         self.group_moves = group_moves
         self.anneal = anneal
         self.extra_violation = extra_violation
+        self.backend = backend
 
         self.rng = np.random.default_rng(seed)
         groups = _group_indices(workload)
@@ -368,6 +370,7 @@ class _Chain:
             t = expected_makespan(
                 self.workload, self.cluster, p, policy=self.policy,
                 n_iters=self.sim_iters, n_draws=self.sim_draws, seed=self.seed,
+                backend=self.backend,
             )
         return self.store(p, t)
 
@@ -483,6 +486,7 @@ def etp_search(
     group_moves: float = 0.35,
     anneal: bool = True,
     extra_violation: Optional[Callable[[Placement], float]] = None,
+    backend: Optional[str] = None,
 ) -> ETPResult:
     """MCMC search (Alg. 3). ``budget`` = I transitions; ``mu`` = relaxed
     capacity factor (eq. 22); ``beta`` = temperature (eq. 23).
@@ -519,12 +523,17 @@ def etp_search(
     tier prices candidate moves by simulating them as real engine flows —
     ``repro.dynamics.replan`` passes a ``cost_fn`` that injects
     ``MigrationFlow``s, so the search still trades migration against
-    schedule quality on the same seconds axis, now contention-aware.)"""
+    schedule quality on the same seconds axis, now contention-aware.)
+
+    ``backend`` selects the simulation engine for the default cost
+    (``engine.resolve_backend``: explicit > ``REPRO_ENGINE_BACKEND`` >
+    numpy); it is inert when ``cost_fn`` overrides the objective."""
     t0 = time.perf_counter()
     chain = _Chain(
         workload, cluster, budget=budget, mu=mu, beta=beta, sim_iters=sim_iters,
         sim_draws=sim_draws, seed=seed, init=init, policy=policy, cost_fn=cost_fn,
         group_moves=group_moves, anneal=anneal, extra_violation=extra_violation,
+        backend=backend,
     )
     chain.begin(chain.measure_scalar(chain.cur))
     for z in range(budget):
@@ -557,7 +566,7 @@ def _chain_defaults() -> Dict[str, object]:
         k: sig.parameters[k].default
         for k in (
             "mu", "beta", "sim_iters", "sim_draws", "policy", "cost_fn",
-            "group_moves", "anneal", "extra_violation",
+            "group_moves", "anneal", "extra_violation", "backend",
         )
     }
 
@@ -589,7 +598,12 @@ def etp_multichain(
     (core/multijob.py).  With ``use_batch=False`` chains run sequentially
     with a shared per-chain budget so total simulation work matches a
     single-chain run of ``budget`` transitions; ``time_budget_s`` then
-    applies per chain rather than globally."""
+    applies per chain rather than globally.
+
+    ``backend=`` (via ``**kw``, see ``etp_search``) moves the pooled
+    lock-step evaluations onto the selected simulation engine — with
+    ``"jax"`` every step's proposals are ONE jitted batch, which is where
+    the backend pays most (benchmarks/bench_engine.py)."""
     per = max(1, budget // n_chains)
 
     def chain_init(c: int) -> Optional[Placement]:
@@ -654,6 +668,7 @@ def etp_multichain(
                     workload, cluster,
                     [(pairs[i][1], pairs[i][0].reals) for i in need],
                     policy=params["policy"],
+                    backend=params["backend"],
                 )
             for i, t in zip(need, ts):
                 ch, p = pairs[i]

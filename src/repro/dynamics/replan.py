@@ -210,7 +210,14 @@ class ReplanConfig:
     flow escalates strictly above the training class, EDF-style).
     Deadlines are
     filled automatically from the clean-variant simulation the objective
-    already runs."""
+    already runs.
+
+    ``backend`` selects the simulation engine for every candidate-scoring
+    batch (``engine.resolve_backend``: explicit > ``REPRO_ENGINE_BACKEND``
+    > numpy) — the re-plan objective simulates clean and migration-loaded
+    variants for each candidate, so a jax-backed scoring loop is the same
+    lever as ETP's (the committed interval simulations in
+    ``dynamics.scenario`` stay on the reference numpy engine)."""
 
     drift_threshold: float = 0.25  # max relative NIC change tolerated
     budget: int = 250  # warm ETP transitions per re-plan
@@ -220,6 +227,7 @@ class ReplanConfig:
     migration_weight: float = 1.0  # 0 disables the migration term
     shaping: Optional[str] = None  # None | "strict" | "deadline"
     seed: int = 0
+    backend: Optional[str] = None  # engine backend for candidate scoring
 
 
 @dataclass
@@ -303,6 +311,7 @@ class Replanner:
             self.workload, cluster, self.hit_model,
             sim_iters=self.config.sim_iters, sim_draws=self.config.sim_draws,
             seed=self.config.seed, policy=self.config.policy,
+            backend=self.config.backend,
         )
         extra = (
             make_reservation_fn(self.workload, cluster, self.cache_config)
@@ -409,14 +418,14 @@ class Replanner:
             if migs and cfg.shaping == "deadline":
                 clean_res = simulate_batch(
                     self.workload, cluster_now, [p] * n_d, rs,
-                    policy=cfg.policy, record=True,
+                    policy=cfg.policy, record=True, backend=cfg.backend,
                 )
                 clean = sum(r.makespan for r in clean_res) / n_d
                 migs = annotate_deadlines(migs, clean_res)
                 loaded_res = simulate_batch(
                     self.workload, cluster_now, [p] * n_d, rs,
                     policy=cfg.policy, shaping="deadline",
-                    migrations=[migs] * n_d,
+                    migrations=[migs] * n_d, backend=cfg.backend,
                 )
                 loaded = sum(r.makespan for r in loaded_res) / n_d
             elif migs:
@@ -424,13 +433,14 @@ class Replanner:
                     self.workload, cluster_now, [p] * (2 * n_d), rs + rs,
                     policy=cfg.policy, shaping=cfg.shaping,
                     migrations=[None] * n_d + [migs] * n_d,
+                    backend=cfg.backend,
                 )
                 clean = sum(r.makespan for r in res[:n_d]) / n_d
                 loaded = sum(r.makespan for r in res[n_d:]) / n_d
             else:
                 res = simulate_batch(
                     self.workload, cluster_now, [p] * n_d, rs,
-                    policy=cfg.policy,
+                    policy=cfg.policy, backend=cfg.backend,
                 )
                 clean = sum(r.makespan for r in res) / n_d
                 loaded = clean

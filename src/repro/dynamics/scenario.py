@@ -150,6 +150,7 @@ def run_scenario(
                 workload, snap, n_chains=oracle_chains,
                 budget=oracle_budget, seed=seed, policy=policy,
                 sim_iters=cfg.sim_iters, sim_draws=cfg.sim_draws,
+                backend=cfg.backend,
             )
             placement = res.placement
             replanned = True  # migration deliberately free: upper bound
@@ -166,15 +167,20 @@ def run_scenario(
         # replanner's shaping mode (their deadline annotations, if any,
         # travel with them); the clean reference never carries flows, so
         # shaping would be a bit-identical no-op there and is skipped
+        # backend="numpy": committed interval sims are the scenario's ground
+        # truth (and the overlap split is a sub-tolerance difference of
+        # makespans), so they stay on the reference engine even when
+        # REPRO_ENGINE_BACKEND routes candidate SCORING to jax
         res_iv = simulate(
             workload, cluster, placement, r_iv,
             policy=policy, trace=tw, migrations=flows or None,
-            shaping=shaping if flows else None,
+            shaping=shaping if flows else None, backend="numpy",
         )
         overlap_s = 0.0
         if flows:
             clean_iv = simulate(
-                workload, cluster, placement, r_iv, policy=policy, trace=tw
+                workload, cluster, placement, r_iv, policy=policy, trace=tw,
+                backend="numpy",
             )
             overlap_s = res_iv.makespan - clean_iv.makespan
         out.intervals.append(

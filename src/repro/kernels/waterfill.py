@@ -1,0 +1,71 @@
+"""Pallas kernel for the per-NIC sequential waterfill rate pass.
+
+The fifo/mrtf rate rule visits flows in priority order and gives each the
+min of its two NICs' remaining capacity — an inherently sequential scan
+per instance, but embarrassingly parallel ACROSS the batch: instances
+never share NICs.  The kernel maps one grid program per instance; each
+walks its priority order with the remaining ingress/egress capacities in
+VMEM scratch, so a width-B rate solve is B independent scans instead of
+one batched fori_loop carrying [B, M] scatter updates through XLA.
+
+Follows the kernels/ops.py Mosaic-fallback idiom: on CPU containers the
+body runs in interpret mode (validated against the XLA fori_loop path in
+tests/test_jax_engine.py); on TPU the same call site compiles to Mosaic.
+The engine keeps the XLA path as the CPU default — interpret-mode Python
+is for validation, not speed — and switches here via
+``REPRO_WATERFILL_PALLAS=1`` or automatically on TPU (where float64
+support permitting, the scan's VMEM locality is what pays).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.engine import EPS
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _kernel(order_ref, src_ref, dst_ref, elig_ref, cap_in_ref, cap_out_ref,
+            r_ref, *, eg: int):
+    r_ref[...] = jnp.zeros_like(r_ref)
+    rem_i0 = cap_in_ref[0, :]
+    rem_o0 = cap_out_ref[0, :]
+
+    def body(k, carry):
+        rem_i, rem_o = carry
+        i = order_ref[0, k]
+        d = dst_ref[0, i]
+        s = src_ref[0, i]
+        give = jnp.minimum(rem_i[d], rem_o[s])
+        give = jnp.where(elig_ref[0, i] & (give > EPS), give, 0.0)
+        r_ref[0, i] = give
+        return rem_i.at[d].add(-give), rem_o.at[s].add(-give)
+
+    jax.lax.fori_loop(0, eg, body, (rem_i0, rem_o0))
+
+
+@jax.jit
+def waterfill_fill(order, src, dst, elig, cap_in, cap_out):
+    """Sequential waterfill rates, one grid program per instance.
+
+    order/src/dst [B, EG] int32, elig [B, EG] bool, caps [B, M] float64
+    -> rates [B, EG] float64.  ``order`` is the per-instance priority
+    permutation (from a stable argsort of the policy's key)."""
+    b, eg = order.shape
+    m = cap_in.shape[1]
+    spec_eg = pl.BlockSpec((1, eg), lambda i: (i, 0))
+    spec_m = pl.BlockSpec((1, m), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, eg=eg),
+        grid=(b,),
+        in_specs=[spec_eg, spec_eg, spec_eg, spec_eg, spec_m, spec_m],
+        out_specs=spec_eg,
+        out_shape=jax.ShapeDtypeStruct((b, eg), cap_in.dtype),
+        interpret=use_interpret(),
+    )(order, src, dst, elig, cap_in, cap_out)

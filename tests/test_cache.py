@@ -242,7 +242,12 @@ def test_cache_aware_plan_end_to_end(trace):
 
 
 def test_plan_defaults_to_eight_chains():
-    assert inspect.signature(plan).parameters["n_chains"].default == 8
+    # n_chains now resolves per engine backend (PR 6): the signature default
+    # is None and the numpy resolution stays pinned at the PR-2 value of 8.
+    from repro.core.dgtp import DEFAULT_N_CHAINS
+
+    assert inspect.signature(plan).parameters["n_chains"].default is None
+    assert DEFAULT_N_CHAINS["numpy"] == 8
 
 
 def test_multichain_more_chains_never_worse():
