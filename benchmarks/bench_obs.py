@@ -1,0 +1,149 @@
+"""Observability overhead: the engine bench rows with obs off vs on.
+
+Three questions, answered on the same small-job ``simulate_batch`` cell
+the engine bench uses:
+
+  * what does the DISABLED instrumentation cost on the engine path?
+    (``obs_engine_metrics_pct`` — metrics-registry-enabled vs disabled on
+    identical simulations; the registry's only engine touchpoints are
+    per-CALL pre-aggregated counters, so this is pinned **< 3%** and
+    asserted here, smoke included.  With ``REPRO_OBS`` unset the branch
+    is a single attribute check, strictly cheaper than the enabled path
+    this row bounds.)
+  * what does a disabled registry call cost in isolation?
+    (``obs_registry_disabled_call`` — ns-scale, the structural reason the
+    off-path pin holds.)
+  * what does the FULL on-path cost — record, lift to ``ScheduleTrace``,
+    blame decomposition, Perfetto render?  (``obs_trace_pipeline`` — the
+    price of asking "where did the time go", paid only when asked.)
+
+Timing is min-of-reps with off/on measured in interleaved pairs so CI
+neighbour noise cancels instead of landing on one side.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only obs [--smoke]``
+or ``python -m benchmarks.bench_obs``.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import Timer, emit, feasible_cluster
+
+from repro.core import build_gnn_workload, ifs_placement, simulate
+from repro.core.engine import simulate_batch
+from repro.obs import REGISTRY
+from repro.obs.blame import blame
+from repro.obs.perfetto import to_trace_events
+from repro.obs.trace import ScheduleTrace
+
+OVERHEAD_PIN_PCT = 3.0
+
+
+def _small_case(width: int):
+    wl = build_gnn_workload(
+        n_stores=2, n_workers=2, samplers_per_worker=1, n_ps=1, n_iters=8,
+        store_to_sampler_gb=0.8, sampler_to_worker_gb=0.4, grad_gb=0.25,
+        store_exec_s=0.3, sampler_exec_s=0.4, worker_exec_s=0.8,
+        ps_exec_s=0.2, pmr=1.3,
+    )
+    cluster = feasible_cluster(3, wl)
+    p = ifs_placement(wl, cluster, seed=0)
+    placements = [p.copy() for _ in range(width)]
+    realizations = [wl.realize(seed=s) for s in range(width)]
+    return wl, cluster, p, placements, realizations
+
+
+def engine_overhead(smoke: bool) -> None:
+    width = 16 if smoke else 64
+    reps = 5 if smoke else 9
+    wl, cluster, p, placements, realizations = _small_case(width)
+
+    def cell():
+        return simulate_batch(
+            wl, cluster, placements, realizations, backend="numpy"
+        )
+
+    was_enabled = REGISTRY.enabled
+    cell()
+    cell()  # two warmup calls: allocator + branch caches settle
+    t_off = t_on = float("inf")
+    try:
+        # interleaved min-of-reps with the pair order alternating per rep,
+        # so slow-neighbour noise and frequency ramps hit both sides
+        # equally instead of biasing whichever side runs first
+        for i in range(reps):
+            for enabled in ((False, True) if i % 2 == 0 else (True, False)):
+                REGISTRY.enabled = enabled
+                with Timer() as tm:
+                    cell()
+                if enabled:
+                    t_on = min(t_on, tm.us)
+                else:
+                    t_off = min(t_off, tm.us)
+    finally:
+        REGISTRY.enabled = was_enabled
+        REGISTRY.reset()
+    pct = 100.0 * (t_on - t_off) / t_off
+    emit("obs_engine_off", t_off, f"simulate_batch w={width} REPRO_OBS unset")
+    emit(
+        "obs_engine_metrics_pct",
+        t_on,
+        f"metrics on: {pct:+.2f}% vs off (pin <{OVERHEAD_PIN_PCT:.0f}%)",
+    )
+    assert pct < OVERHEAD_PIN_PCT, (
+        f"obs instrumentation costs {pct:.2f}% on the engine bench with "
+        f"metrics ENABLED — the off-path (REPRO_OBS unset) pin of "
+        f"<{OVERHEAD_PIN_PCT}% is blown"
+    )
+
+
+def registry_call_cost() -> None:
+    was_enabled = REGISTRY.enabled
+    REGISTRY.disable()
+    try:
+        n = 100_000
+        c = time.perf_counter()
+        for _ in range(n):
+            REGISTRY.counter("bench.noop").inc()
+        dt = time.perf_counter() - c
+    finally:
+        REGISTRY.enabled = was_enabled
+    emit(
+        "obs_registry_disabled_call",
+        dt / n * 1e6,
+        f"counter().inc() while disabled, n={n}",
+    )
+
+
+def trace_pipeline(smoke: bool) -> None:
+    wl, cluster, p, _, _ = _small_case(1)
+    r = wl.realize(seed=0)
+    reps = 3 if smoke else 7
+    best = float("inf")
+    obj = None
+    for _ in range(reps):
+        with Timer() as tm:
+            res = simulate(
+                wl, cluster, p, r, record=True, backend="numpy"
+            )
+            tr = ScheduleTrace.from_result(res, wl, cluster, p, r)
+            rep = blame(tr)
+            obj = to_trace_events(tr)
+        best = min(best, tm.us)
+    assert obj is not None and abs(rep.residual) < 1e-6
+    emit(
+        "obs_trace_pipeline",
+        best,
+        f"record+trace+blame+perfetto, {len(obj['traceEvents'])} events",
+    )
+
+
+def main(smoke: bool = False) -> None:
+    engine_overhead(smoke)
+    registry_call_cost()
+    trace_pipeline(smoke)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

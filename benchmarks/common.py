@@ -1,9 +1,13 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
+import json
+import subprocess
 import sys
 import time
+from datetime import datetime, timezone
 from pathlib import Path
+from typing import Dict, List, Optional
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
@@ -25,9 +29,70 @@ def feasible_cluster(m: int, workload, seed0: int = 0, tries: int = 50) -> Clust
     raise RuntimeError("no feasible cluster found")
 
 
+# -- machine-readable sink (run.py --json PATH) -----------------------------
+# Every emit() row lands in _ROWS[<group>] alongside the printed CSV; run.py
+# sets the group per bench module and flushes one BENCH_<group>.json per
+# group at exit, so the perf trajectory persists across PRs instead of
+# scrolling away in CI logs.
+_JSON_DIR: Optional[Path] = None
+_GROUP = "misc"
+_ROWS: Dict[str, List[dict]] = {}
+_GIT_SHA: Optional[str] = None
+
+
+def _git_sha() -> Optional[str]:
+    global _GIT_SHA
+    if _GIT_SHA is None:
+        try:
+            _GIT_SHA = subprocess.check_output(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=Path(__file__).resolve().parent,
+                stderr=subprocess.DEVNULL,
+            ).decode().strip()
+        except Exception:
+            _GIT_SHA = ""
+    return _GIT_SHA or None
+
+
+def set_json_dir(path) -> None:
+    """Enable the JSON sink; ``path`` is a directory (created if needed)."""
+    global _JSON_DIR
+    _JSON_DIR = Path(path)
+    _JSON_DIR.mkdir(parents=True, exist_ok=True)
+
+
+def set_group(name: str) -> None:
+    """Tag subsequent emit() rows with a bench group (one JSON per group)."""
+    global _GROUP
+    _GROUP = name
+
+
+def flush_json() -> List[Path]:
+    """Write one ``BENCH_<group>.json`` per group seen; returns the paths."""
+    if _JSON_DIR is None:
+        return []
+    paths = []
+    for group, rows in sorted(_ROWS.items()):
+        p = _JSON_DIR / f"BENCH_{group}.json"
+        p.write_text(json.dumps(rows, indent=1) + "\n")
+        paths.append(p)
+    return paths
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """CSV row contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    if _JSON_DIR is not None:
+        _ROWS.setdefault(_GROUP, []).append(
+            {
+                "name": name,
+                "us_per_call": float(us_per_call),
+                "derived": derived,
+                "group": _GROUP,
+                "timestamp": datetime.now(timezone.utc).isoformat(),
+                "git_sha": _git_sha(),
+            }
+        )
 
 
 class Timer:

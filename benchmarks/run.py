@@ -16,6 +16,9 @@ benches).  Prints ``name,us_per_call,derived`` CSV rows.
   engine_*        event-engine throughput: numpy vs jitted jax backend
                   across batch width and workload scale (bench_engine;
                   every row asserts makespan parity first)
+  obs_*           observability overhead: metrics registry off/on on the
+                  engine rows (asserts the <3% off-path pin) + the full
+                  record->trace->blame->perfetto pipeline cost (bench_obs)
   attn/ssd/flash  kernel-layer benches (XLA mirrors + interpret allclose)
   roofline_*      summary rows from the dry-run roofline table
 """
@@ -35,8 +38,9 @@ from . import (
     bench_etp,
     bench_figures,
     bench_kernels,
+    bench_obs,
 )
-from .common import emit
+from .common import emit, flush_json, set_group, set_json_dir
 
 
 def roofline_summary():
@@ -73,31 +77,54 @@ def main() -> None:
         "--only", default=None,
         choices=[
             None, "figures", "algorithms", "kernels", "roofline", "etp",
-            "cache", "dynamics", "engine",
+            "cache", "dynamics", "engine", "obs",
         ],
     )
     ap.add_argument(
         "--smoke", action="store_true",
-        help="CI-sized budgets (honoured by the dynamics and engine benches)",
+        help="CI-sized budgets (honoured by the dynamics, engine and obs "
+        "benches)",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write every emitted row to machine-readable "
+        "BENCH_<group>.json files under PATH (name, us_per_call, derived, "
+        "timestamp, git sha) — CI uploads these as artifacts so the perf "
+        "trajectory persists across PRs",
     )
     args = ap.parse_args()
+    if args.json:
+        set_json_dir(args.json)
     print("name,us_per_call,derived")
     if args.only in (None, "algorithms"):
+        set_group("algorithms")
         bench_algorithms.main()
     if args.only in (None, "etp"):
+        set_group("etp")
         bench_etp.main()
     if args.only in (None, "engine"):
+        set_group("engine")
         bench_engine.main(smoke=args.smoke)
     if args.only in (None, "cache"):
+        set_group("cache")
         bench_cache.main()
     if args.only in (None, "dynamics"):
+        set_group("dynamics")
         bench_dynamics.main(smoke=args.smoke)
+    if args.only in (None, "obs"):
+        set_group("obs")
+        bench_obs.main(smoke=args.smoke)
     if args.only in (None, "kernels"):
+        set_group("kernels")
         bench_kernels.main()
     if args.only in (None, "roofline"):
+        set_group("roofline")
         roofline_summary()
     if args.only in (None, "figures"):
+        set_group("figures")
         bench_figures.main()
+    for p in flush_json():
+        print(f"wrote {p}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -57,6 +57,7 @@ def main():
             wl, cluster, trace, strategy=strat,
             n_intervals=n_intervals, iters_per_interval=iters, seed=0,
             replan_config=cfg, oracle_budget=360,
+            collect_traces=(strat != "oracle"),
         )
         outcomes[strat] = out
         print(f"  {strat:7s}: total {out.total_s:7.2f}s  "
@@ -70,6 +71,28 @@ def main():
     print(f"  migration as flows: actually paid {rp.overlap_total_s:.3f}s "
           f"overlapped vs {rp.migration_total_s:.3f}s serial drain bill "
           f"(old books would read {rp.serial_total_s:.2f}s total)")
+
+    print("\n== where did the time go? (repro.obs critical-path blame) ==")
+    # collect_traces=True recorded every committed interval; blame() walks
+    # each interval's critical path and the components sum to its makespan,
+    # so the static-vs-replan wall-clock gap decomposes exactly into named
+    # deltas — the delta column sums to the makespan delta
+    from repro.obs import blame_delta
+
+    rep_static = outcomes["static"].blame()
+    rep_replan = outcomes["replan"].blame()
+    for line in blame_delta(
+        rep_static, rep_replan, "static", "replan"
+    ).splitlines():
+        print("  " + line)
+    dsum = sum(
+        rep_replan.components[k] - rep_static.components[k]
+        for k in rep_replan.components
+    )
+    dmk = rep_replan.makespan - rep_static.makespan
+    assert abs(dsum - dmk) < 1e-6 * max(1.0, abs(dmk)), (dsum, dmk)
+    print(f"  component deltas sum to the makespan delta: "
+          f"{dsum:+.3f}s == {dmk:+.3f}s")
 
     print("\n== elastic membership through the same path ==")
     rp = Replanner(wl, cluster, p0.copy(), config=cfg)

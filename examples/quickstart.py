@@ -5,7 +5,12 @@
 Builds the paper's testbed job (4 servers, 6 workers x 2 samplers, 1 PS,
 ogbn-products profile), searches a placement with ETP, schedules with OES,
 and prints the plan + the Theorem-1 certificate, compared against the
-DistDGL / OMCoflow / MRTF baselines.
+DistDGL / OMCoflow / MRTF baselines.  Closes with the observability tier:
+re-simulate the winning plan with ``record=True``, lift the flow log into
+a ``ScheduleTrace``, print the critical-path blame table, and export a
+Chrome/Perfetto ``trace.json`` you can drop into https://ui.perfetto.dev
+(machines render as processes, task/flow spans as slices, per-machine NIC
+utilization as counter tracks).
 """
 import sys
 from pathlib import Path
@@ -50,6 +55,22 @@ def main():
         print(f"  {pol:8s} (DGTP placement): {res.makespan:.2f} s")
     sp = 100 * (1 - p.schedule.makespan / dd.schedule.makespan)
     print(f"\nDGTP speedup over DistDGL: {sp:.1f}%")
+
+    print("\n== tracing the winning schedule (repro.obs) ==")
+    # record=True keeps the per-flow log (numpy backend only — the jax
+    # engine returns flow_log=None and aggregate counters instead); the
+    # trace lifts it into spans + per-machine NIC utilization timelines
+    from repro.obs import ScheduleTrace, blame, write_trace
+
+    res = simulate(wl, cluster, p.placement, r, record=True)
+    tr = ScheduleTrace.from_result(res, wl, cluster, p.placement, r)
+    print(blame(tr).table(label="  oes"))
+    out = Path(__file__).resolve().parent / "trace.json"
+    obj = write_trace(tr, out)
+    n_x = sum(1 for e in obj["traceEvents"] if e["ph"] == "X")
+    n_c = sum(1 for e in obj["traceEvents"] if e["ph"] == "C")
+    print(f"  wrote {out} ({n_x} slices, {n_c} counter samples) "
+          f"-- open it at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

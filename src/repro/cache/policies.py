@@ -30,6 +30,7 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
 from .trace import AccessTrace
 
 
@@ -128,4 +129,20 @@ def replay(
         raise ValueError(
             f"unknown cache policy {policy!r}; known: {sorted(REPLAYS)}"
         ) from None
-    return fn(trace, int(capacity_nodes), k)
+    out = fn(trace, int(capacity_nodes), k)
+    if obs_metrics.REGISTRY.enabled:
+        # aggregate hit-rate counters (REPRO_OBS=1): weight each
+        # iteration's hit fraction by its access count so the registry's
+        # hits/accesses ratio reproduces the true pooled hit rate
+        accesses = np.array(
+            [sum(len(a) for a in per) for per in trace.merged(k)],
+            dtype=np.float64,
+        )
+        obs_metrics.REGISTRY.counter("cache.replay.calls").inc()
+        obs_metrics.REGISTRY.counter("cache.replay.accesses").inc(
+            float(accesses.sum())
+        )
+        obs_metrics.REGISTRY.counter("cache.replay.hits").inc(
+            float((out * accesses).sum())
+        )
+    return out

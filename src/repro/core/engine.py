@@ -67,6 +67,7 @@ import numpy as np
 
 from .cluster import ClusterSpec, Placement
 from .workload import Realization, Workload
+from ..obs import metrics as obs_metrics
 
 EPS = 1e-9
 
@@ -558,11 +559,39 @@ class TaskEvent:
 
 @dataclass
 class ScheduleResult:
+    """One simulated schedule.
+
+    ``flow_log`` is a list of ``(edge, iter, start, end)`` tuples when the
+    run was recorded (``record=True`` on the numpy backend) and ``None``
+    when it was NOT recorded — ``record=False``, or any jax-backend run:
+    the jitted program never materialises per-flow spans (use the
+    ``aggregates`` counters from ``engine_jax.simulate_batch_jax(...,
+    utilization=True)`` instead, or re-run with ``backend="numpy"``).
+    ``None`` (not ``[]``) so "unrecorded" can never be confused with "a
+    recorded schedule that happened to have no remote flows".
+
+    ``n_events`` diverges between backends BY DESIGN: the numpy engine
+    counts discrete events (task completions, flow deliveries, trace
+    segments, escalations), while the jax engine counts lock-step
+    ``while_loop`` iterations — one iteration may retire several
+    simultaneous events, so the jax count is <= the numpy count for the
+    same schedule.  Compare makespans and task-start matrices across
+    backends (pinned at ``PARITY_RTOL``), never ``n_events``.
+
+    ``aggregates``, when present, is the jax engine's in-program
+    accumulator dict: per-machine NIC utilization integrals
+    (``nic_in_gb``/``nic_out_gb``, GB delivered into/out of each machine),
+    per-machine busy-time integrals (``busy_s``) and per-traffic-class
+    delivered bytes (``class_gb``).  ``None`` unless collected.
+    """
+
     makespan: float
     task_events: List[TaskEvent]
-    flow_log: List[Tuple[int, int, float, float]]  # (edge, iter, start, end)
+    # (edge, iter, start, end) per delivered flow; None when unrecorded
+    flow_log: Optional[List[Tuple[int, int, float, float]]]
     n_events: int
     policy: str
+    aggregates: Optional[dict] = None
 
     def task_start_matrix(self, J: int, N: int) -> np.ndarray:
         out = np.full((J, N), np.nan)
@@ -636,6 +665,10 @@ def simulate(
     START time only — a task spanning a boundary keeps its original finish
     time, mirroring how a straggling host delays the work it has already
     admitted."""
+    if obs_metrics.REGISTRY.enabled:
+        # one pre-aggregated increment per call, OUTSIDE the event loop —
+        # the engine hot path itself carries no obs code
+        obs_metrics.REGISTRY.counter("engine.simulate.calls").inc()
     if resolve_backend(backend) == "jax":
         from .engine_jax import simulate_batch_jax
 
@@ -902,7 +935,7 @@ def simulate(
     return ScheduleResult(
         makespan=float(t),
         task_events=events,
-        flow_log=flow_log,
+        flow_log=flow_log if record else None,
         n_events=n_events,
         policy=policy.name,
     )
@@ -1203,6 +1236,11 @@ def simulate_batch(
     > numpy) routes the whole batch through the jitted jax engine — this
     is the throughput path the knob exists for (see the module docstring's
     backend section and benchmarks/bench_engine.py)."""
+    if obs_metrics.REGISTRY.enabled:
+        obs_metrics.REGISTRY.counter("engine.simulate_batch.calls").inc()
+        obs_metrics.REGISTRY.counter("engine.simulate_batch.instances").inc(
+            len(placements)
+        )
     if resolve_backend(backend) == "jax":
         from .engine_jax import simulate_batch_jax
 
@@ -1628,7 +1666,7 @@ def simulate_batch(
         ScheduleResult(
             makespan=float(t[b]),
             task_events=events[b],
-            flow_log=flow_logs[b],
+            flow_log=flow_logs[b] if record else None,
             n_events=int(n_events[b]),
             policy=policy.name,
         )

@@ -29,13 +29,21 @@ agrees with the numpy engine on makespans and task-start schedules at
 ``PARITY_RTOL`` (XLA may fuse multiply-adds, so bit-equality is not
 promised the way numpy batch-vs-scalar is).  Known divergences, by design:
 ``n_events`` counts jitted lock-step iterations (zero-duration cascades
-settle in one iteration instead of several) and ``flow_log`` is not
-recorded (``record=True`` still yields exact ``task_events``).
+settle in one iteration instead of several) and ``flow_log`` is ``None``
+— never recorded (``record=True`` still yields exact ``task_events``).
+In place of per-flow spans the program can carry cheap IN-PROGRAM
+aggregate accumulators (``utilization=True``): per-machine NIC
+utilization integrals (GB delivered into/out of each machine — the
+integral of the rate solve over every advance step), per-machine
+busy-time integrals (wall seconds with >= 1 task running) and
+per-traffic-class delivered bytes, returned on
+``ScheduleResult.aggregates``.  These add four small arrays to the loop
+state and are compiled OUT (a separate jit cache entry) unless asked for.
 
 Batch widths are padded to the next power of two (repeating instance 0)
 so the jit cache sees a handful of shapes instead of one per width; the
 compiled program cache is keyed on (padded width, workload topology,
-policy, shaping levels, trace length, record).
+policy, shaping levels, trace length, record, utilization).
 """
 from __future__ import annotations
 
@@ -118,6 +126,10 @@ class _State(NamedTuple):
     migleft: object  # [B, J]
     start_rec: object  # [B, J, N] (nan when not recorded)
     end_rec: object  # [B, J, N]
+    util_in: object  # [B, M] GB delivered into each machine ((1,1) off)
+    util_out: object  # [B, M] GB sent out of each machine ((1,1) off)
+    busy: object  # [B, M] seconds with >=1 running task ((1,1) off)
+    clsgb: object  # [B, L] GB delivered per traffic class ((1,1) off)
 
 
 def _build_runner(
@@ -139,6 +151,8 @@ def _build_runner(
     record: bool,
     max_events: int,
     use_pallas: bool,
+    collect: bool,
+    agg_levels: tuple,
     src_t: np.ndarray,
     dst_t: np.ndarray,
     lag: np.ndarray,
@@ -208,6 +222,11 @@ def _build_runner(
         # event loop).
         oh_dst = dst_mx[:, None, :] == jnp.arange(M, dtype=dst_mx.dtype)[None, :, None]
         oh_src = src_mx[:, None, :] == jnp.arange(M, dtype=src_mx.dtype)[None, :, None]
+        if collect:
+            # [B, M, J] task->machine incidence for the busy-time integral
+            oh_y = (
+                y_mat[:, None, :] == jnp.arange(M, dtype=y_mat.dtype)[None, :, None]
+            )
 
         def sum_dst(vals):  # [B, EG] f64 -> [B, M]
             return jnp.sum(jnp.where(oh_dst, vals[:, None, :], 0.0), axis=2)
@@ -583,6 +602,23 @@ def _build_runner(
             dtb = jnp.where(adv, t_next - s.t, 0.0)
             remaining = s.remaining - r * dtb[:, None]
             t = jnp.where(adv, t_next, s.t)
+            agg = {}
+            if collect:
+                # in-program observability integrals: GB moved this step
+                # per flow, folded onto the NIC / class axes (the jax
+                # engine's stand-in for the numpy flow_log)
+                dvol = r * dtb[:, None]
+                agg["util_in"] = s.util_in + sum_dst(dvol)
+                agg["util_out"] = s.util_out + sum_src(dvol)
+                nrun = jnp.sum(oh_y & s.running[:, None, :], axis=2)
+                agg["busy"] = s.busy + jnp.where(nrun > 0, dtb[:, None], 0.0)
+                agg["clsgb"] = s.clsgb + jnp.stack(
+                    [
+                        jnp.sum(jnp.where(flow_cls == lvl, dvol, 0.0), axis=1)
+                        for lvl in agg_levels
+                    ],
+                    axis=1,
+                )
             seg = s.seg
             if S > 1:
                 new_seg = (
@@ -601,9 +637,12 @@ def _build_runner(
                 # freeze deadlocked instances so the outer loop terminates
                 active=s.active & ~bad[:, None],
                 running=s.running & ~bad[:, None],
+                **agg,
             )
 
         rec_shape = (B, J, N) if record else (1, 1, 1)
+        agg_shape = (B, M) if collect else (1, 1)
+        cls_shape = (B, max(1, len(agg_levels))) if collect else (1, 1)
         s = _State(
             k=jnp.int64(0),
             t=jnp.zeros(B),
@@ -621,6 +660,10 @@ def _build_runner(
             migleft=migleft0,
             start_rec=jnp.full(rec_shape, jnp.nan),
             end_rec=jnp.full(rec_shape, jnp.nan),
+            util_in=jnp.zeros(agg_shape),
+            util_out=jnp.zeros(agg_shape),
+            busy=jnp.zeros(agg_shape),
+            clsgb=jnp.zeros(cls_shape),
         )
         s = settle(s)
 
@@ -634,7 +677,10 @@ def _build_runner(
 
         s = lax.while_loop(cond, body, s)
         alive = s.running.any(axis=1) | s.active.any(axis=1)
-        return s.t, s.nev, s.stuck, alive, s.start_rec, s.end_rec
+        return (
+            s.t, s.nev, s.stuck, alive, s.start_rec, s.end_rec,
+            s.util_in, s.util_out, s.busy, s.clsgb,
+        )
 
     return jax.jit(run)
 
@@ -659,13 +705,20 @@ def simulate_batch_jax(
     migrations: Optional[Sequence[Optional[Sequence[MigrationFlow]]]] = None,
     shaping: Optional[str] = None,
     edge_classes=None,
+    utilization: bool = False,
 ) -> List[ScheduleResult]:
     """``engine.simulate_batch`` on the jitted JAX backend.
 
     Same signature and event semantics; returns one ``ScheduleResult`` per
     instance agreeing with the numpy engine at ``PARITY_RTOL`` (float64).
-    ``flow_log`` is always empty and ``n_events`` counts jitted lock-step
-    iterations — see the module docstring for the exact contract.
+    ``flow_log`` is always ``None`` (never recorded) and ``n_events``
+    counts jitted lock-step iterations — see the module docstring for the
+    exact contract.  ``utilization=True`` compiles the in-program
+    aggregate accumulators into the loop (its own jit cache entry) and
+    fills ``ScheduleResult.aggregates`` with per-machine NIC utilization
+    integrals (``nic_in_gb``/``nic_out_gb``), busy-time integrals
+    (``busy_s``) and per-class delivered bytes (``class_gb``) — the
+    observability substitute for the flow log this backend cannot afford.
     """
     if not HAVE_JAX:  # pragma: no cover
         raise RuntimeError(
@@ -790,6 +843,11 @@ def simulate_batch_jax(
         shaped and policy.mode == "deadline" and np.isfinite(flow_dl).any()
     )
     levels = tuple(int(c) for c in np.unique(flow_cls)) if shaped else (0,)
+    # class axis for the aggregate accumulators (independent of shaping:
+    # unshaped runs still want migration-vs-training byte splits)
+    agg_levels = (
+        tuple(int(c) for c in np.unique(flow_cls)) if utilization else ()
+    )
 
     # pad the batch to a power of two (repeat instance 0) so the jit cache
     # sees a handful of widths; padding rows are discarded on return
@@ -817,7 +875,7 @@ def simulate_batch_jax(
         Bp, E, Gmax, J, N, M, S, inner.name, mode, dl_events, use_slow,
         no_cascade, levels,
         int(getattr(inner, "rounds", 4)), record, max_events,
-        _use_pallas_waterfill(),
+        _use_pallas_waterfill(), bool(utilization), agg_levels,
         src_t.tobytes(), dst_t.tobytes(), lag.tobytes(),
     )
     runner = _runner_for(
@@ -829,10 +887,11 @@ def simulate_batch_jax(
             levels=levels, rounds=int(getattr(inner, "rounds", 4)),
             record=record, max_events=max_events,
             use_pallas=_use_pallas_waterfill(),
+            collect=bool(utilization), agg_levels=agg_levels,
             src_t=src_t, dst_t=dst_t, lag=lag,
         ),
     )
-    t, nev, stuck, alive, start_rec, end_rec = runner(
+    t, nev, stuck, alive, start_rec, end_rec, util_in, util_out, busy, clsgb = runner(
         vol, ex, src_m, dst_m,
         ~local & (np.arange(EG) < E)[None, :],  # armable
         local[:, :E], flow_cls, flow_dl, gate_task, y_mat,
@@ -852,6 +911,11 @@ def simulate_batch_jax(
     if record:
         start_rec = np.asarray(start_rec)[:B]
         end_rec = np.asarray(end_rec)[:B]
+    if utilization:
+        util_in = np.asarray(util_in)[:B]
+        util_out = np.asarray(util_out)[:B]
+        busy = np.asarray(busy)[:B]
+        clsgb = np.asarray(clsgb)[:B]
     for b in range(B):
         events: List[TaskEvent] = []
         if record:
@@ -867,13 +931,25 @@ def simulate_batch_jax(
                 TaskEvent(j, n + 1, float(st), float(end_rec[b, j, n]))
                 for st, j, n in order
             ]
+        agg = None
+        if utilization:
+            agg = {
+                "nic_in_gb": util_in[b].copy(),
+                "nic_out_gb": util_out[b].copy(),
+                "busy_s": busy[b].copy(),
+                "class_gb": {
+                    lvl: float(clsgb[b, i])
+                    for i, lvl in enumerate(agg_levels)
+                },
+            }
         out.append(
             ScheduleResult(
                 makespan=float(t[b]),
                 task_events=events,
-                flow_log=[],
+                flow_log=None,
                 n_events=int(nev[b]),
                 policy=policy.name,
+                aggregates=agg,
             )
         )
     return out

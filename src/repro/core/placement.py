@@ -35,6 +35,7 @@ from .cluster import (
 )
 from .engine import expected_makespan, mean_batch_makespans, monte_carlo_draws
 from .workload import Realization, Workload
+from ..obs import metrics as obs_metrics
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +247,14 @@ class ETPResult:
     # check, e.g. a cache reservation); multi-chain best-of deprioritises
     # such results
     fallback: bool = False
+    # MCMC acceptance telemetry: moves drawn / moves Metropolis-accepted
+    # (self-loop draws with no host machine count as proposals)
+    proposals: int = 0
+    accepted: int = 0
+    # multi-chain runs: one dict per chain (objective trajectory,
+    # evals, hits, acceptance) — the winning chain's numbers are the
+    # scalar fields above; see repro.obs.telemetry.search_telemetry
+    chain_stats: Optional[List[dict]] = None
 
 
 def group_move_candidates(
@@ -327,6 +336,8 @@ class _Chain:
         self.cache: Dict[bytes, Tuple[float, float]] = {}
         self.evals = 0
         self.hits = 0
+        self.proposals = 0
+        self.accepted = 0
         self.trace: List[float] = []
         self.best: Optional[Placement] = None
         self.best_t = math.inf
@@ -400,6 +411,7 @@ class _Chain:
         self.beta_z = self.beta
         if self.anneal and self.budget > 1:
             self.beta_z = (self.beta / 4.0) * (16.0 ** (z / (self.budget - 1)))
+        self.proposals += 1
         j = int(rng.choice(self.movable))
         move_set = [j]
         if (
@@ -432,6 +444,7 @@ class _Chain:
             self.best, self.best_t = prop.copy(), prop_t
         accept_p = min(1.0, math.exp(min(50.0, self.beta_z * (self.cur_cost - prop_cost))))
         if self.rng.random() <= accept_p:
+            self.accepted += 1
             for jj in move_set:
                 self.usage[int(self.cur.y[jj])] -= self.demands[jj]
                 self.usage[m_new] += self.demands[jj]
@@ -458,6 +471,11 @@ class _Chain:
             # legitimate result and competes on makespan in _best_of; the
             # flag only marks placements returned WITHOUT that guarantee
             fallback = not self.feasible(best)
+        if obs_metrics.REGISTRY.enabled:
+            obs_metrics.REGISTRY.counter("etp.evaluations").inc(self.evals)
+            obs_metrics.REGISTRY.counter("etp.cache_hits").inc(self.hits)
+            obs_metrics.REGISTRY.counter("etp.proposals").inc(self.proposals)
+            obs_metrics.REGISTRY.counter("etp.accepted").inc(self.accepted)
         return ETPResult(
             placement=best,
             cost_trace=self.trace,
@@ -466,7 +484,23 @@ class _Chain:
             cache_hits=self.hits,
             wall_time_s=wall_time_s,
             fallback=fallback,
+            proposals=self.proposals,
+            accepted=self.accepted,
         )
+
+    def stats(self) -> dict:
+        """Per-chain telemetry row (repro.obs.telemetry): light enough to
+        attach to every multi-chain result unconditionally."""
+        return {
+            "seed": self.seed,
+            "evaluations": self.evals,
+            "cache_hits": self.hits,
+            "proposals": self.proposals,
+            "accepted": self.accepted,
+            "acceptance_rate": self.accepted / max(self.proposals, 1),
+            "best_makespan": float(self.best_t),
+            "objective_trajectory": [float(c) for c in self.trace],
+        }
 
 
 def etp_search(
@@ -619,13 +653,27 @@ def etp_multichain(
         if batch_cost_fn is not None and seq_kw.get("cost_fn") is None:
             seq_kw["cost_fn"] = lambda p: batch_cost_fn([p])[0]
         best: Optional[ETPResult] = None
+        stats: List[dict] = []
         for c in range(n_chains):
             r = etp_search(
                 workload, cluster, budget=per, seed=seed + 7919 * c,
                 init=chain_init(c), time_budget_s=time_budget_s, **seq_kw,
             )
+            stats.append(
+                {
+                    "seed": seed + 7919 * c,
+                    "evaluations": r.evaluations,
+                    "cache_hits": r.cache_hits,
+                    "proposals": r.proposals,
+                    "accepted": r.accepted,
+                    "acceptance_rate": r.accepted / max(r.proposals, 1),
+                    "best_makespan": float(r.best_makespan),
+                    "objective_trajectory": [float(c_) for c_ in r.cost_trace],
+                }
+            )
             best = _best_of(best, r)
         assert best is not None
+        best.chain_stats = stats
         return best
 
     t0 = time.perf_counter()
@@ -691,6 +739,7 @@ def etp_multichain(
     for ch in chains:
         best_r = _best_of(best_r, ch.result(wall))
     assert best_r is not None
+    best_r.chain_stats = [ch.stats() for ch in chains]
     return best_r
 
 

@@ -46,6 +46,7 @@ from ..core.cluster import ClusterSpec, Machine, Placement
 from ..core.engine import MigrationFlow, monte_carlo_draws, simulate_batch
 from ..core.placement import ETPResult, etp_search, remap_after_leave
 from ..core.workload import Workload
+from ..obs import metrics as obs_metrics
 from .traces import relative_bw_drift
 
 
@@ -524,6 +525,15 @@ class Replanner:
         self._planned_bw_in = cluster_now.bw_in.copy()
         self._planned_bw_out = cluster_now.bw_out.copy()
         self.records.append(rec)
+        if obs_metrics.REGISTRY.enabled:
+            reg = obs_metrics.REGISTRY
+            reg.counter("replan.replans").inc()
+            reg.counter(f"replan.trigger.{trigger}").inc()
+            reg.counter("replan.moved_tasks").inc(rec.moved_tasks)
+            reg.counter("replan.migration_gb").inc(rec.migration_gb)
+            reg.histogram("replan.overlap_s").observe(rec.overlap_s)
+            if np.isfinite(rec.drift):
+                reg.histogram("replan.drift").observe(rec.drift)
         return rec
 
     def observe(
@@ -551,6 +561,9 @@ class Replanner:
             )
         rec = ReplanRecord(trigger=trigger, replanned=False, drift=d)
         self.records.append(rec)
+        if obs_metrics.REGISTRY.enabled:
+            obs_metrics.REGISTRY.counter("replan.declined").inc()
+            obs_metrics.REGISTRY.histogram("replan.drift").observe(d)
         return rec
 
     # -- elastic membership ----------------------------------------------

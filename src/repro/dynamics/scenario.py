@@ -56,6 +56,9 @@ class ScenarioOutcome:
     shaping: Optional[str] = None  # traffic-class mode the flows rode under
     intervals: List[IntervalOutcome] = field(default_factory=list)
     placements: List[Placement] = field(default_factory=list)
+    # one recorded ScheduleTrace per interval when the scenario ran with
+    # collect_traces=True (repro.obs) — empty otherwise
+    traces: List[object] = field(default_factory=list)
 
     @property
     def compute_s(self) -> float:
@@ -88,6 +91,20 @@ class ScenarioOutcome:
     def n_replans(self) -> int:
         return sum(1 for iv in self.intervals if iv.replanned)
 
+    def blame(self):
+        """Combined critical-path blame over the run's intervals (requires
+        ``run_scenario(..., collect_traces=True)``).  Per-interval blame
+        conserves each interval's makespan, so the combined components sum
+        to ``total_s`` — the decomposition that turns "replan beat static
+        by X seconds" into named component deltas."""
+        if not self.traces:
+            raise ValueError(
+                "no traces recorded — run_scenario(..., collect_traces=True)"
+            )
+        from ..obs.blame import blame as _blame, combine
+
+        return combine([_blame(tr) for tr in self.traces])
+
 
 def run_scenario(
     workload: Workload,
@@ -105,9 +122,16 @@ def run_scenario(
     oracle_budget: int = 600,
     oracle_chains: int = 4,
     policy: str = "oes",
+    collect_traces: bool = False,
 ) -> ScenarioOutcome:
     """Run ``n_intervals`` plan intervals of ``iters_per_interval``
-    iterations each under ``strategy`` on the true dynamic cluster."""
+    iterations each under ``strategy`` on the true dynamic cluster.
+
+    ``collect_traces=True`` records every interval's committed simulation
+    and attaches one ``repro.obs.ScheduleTrace`` per interval to
+    ``ScenarioOutcome.traces`` (makespans are unchanged: recording is
+    observational).  ``ScenarioOutcome.blame()`` then decomposes the
+    run's total into named critical-path components."""
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; known: {STRATEGIES}")
     cfg = replan_config or ReplanConfig()
@@ -175,7 +199,18 @@ def run_scenario(
             workload, cluster, placement, r_iv,
             policy=policy, trace=tw, migrations=flows or None,
             shaping=shaping if flows else None, backend="numpy",
+            record=collect_traces,
         )
+        if collect_traces:
+            from ..obs.trace import ScheduleTrace
+
+            out.traces.append(
+                ScheduleTrace.from_result(
+                    res_iv, workload, cluster, placement, r_iv,
+                    trace=tw, migrations=flows or None,
+                    shaping=shaping if flows else None,
+                )
+            )
         overlap_s = 0.0
         if flows:
             clean_iv = simulate(

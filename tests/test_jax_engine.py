@@ -27,8 +27,9 @@ Covered here:
 
 ``n_events`` is NOT compared anywhere: the jax engine counts lock-step
 iterations (zero-duration cascades settle inside one), a documented
-divergence.  ``flow_log`` is empty on the jax backend; ``task_events``
-are exact and are what the start-matrix checks consume.
+divergence.  ``flow_log`` is ``None`` on the jax backend (never
+recorded, distinct from numpy's recorded-but-empty ``[]``);
+``task_events`` are exact and are what the start-matrix checks consume.
 """
 import numpy as np
 import pytest
@@ -179,7 +180,7 @@ def test_golden_suite_jax(golden, name, regime):
             starts = res.task_start_matrix(wl.J, realization.n_iters)
             assert np.allclose(starts, np.array(pinned["task_start"]),
                                rtol=PARITY_RTOL, atol=PARITY_ATOL)
-            assert res.flow_log == []  # documented jax-backend divergence
+            assert res.flow_log is None  # documented jax-backend divergence
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +207,7 @@ def test_backend_kwarg_and_env_routing(routing_case, monkeypatch):
     monkeypatch.setenv("REPRO_ENGINE_BACKEND", "jax")
     assert resolve_backend() == "jax"
     via_env = simulate_batch(wl, cluster, [p], [r])[0]
-    assert via_env.flow_log == []  # proves the jax engine actually ran
+    assert via_env.flow_log is None  # proves the jax engine actually ran
     _assert_parity(wl, ref, via_env, r.n_iters)
     # explicit kwarg beats the env
     via_override = simulate_batch(wl, cluster, [p], [r], backend="numpy")[0]

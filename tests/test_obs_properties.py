@@ -1,0 +1,90 @@
+"""Hypothesis properties of the observability tier.
+
+For random jobs, clusters and rate policies on a STATIC cluster:
+
+  P1  the critical-path length (pure compute + contention-free transfer
+      on the blame chain) never exceeds the makespan — it is the
+      dependency-chain lower bound, and with no bandwidth trace every
+      span's realized duration >= its ideal component, so the telescoped
+      chain can only grow;
+  P2  blame conservation: the components sum to the makespan within
+      float tolerance for every drawn schedule (the golden matrix pins
+      fixed cases; this sweeps the input space);
+  P3  NIC conservation: each machine's utilization-timeline integral
+      equals its delivered bytes.
+"""
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import build_gnn_workload, heterogeneous_cluster, ifs_placement, simulate
+from repro.obs.blame import blame
+from repro.obs.trace import ScheduleTrace
+
+job_st = st.fixed_dictionaries(
+    {
+        "n_stores": st.integers(2, 4),
+        "n_workers": st.integers(1, 3),
+        "samplers_per_worker": st.integers(1, 2),
+        "n_iters": st.integers(2, 5),
+        "vol": st.floats(0.05, 3.0),
+        "pmr": st.floats(1.0, 1.6),
+        "seed": st.integers(0, 10_000),
+        "policy": st.sampled_from(
+            ("oes", "oes_strict", "fifo", "mrtf", "omcoflow")
+        ),
+    }
+)
+
+
+def _case(j):
+    wl = build_gnn_workload(
+        n_stores=j["n_stores"],
+        n_workers=j["n_workers"],
+        samplers_per_worker=j["samplers_per_worker"],
+        n_ps=1,
+        n_iters=j["n_iters"],
+        store_to_sampler_gb=j["vol"],
+        sampler_to_worker_gb=j["vol"] / 2,
+        grad_gb=0.05,
+        store_exec_s=0.1,
+        sampler_exec_s=0.2,
+        worker_exec_s=0.4,
+        ps_exec_s=0.1,
+        pmr=j["pmr"],
+    )
+    cluster = heterogeneous_cluster(j["n_stores"], seed=j["seed"])
+    try:
+        p = ifs_placement(wl, cluster, seed=j["seed"])
+    except ValueError:
+        assume(False)
+    return wl, cluster, p, wl.realize(seed=j["seed"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(job_st)
+def test_critical_path_lower_bounds_makespan(j):
+    wl, cluster, p, r = _case(j)
+    res = simulate(wl, cluster, p, r, policy=j["policy"], record=True,
+                   backend="numpy")
+    tr = ScheduleTrace.from_result(res, wl, cluster, p, r)
+    rep = blame(tr)
+    # P2: conservation on arbitrary drawn inputs
+    assert abs(rep.residual) < 1e-9 * max(1.0, rep.makespan)
+    # P1: static cluster -> chain compute+ideal-transfer is a true lower
+    # bound (realized spans only add contention/straggler/dependency time)
+    assert rep.critical_path_length <= rep.makespan + 1e-9 * max(
+        1.0, rep.makespan
+    )
+    # P3: byte conservation through every NIC
+    for m in range(tr.M):
+        for direction in ("in", "out"):
+            assert math.isclose(
+                tr.utilization_integral(m, direction),
+                tr.delivered_gb(m, direction),
+                rel_tol=1e-9,
+                abs_tol=1e-9,
+            )
