@@ -1,0 +1,199 @@
+"""Arrival-stream service benchmarks: deadline compliance + accounting.
+
+Four studies, each ASSERTING its acceptance property before emitting:
+
+  * ``deadline_compliance`` — the co-scheduling service vs the EDF / SJF /
+    round-robin exclusive orderings on a mixed-QoS arrival stream of
+    compute-heavy tenants: the service must meet STRICTLY more deadlines
+    than every baseline (compute-dominated jobs overlap almost perfectly
+    when merged, so sharing finishes in ~max(solo) where any exclusive
+    order pays ~sum(solo)).
+  * ``rejection_isolation`` — re-runs the stream with a doomed arrival
+    injected: admission evaluates it purely predictively, so the admitted
+    tenants' epochs and completion times must be byte-identical (exact
+    float equality) to the run without it.
+  * ``tenant_blame`` — per-tenant critical-path attribution over the
+    service's recorded epochs: per epoch the shares must sum to the epoch
+    makespan at machine precision (the blame chain telescopes; the split
+    is a regrouping of a conserved sum).
+  * ``incremental_merge`` — membership-churn throughput: IncrementalMerge
+    (memoized fragments + per-job draws under stable tokens) vs from-
+    scratch ``merge_workloads`` + ``realize_merged`` on every membership
+    change, over a join/leave stream.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only arrivals``
+(add ``--smoke`` for the CI-sized version) or
+``PYTHONPATH=src python -m benchmarks.bench_arrivals``
+"""
+from __future__ import annotations
+
+from .common import Timer, emit  # noqa: F401 (inserts src/ into sys.path)
+
+from repro.core import build_gnn_workload, heterogeneous_cluster
+from repro.dynamics import (
+    JobArrival,
+    ServiceConfig,
+    run_ordering_baseline,
+    run_service,
+    solo_makespan,
+)
+
+
+def compute_job(n_iters: int = 4, heavy: float = 1.0):
+    return build_gnn_workload(
+        n_stores=2, n_workers=1, samplers_per_worker=1, n_ps=1,
+        n_iters=n_iters, store_to_sampler_gb=0.2, sampler_to_worker_gb=0.1,
+        grad_gb=0.05, store_exec_s=0.1, sampler_exec_s=0.2,
+        worker_exec_s=2.0 * heavy, ps_exec_s=0.1, pmr=1.2,
+    )
+
+
+def mixed_stream(cluster, n_jobs: int = 3, slack: float = 1.6, seed: int = 0):
+    arrivals = []
+    for i in range(n_jobs):
+        job = compute_job(n_iters=4)
+        solo = solo_makespan(job, cluster, seed=seed, index=i)
+        t0 = 0.5 * i
+        arrivals.append(
+            JobArrival(
+                f"t{i}", t0, job, deadline_s=t0 + slack * solo, qos=i % 2
+            )
+        )
+    return arrivals
+
+
+def deadline_compliance(smoke: bool = False, seed: int = 0):
+    """Service vs EDF/SJF/RR deadline counts on the mixed-QoS stream."""
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    stream = mixed_stream(cluster, n_jobs=3 if smoke else 4, seed=seed)
+    with Timer() as t:
+        svc = run_service(
+            stream, cluster, ServiceConfig(replan=not smoke, seed=seed)
+        ).report
+    emit(
+        "arrivals_service", t.us,
+        f"met={svc.deadlines_met}/{svc.n_jobs} admitted={svc.n_admitted} "
+        f"fairness={svc.fairness:.3f} mean_slowdown={svc.mean_slowdown:.2f}",
+    )
+    for order in ("edf", "sjf", "rr"):
+        with Timer() as t:
+            rep = run_ordering_baseline(stream, cluster, order, seed=seed)
+        # the acceptance property: strictly more deadlines met
+        assert svc.deadlines_met > rep.deadlines_met, (
+            f"service ({svc.deadlines_met}) must beat {order} "
+            f"({rep.deadlines_met})"
+        )
+        emit(
+            f"arrivals_{order}", t.us,
+            f"met={rep.deadlines_met}/{rep.n_jobs} "
+            f"mean_slowdown={rep.mean_slowdown:.2f} "
+            f"service_margin=+{svc.deadlines_met - rep.deadlines_met}",
+        )
+
+
+def rejection_isolation(smoke: bool = False, seed: int = 0):
+    """A rejected arrival must leave admitted schedules byte-identical."""
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    stream = mixed_stream(cluster, n_jobs=3, seed=seed)
+    doomed = JobArrival(
+        "doomed", 0.75, compute_job(n_iters=4), deadline_s=1.0, qos=0
+    )
+    cfg = ServiceConfig(replan=False, seed=seed)
+    with Timer() as t:
+        with_r = run_service(stream + [doomed], cluster, cfg)
+        without = run_service(stream, cluster, cfg)
+    rejected = [x for x in with_r.report.tenants if x.name == "doomed"][0]
+    assert not rejected.admitted
+    kept = [x for x in with_r.report.tenants if x.name != "doomed"]
+    identical = True
+    for a, b in zip(without.report.tenants, kept):
+        identical &= a.t_complete == b.t_complete and a.t_admit == b.t_admit
+    identical &= len(without.epochs) == len(with_r.epochs)
+    for ea, eb in zip(without.epochs, with_r.epochs):
+        identical &= (ea.start_s, ea.end_s, ea.jobs, ea.served) == (
+            eb.start_s, eb.end_s, eb.jobs, eb.served
+        )
+    assert identical, "rejected arrival perturbed admitted schedules"
+    emit(
+        "arrivals_rejection_isolation", t.us,
+        f"epochs={len(without.epochs)} byte_identical=y",
+    )
+
+
+def tenant_blame(smoke: bool = False, seed: int = 0):
+    """Per-tenant blame conserves every epoch makespan exactly."""
+    from repro.obs.blame import blame_by_tenant
+
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    stream = mixed_stream(cluster, n_jobs=3, seed=seed)
+    with Timer() as t:
+        out = run_service(
+            stream, cluster, ServiceConfig(replan=False, seed=seed),
+            collect_traces=True,
+        )
+        worst = 0.0
+        for tr, offsets, names in out.traces:
+            shares = blame_by_tenant(tr, offsets)
+            resid = abs(sum(shares.values()) - tr.makespan)
+            worst = max(worst, resid / max(tr.makespan, 1.0))
+            assert resid <= 1e-9 * max(1.0, tr.makespan), (
+                f"blame does not conserve: residual {resid}"
+            )
+    totals = out.tenant_blame()
+    emit(
+        "arrivals_tenant_blame", t.us,
+        f"epochs={len(out.traces)} worst_rel_residual={worst:.2e} "
+        f"tenants={len(totals)}",
+    )
+
+
+def incremental_merge(smoke: bool = False, seed: int = 0):
+    """Membership churn: memoized incremental merge vs from-scratch."""
+    from repro.core.multijob import (
+        IncrementalMerge, merge_workloads, realize_merged,
+    )
+
+    n_events = 6 if smoke else 12
+    jobs = [compute_job(n_iters=8) for _ in range(n_events)]
+    # from-scratch: re-merge + re-realize the whole window every change
+    with Timer() as t_scratch:
+        window = []
+        for k, job in enumerate(jobs):
+            window.append((f"j{k}", job))
+            if len(window) > 3:
+                window.pop(0)
+            names = [n for n, _ in window]
+            mj = merge_workloads(
+                [j for _, j in window],
+                job_seeds=list(range(k - len(window) + 1, k + 1)),
+                names=names,
+            )
+            realize_merged(mj, seed=seed)
+    with Timer() as t_inc:
+        inc = IncrementalMerge()
+        alive = []
+        for k, job in enumerate(jobs):
+            inc.add_job(f"j{k}", job)
+            alive.append(f"j{k}")
+            if len(alive) > 3:
+                inc.remove_job(alive.pop(0))
+            inc.realize(inc.merged(), seed=seed)
+    speedup = t_scratch.us / max(t_inc.us, 1e-9)
+    emit(
+        "arrivals_incremental_merge", t_inc.us,
+        f"events={n_events} scratch_us={t_scratch.us:.0f} "
+        f"speedup={speedup:.2f}x",
+    )
+
+
+def main(smoke: bool = False):
+    deadline_compliance(smoke=smoke)
+    rejection_isolation(smoke=smoke)
+    tenant_blame(smoke=smoke)
+    incremental_merge(smoke=smoke)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -13,6 +13,9 @@ benches).  Prints ``name,us_per_call,derived`` CSV rows.
   dynamics        drift-trace re-planning: static vs replan vs oracle,
                   warm-vs-cold evaluations-to-quality (bench_dynamics;
                   ``--smoke`` shrinks budgets to CI size)
+  arrivals        multi-tenant arrival streams: service vs EDF/SJF/RR
+                  deadline compliance, rejection isolation, tenant-blame
+                  conservation, incremental-merge churn (bench_arrivals)
   engine_*        event-engine throughput: numpy vs jitted jax backend
                   across batch width and workload scale (bench_engine;
                   every row asserts makespan parity first)
@@ -32,6 +35,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from . import (
     bench_algorithms,
+    bench_arrivals,
     bench_cache,
     bench_dynamics,
     bench_engine,
@@ -77,7 +81,7 @@ def main() -> None:
         "--only", default=None,
         choices=[
             None, "figures", "algorithms", "kernels", "roofline", "etp",
-            "cache", "dynamics", "engine", "obs",
+            "cache", "dynamics", "engine", "obs", "arrivals",
         ],
     )
     ap.add_argument(
@@ -111,6 +115,9 @@ def main() -> None:
     if args.only in (None, "dynamics"):
         set_group("dynamics")
         bench_dynamics.main(smoke=args.smoke)
+    if args.only in (None, "arrivals"):
+        set_group("arrivals")
+        bench_arrivals.main(smoke=args.smoke)
     if args.only in (None, "obs"):
         set_group("obs")
         bench_obs.main(smoke=args.smoke)

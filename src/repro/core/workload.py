@@ -107,7 +107,12 @@ class Realization:
 
 @dataclass
 class Workload:
-    """Tasks + edges + traffic model for one training job."""
+    """Tasks + edges + traffic model for one training job.
+
+    ``is_merged`` marks a workload produced by ``core.multijob``'s merge:
+    its traffic model is NOT drawable directly (pmr/exec_jitter are maxed
+    across the member jobs and shorter jobs need epsilon padding), so
+    ``realize`` refuses and routes to ``realize_merged``."""
 
     tasks: List[TaskSpec]
     edges: List[Edge]
@@ -115,6 +120,7 @@ class Workload:
     n_iters: int
     sampler_of_worker: Dict[int, List[int]] = field(default_factory=dict)
     store_tasks: List[int] = field(default_factory=list)
+    is_merged: bool = False
 
     def __post_init__(self) -> None:
         self.J = len(self.tasks)
@@ -130,6 +136,14 @@ class Workload:
         self.kinds = np.array([KIND_ID[t.kind] for t in self.tasks], dtype=np.int64)
 
     def realize(self, seed: int = 0, n_iters: Optional[int] = None) -> Realization:
+        if self.is_merged:
+            raise ValueError(
+                "cannot realize a merged multi-job workload directly: "
+                "pmr/exec_jitter are maxed across the member jobs and "
+                "shorter jobs get no epsilon padding, so the draws would "
+                "be silently wrong — use core.multijob.realize_merged "
+                "(or merged_batch_cost for batched objectives) instead"
+            )
         return self.traffic.realize(n_iters or self.n_iters, seed=seed)
 
     def task_names(self) -> List[str]:

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -275,6 +275,12 @@ class Replanner:
     hit_model: Optional[object] = None  # repro.cache.HitModel
     cache_config: Optional[object] = None  # repro.cache.CacheConfig
     records: List[ReplanRecord] = field(default_factory=list)
+    #: optional override for candidate-scoring realizations, called as
+    #: ``draws_fn(seed, n_iters, n_draws) -> List[Realization]``.  Merged
+    #: multi-job workloads MUST set this (``Workload.realize`` refuses on
+    #: them — route through ``core.multijob.realize_merged``); the arrival
+    #: driver passes an ``IncrementalMerge``-backed closure here.
+    draws_fn: Optional[Callable[[int, int, int], List]] = None
 
     def __post_init__(self) -> None:
         if self.state_gb is None:
@@ -380,10 +386,13 @@ class Replanner:
         old_y_disc = old_y.copy()
         for j in forced:
             old_y_disc[j] = -1
-        reals = monte_carlo_draws(
-            self.workload, seed=cfg.seed, n_iters=cfg.sim_iters,
-            n_draws=cfg.sim_draws,
-        )
+        if self.draws_fn is not None:
+            reals = self.draws_fn(cfg.seed, cfg.sim_iters, cfg.sim_draws)
+        else:
+            reals = monte_carlo_draws(
+                self.workload, seed=cfg.seed, n_iters=cfg.sim_iters,
+                n_draws=cfg.sim_draws,
+            )
         n_d = len(reals)
         cache_cost, extra = self._cost_fn(cluster_now)
         rewriter = None

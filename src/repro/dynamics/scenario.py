@@ -47,6 +47,17 @@ class IntervalOutcome:
     migration_s: float  # analytic per-NIC drain bound (reference only)
     overlap_s: float  # makespan_s minus the migration-free interval
     replanned: bool
+    #: relative bandwidth drift of this interval's TRUE trace bandwidth
+    #: against the strategy's planning reference.  The reference is the
+    #: bandwidth the strategy's Replanner last planned against: ``replan``
+    #: advances it on every commit (so drift resets after each re-plan),
+    #: while ``static`` and ``oracle`` never observe — their Replanner's
+    #: reference stays the t=0 snapshot, so their ``drift`` reads as
+    #: cumulative divergence from the INITIAL plan, not from any
+    #: intermediate state.  That is intentional (pinned by
+    #: ``test_static_oracle_drift_is_relative_to_t0``): for strategies
+    #: that never re-plan, "how far has the world moved from what the
+    #: plan assumed" is the only meaningful drift question.
     drift: float
 
 

@@ -28,6 +28,7 @@ _LAZY = {
     "FlowSpan": ("trace", "FlowSpan"),
     "BlameReport": ("blame", "BlameReport"),
     "blame": ("blame", "blame"),
+    "blame_by_tenant": ("blame", "blame_by_tenant"),
     "blame_delta": ("blame", "blame_delta"),
     "combine": ("blame", "combine"),
     "to_trace_events": ("perfetto", "to_trace_events"),

@@ -195,6 +195,60 @@ def blame(tr: ScheduleTrace) -> BlameReport:
     )
 
 
+SERVICE_TENANT = -1  # blame key for spans owned by no tenant (service moves)
+
+
+def blame_by_tenant(
+    tr: ScheduleTrace, task_offsets: List[int]
+) -> Dict[int, float]:
+    """Split the critical-path makespan across tenants of a merged job.
+
+    Walks the same binding-predecessor chain as ``blame`` but attributes
+    each chain span's (release gap + duration) to the tenant that owns
+    it: a TaskSpan to the job its task index falls in (searchsorted over
+    ``task_offsets``), a FlowSpan to its SOURCE task's job, and a
+    migration pseudo-flow (edge >= E) to the job of the task it gates —
+    or to ``SERVICE_TENANT`` when it gates nothing, since an ungated
+    state move is the service's own overhead, not any tenant's.
+
+    The chain telescopes exactly as in ``blame``, so the values sum to
+    ``tr.makespan`` at machine precision — the per-tenant split is a
+    regrouping of the same conserved sum.  A tenant's share reads as "the
+    seconds of the merged critical path spent inside (or waiting on) this
+    tenant's work": the shared-cluster analogue of RapidGNN-style per-job
+    efficiency accounting, and the number to show a tenant asking why the
+    merged run finished when it did."""
+    tasks, flows = _index_spans(tr)
+    spans: List[object] = list(tr.tasks) + list(tr.flows)
+    if not spans:
+        return {}
+    wl = tr.workload
+    bounds = np.asarray(list(task_offsets) + [wl.J])
+
+    def tenant_of(span) -> int:
+        if isinstance(span, TaskSpan):
+            t = span.task
+        elif span.edge < wl.E:
+            t = int(wl.edge_src[span.edge])
+        elif span.gated_task >= 0:
+            t = span.gated_task
+        else:
+            return SERVICE_TENANT
+        return int(np.searchsorted(bounds, t, side="right") - 1)
+
+    shares: Dict[int, float] = {}
+    cur = max(spans, key=lambda s: s.end)
+    seen = set()
+    while cur is not None and id(cur) not in seen:
+        seen.add(id(cur))
+        pred = _binding_pred(cur, tr, tasks, flows)
+        gap = cur.start - (pred.end if pred is not None else 0.0)
+        key = tenant_of(cur)
+        shares[key] = shares.get(key, 0.0) + gap + cur.duration
+        cur = pred
+    return shares
+
+
 def combine(reports: List[BlameReport]) -> BlameReport:
     """Sum reports across intervals (scenario blame): components add, the
     conservation invariant carries over because each addend conserves."""

@@ -21,6 +21,8 @@ from repro.core import (
     simulate_slotted,
 )
 from repro.core.multijob import (
+    SEED_NS_DRAW,
+    derive_seed,
     merge_workloads,
     merged_batch_cost,
     realize_merged,
@@ -167,6 +169,6 @@ def test_merged_job_batch_cost_matches_scalar_sim():
     for p, c in zip(placements, got):
         ref = 0.0
         for d in range(2):
-            r = realize_merged(mj, [j1, j2], seed=0 + 1000 * d)
+            r = realize_merged(mj, [j1, j2], seed=derive_seed(0, SEED_NS_DRAW, d))
             ref += simulate(mj.workload, cluster, p, r, policy="oes").makespan
         assert c == ref / 2

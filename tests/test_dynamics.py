@@ -685,3 +685,29 @@ def test_warm_replan_reaches_cold_quality_with_fewer_evaluations():
     assert warm_res.best_makespan <= cold_res.best_makespan * 1.001
     assert warm_res.evaluations < cold_res.evaluations
     assert warm_res.wall_time_s <= cold_res.wall_time_s
+
+
+def test_static_oracle_drift_is_relative_to_t0():
+    """Pin the ``IntervalOutcome.drift`` semantics for strategies that
+    never re-plan: ``static`` and ``oracle`` carry a Replanner whose
+    bandwidth reference is never advanced (they never observe), so every
+    interval's drift reads relative to the t=0 cluster snapshot — the
+    cumulative "how far has the world moved from what the initial plan
+    assumed", NOT drift since the previous interval."""
+    from repro.dynamics import relative_bw_drift
+
+    wl = replan_job(n_iters=16)
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    tr = drift_trace(cluster, horizon_s=60.0, n_segments=8, seed=1)
+    kw = dict(
+        n_intervals=3, iters_per_interval=5, seed=0,
+        replan_config=ReplanConfig(budget=20, sim_iters=5),
+    )
+    for strategy in ("static", "oracle"):
+        out = run_scenario(wl, cluster, tr, strategy=strategy, **kw)
+        for iv in out.intervals:
+            bw_in, bw_out = tr.bw_at(iv.start_s)
+            expected = relative_bw_drift(
+                cluster.bw_in, cluster.bw_out, bw_in, bw_out
+            )
+            assert iv.drift == pytest.approx(expected, abs=1e-12)

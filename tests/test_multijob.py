@@ -13,6 +13,8 @@ from repro.core import (
 )
 from repro.core.multijob import (
     EPS_EXEC,
+    SEED_NS_JOB,
+    derive_seed,
     joint_search,
     merge_migrations,
     merge_workloads,
@@ -162,7 +164,9 @@ def test_merged_realization_epsilon_padding():
     assert np.all(r.volumes[j1.E :, pad_iters] == 0.0)
     assert np.all(r.exec_times[off:, pad_iters] == EPS_EXEC)
     # true-horizon cells are untouched draws of the per-job realizations
-    r2 = j2.realize(seed=0 + 7919 * 1, n_iters=j2.n_iters)
+    # (per-job seeds live in the SEED_NS_JOB namespace, keyed by position
+    # when no stable tokens were assigned)
+    r2 = j2.realize(seed=derive_seed(0, SEED_NS_JOB, 1), n_iters=j2.n_iters)
     assert np.array_equal(r.volumes[j1.E :, : j2.n_iters], r2.volumes)
     assert np.array_equal(r.exec_times[off:, : j2.n_iters], r2.exec_times)
 
@@ -250,3 +254,135 @@ def test_joint_search_batched_path():
     assert len(spans) == 2 and all(np.isfinite(s) and s > 0 for s in spans)
     assert np.isfinite(res.best_makespan)
     assert tuned <= base * 1.05  # joint objective averages draws; allow slack
+
+
+# ---------------------------------------------------------------------------
+# PR 8 satellites: accounting fix, merged-realize guard, seed namespacing,
+# incremental merge
+# ---------------------------------------------------------------------------
+def _per_job_makespans_reference(mj, result):
+    """The pre-vectorization O(events x jobs) scan, kept as the oracle."""
+    ends = [0.0] * len(mj.task_offsets)
+    bounds = mj.task_offsets + [mj.workload.J]
+    for ev in result.task_events:
+        for ji in range(len(mj.task_offsets)):
+            if bounds[ji] <= ev.task < bounds[ji + 1] and ev.iter <= mj.n_iters[ji]:
+                ends[ji] = max(ends[ji], ev.end)
+    return ends
+
+
+def test_per_job_makespans_pins_reference_scan():
+    """The vectorized searchsorted attribution returns exactly what the
+    old per-event Python scan did (the dropped ``record_events`` parameter
+    was never read, so no behaviour rode on it)."""
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p = ifs_placement(mj.workload, cluster, seed=0)
+    r = realize_merged(mj, seed=0)
+    res = simulate(mj.workload, cluster, p, r, policy="oes", record=True)
+    got = per_job_makespans(mj, res)
+    ref = _per_job_makespans_reference(mj, res)
+    assert got == ref
+    assert all(e > 0 for e in got)
+
+
+def test_per_job_accounting_requires_recorded_events():
+    """record=False leaves no task events; the old code silently returned
+    0.0 for every job there — now it raises with routing guidance."""
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    cluster = heterogeneous_cluster(4, seed=3, gpu_range=(2, 4))
+    p = ifs_placement(mj.workload, cluster, seed=0)
+    r = realize_merged(mj, seed=0)
+    res = simulate(mj.workload, cluster, p, r, policy="oes", record=False)
+    with pytest.raises(ValueError, match="record=True"):
+        per_job_makespans(mj, res)
+
+
+def test_merged_workload_refuses_direct_realize():
+    """Satellite guard: ``mj.workload.realize()`` used to silently draw
+    with maxed pmr/exec_jitter and no epsilon padding — now it raises and
+    routes to realize_merged."""
+    j1, j2 = two_jobs()
+    mj = merge_workloads([j1, j2])
+    assert mj.workload.is_merged
+    with pytest.raises(ValueError, match="realize_merged"):
+        mj.workload.realize(seed=0)
+    # the supported path still works
+    r = realize_merged(mj, seed=0)
+    assert r.volumes.shape == (mj.workload.E, mj.workload.n_iters)
+
+
+def test_draw_and_job_seed_streams_pairwise_distinct():
+    """Satellite: the old affine derivations (seed + 1000*d draw-level,
+    seed + 7919*ji job-level) could collide across levels; the namespaced
+    splitmix derivation keeps every (draw, job) realization seed distinct."""
+    from repro.core.multijob import SEED_NS_DRAW
+
+    seeds = set()
+    n_draws, n_jobs = 64, 16
+    for d in range(n_draws):
+        base_d = derive_seed(0, SEED_NS_DRAW, d)
+        for ji in range(n_jobs):
+            seeds.add(derive_seed(base_d, SEED_NS_JOB, ji))
+    # ...and distinct from the un-nested per-job stream at the same base
+    for ji in range(n_jobs):
+        seeds.add(derive_seed(0, SEED_NS_JOB, ji))
+    assert len(seeds) == n_draws * n_jobs + n_jobs
+
+
+def test_incremental_merge_matches_from_scratch():
+    """IncrementalMerge.merged()/realize() reproduce merge_workloads /
+    realize_merged exactly (same names, tokens, seeds) — the incremental
+    path is a pure memoization, not a different merge."""
+    from repro.core.multijob import IncrementalMerge
+
+    j1, j2 = two_jobs()
+    inc = IncrementalMerge()
+    t1 = inc.add_job("alpha", j1)
+    t2 = inc.add_job("beta", j2)
+    assert (t1, t2) == (0, 1)
+    mj_inc = inc.merged()
+    mj_ref = merge_workloads([j1, j2], job_seeds=[0, 1], names=["alpha", "beta"])
+    assert mj_inc.task_offsets == mj_ref.task_offsets
+    assert mj_inc.n_iters == mj_ref.n_iters
+    assert [t.name for t in mj_inc.workload.tasks] == [
+        t.name for t in mj_ref.workload.tasks
+    ]
+    assert mj_inc.workload.edges == mj_ref.workload.edges
+    r_inc = inc.realize(mj_inc, seed=5)
+    r_ref = realize_merged(mj_ref, seed=5)
+    assert np.array_equal(r_inc.volumes, r_ref.volumes)
+    assert np.array_equal(r_inc.exec_times, r_ref.exec_times)
+    # memoized: a second realize at the same seed returns identical draws
+    r_again = inc.realize(mj_inc, seed=5)
+    assert np.array_equal(r_again.volumes, r_inc.volumes)
+
+
+def test_incremental_merge_departure_keeps_survivor_draws():
+    """When a job leaves, survivors keep their stable tokens, so their
+    realization draws are unchanged — the position-based derivation would
+    reshuffle every survivor's traffic on each departure."""
+    from repro.core.multijob import IncrementalMerge
+
+    j1, j2 = two_jobs()
+    inc = IncrementalMerge()
+    inc.add_job("alpha", j1)
+    inc.add_job("beta", j2)
+    before = inc.realize(inc.merged(), seed=3)
+    beta_block = before.volumes[j1.E:, : j2.n_iters].copy()
+    inc.remove_job("alpha")
+    mj = inc.merged()
+    assert mj.job_seeds == [1]  # beta kept its token
+    after = inc.realize(mj, seed=3)
+    assert np.array_equal(after.volumes[:, : j2.n_iters], beta_block)
+    # residual-horizon override narrows the merge for mid-flight cuts
+    mj_res = inc.merged({"beta": 3})
+    assert mj_res.n_iters == [3]
+    r = inc.realize(mj_res)
+    assert r.volumes.shape == (j2.E, 3)
+    with pytest.raises(ValueError):
+        inc.merged({"beta": 0})
+    with pytest.raises(KeyError):
+        inc.remove_job("alpha")
