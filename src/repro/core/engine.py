@@ -61,13 +61,18 @@ from __future__ import annotations
 import heapq
 import os
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .cluster import ClusterSpec, Placement
 from .workload import Realization, Workload
 from ..obs import metrics as obs_metrics
+
+if TYPE_CHECKING:  # layering: core never imports dynamics at runtime
+    from numpy.typing import ArrayLike
+
+    from ..dynamics.traces import BandwidthTrace
 
 EPS = 1e-9
 
@@ -377,7 +382,7 @@ class ShapedPolicy(RatePolicy):
     what keeps shaped clean-variant simulations comparable to unshaped ones.
     """
 
-    def __init__(self, base: RatePolicy | str, mode: str = "strict"):
+    def __init__(self, base: RatePolicy | str, mode: str = "strict") -> None:
         if isinstance(base, str):
             base = POLICIES[base]()
         if isinstance(base, ShapedPolicy):
@@ -463,7 +468,9 @@ def _policy_traits(
     return inner, needs_group, rates_cacheable, topo_cacheable
 
 
-def _check_edge_classes(edge_classes, E: int) -> Optional[np.ndarray]:
+def _check_edge_classes(
+    edge_classes: Optional["ArrayLike"], E: int
+) -> Optional[np.ndarray]:
     if edge_classes is None:
         return None
     ec = np.asarray(edge_classes, dtype=np.int64)
@@ -516,7 +523,7 @@ class MigrationFlow:
 
 
 def check_migration_flows(
-    migrations, M: int, J: int
+    migrations: Optional[Sequence["MigrationFlow"]], M: int, J: int
 ) -> List["MigrationFlow"]:
     """Validate machine/task indices; returns the flows as a list.
 
@@ -611,10 +618,10 @@ def simulate(
     policy: RatePolicy | str = "oes",
     record: bool = False,
     max_events: int = 50_000_000,
-    trace=None,
+    trace: Optional["BandwidthTrace"] = None,
     migrations: Optional[Sequence[MigrationFlow]] = None,
     shaping: Optional[str] = None,
-    edge_classes=None,
+    edge_classes: Optional["ArrayLike"] = None,
     backend: Optional[str] = None,
 ) -> ScheduleResult:
     """Run one training job to completion under ``policy``; return schedule.
@@ -1201,10 +1208,10 @@ def simulate_batch(
     policy: RatePolicy | str = "oes",
     record: bool = False,
     max_events: int = 50_000_000,
-    trace=None,
+    trace: Optional["BandwidthTrace"] = None,
     migrations: Optional[Sequence[Optional[Sequence[MigrationFlow]]]] = None,
     shaping: Optional[str] = None,
-    edge_classes=None,
+    edge_classes: Optional["ArrayLike"] = None,
     backend: Optional[str] = None,
 ) -> List[ScheduleResult]:
     """Run ``B = len(placements)`` independent jobs to completion in

@@ -48,7 +48,17 @@ policy, shaping levels, trace length, record, utilization).
 from __future__ import annotations
 
 import os
-from typing import Dict, List, NamedTuple, Optional, Sequence
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Callable,
+    Dict,
+    List,
+    NamedTuple,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
@@ -66,6 +76,11 @@ from .engine import (
     resolve_policy,
 )
 from .workload import Realization, Workload
+
+if TYPE_CHECKING:  # layering: core never imports dynamics at runtime
+    from numpy.typing import ArrayLike
+
+    from ..dynamics.traces import BandwidthTrace
 
 try:  # pragma: no cover - exercised only when jax is absent
     import jax
@@ -156,7 +171,7 @@ def _build_runner(
     src_t: np.ndarray,
     dst_t: np.ndarray,
     lag: np.ndarray,
-):
+) -> Callable[..., Any]:
     """Compile the lock-step program for one static configuration."""
     EG = E + Gmax
     top_level = min(min(levels), CLASS_TRAINING) - 1 if levels else -1
@@ -421,7 +436,7 @@ def _build_runner(
             return r
 
         # ---- settle: fixpoint of same-instant completions/arms/starts ----
-        def settle_round(s: _State):
+        def settle_round(s: _State) -> _State:
             t = s.t
             comp = s.running & (s.tend <= t[:, None] + EPS)
             done = s.done + comp.astype(jnp.int32)
@@ -667,10 +682,10 @@ def _build_runner(
         )
         s = settle(s)
 
-        def cond(s: _State):
+        def cond(s: _State) -> Any:
             return (s.running.any() | s.active.any()) & (s.k < max_events)
 
-        def body(s: _State):
+        def body(s: _State) -> _State:
             s = advance(s)
             s = settle(s)
             return s._replace(k=s.k + 1)
@@ -685,7 +700,9 @@ def _build_runner(
     return jax.jit(run)
 
 
-def _runner_for(key, build_kwargs):
+def _runner_for(
+    key: Tuple[Any, ...], build_kwargs: Dict[str, Any]
+) -> Callable[..., Any]:
     fn = _RUNNERS.get(key)
     if fn is None:
         fn = _build_runner(**build_kwargs)
@@ -701,10 +718,10 @@ def simulate_batch_jax(
     policy: "RatePolicy | str" = "oes",
     record: bool = False,
     max_events: int = 50_000_000,
-    trace=None,
+    trace: Optional["BandwidthTrace"] = None,
     migrations: Optional[Sequence[Optional[Sequence[MigrationFlow]]]] = None,
     shaping: Optional[str] = None,
-    edge_classes=None,
+    edge_classes: Optional["ArrayLike"] = None,
     utilization: bool = False,
 ) -> List[ScheduleResult]:
     """``engine.simulate_batch`` on the jitted JAX backend.

@@ -32,12 +32,24 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
-from .cluster import ClusterSpec, STORE, TaskSpec
-from .engine import MigrationFlow, mean_batch_makespans
+from .cluster import ClusterSpec, Placement, STORE, TaskSpec
+from .engine import MigrationFlow, ScheduleResult, mean_batch_makespans
+
+if TYPE_CHECKING:  # placement imports this module at runtime, not vice versa
+    from .placement import ETPResult
 from .workload import Edge, Realization, TrafficModel, Workload
 
 EPS_EXEC = 1e-6
@@ -47,10 +59,11 @@ EPS_EXEC = 1e-6
 # ---------------------------------------------------------------------------
 _MASK64 = (1 << 64) - 1
 
-#: disjoint namespaces for the two derivation levels (arbitrary distinct
+#: disjoint namespaces for the derivation levels (arbitrary distinct
 #: constants; what matters is that they differ)
 SEED_NS_JOB = 0x6A6F62  # "job": per-job realization streams
 SEED_NS_DRAW = 0x64726177  # "draw": per-draw merged realizations
+SEED_NS_CHAIN = 0x636861696E  # "chain": per-chain ETP search streams
 
 
 def _splitmix64(x: int) -> int:
@@ -261,13 +274,13 @@ def _pad_blocks(
 def merged_batch_cost(
     mj: MergedJob,
     jobs: Optional[Sequence[Workload]] = None,
-    cluster: ClusterSpec = None,
+    cluster: Optional[ClusterSpec] = None,
     *,
     n_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
     backend: Optional[str] = None,
-):
+) -> Callable[[Sequence[Placement]], List[float]]:
     """Batched merged-job objective for ETP: ``f(placements) -> makespans``.
 
     The merged workload's makespan cannot use ``Workload.realize`` (shorter
@@ -284,7 +297,7 @@ def merged_batch_cost(
         for d in range(n_draws)
     ]
 
-    def cost(placements) -> List[float]:
+    def cost(placements: Sequence[Placement]) -> List[float]:
         return mean_batch_makespans(
             mj.workload, cluster, [(p, reals) for p in placements],
             policy=policy, backend=backend,
@@ -303,8 +316,8 @@ def joint_search(
     seed: int = 0,
     policy: str = "oes",
     backend: Optional[str] = None,
-    **kw,
-):
+    **kw: Any,
+) -> Tuple[MergedJob, "ETPResult"]:
     """Joint multi-job DGTP placement search (paper conclusion): merge the
     jobs, then run lock-step multi-chain ETP where every chain's proposal is
     evaluated against shared-NIC merged realizations in one simulation
@@ -327,7 +340,9 @@ def joint_search(
 # ---------------------------------------------------------------------------
 # Per-job accounting
 # ---------------------------------------------------------------------------
-def _event_arrays(result) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def _event_arrays(
+    result: ScheduleResult,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     evs = result.task_events
     if not evs:
         raise ValueError(
@@ -347,7 +362,7 @@ def _job_of_tasks(mj: MergedJob, task: np.ndarray) -> np.ndarray:
     return np.searchsorted(bounds, task, side="right") - 1
 
 
-def per_job_makespans(mj: MergedJob, result) -> List[float]:
+def per_job_makespans(mj: MergedJob, result: ScheduleResult) -> List[float]:
     """Completion time of each job's own last true iteration.
 
     Vectorized: events are attributed to jobs by ``np.searchsorted`` over
@@ -364,7 +379,9 @@ def per_job_makespans(mj: MergedJob, result) -> List[float]:
     return [float(e) for e in ends]
 
 
-def per_job_iteration_ends(mj: MergedJob, result) -> List[np.ndarray]:
+def per_job_iteration_ends(
+    mj: MergedJob, result: ScheduleResult
+) -> List[np.ndarray]:
     """Per job: array of length ``mj.n_iters[ji]`` giving the completion
     time of each TRUE iteration (max task-event end across the job's tasks
     at that iteration; 0.0 for iterations with no recorded event).  The

@@ -20,12 +20,18 @@ Slot semantics follow the pseudocode precisely:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Set, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from .cluster import ClusterSpec, Placement
 from .workload import Realization, Workload
+
+if TYPE_CHECKING:  # layering: core never imports dynamics at runtime
+    from numpy.typing import ArrayLike
+
+    from .engine import MigrationFlow
+    from ..dynamics.traces import BandwidthTrace
 
 EPS = 1e-9
 
@@ -43,10 +49,10 @@ def simulate_slotted(
     realization: Realization,
     slot: float = 1.0,
     max_slots: int = 2_000_000,
-    trace=None,
-    migrations=None,
-    shaping=None,
-    edge_classes=None,
+    trace: Optional["BandwidthTrace"] = None,
+    migrations: Optional[Sequence["MigrationFlow"]] = None,
+    shaping: Optional[str] = None,
+    edge_classes: Optional["ArrayLike"] = None,
 ) -> SlottedResult:
     """``trace`` (repro.dynamics.traces.BandwidthTrace) makes the oracle
     time-varying: slot ``t`` transmits with the bandwidth of the segment

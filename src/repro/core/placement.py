@@ -19,7 +19,7 @@ import itertools
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -34,6 +34,7 @@ from .cluster import (
     violation_fraction,
 )
 from .engine import expected_makespan, mean_batch_makespans, monte_carlo_draws
+from .multijob import SEED_NS_CHAIN, derive_seed
 from .workload import Realization, Workload
 from ..obs import metrics as obs_metrics
 
@@ -616,7 +617,7 @@ def etp_multichain(
     use_batch: bool = True,
     batch_cost_fn: Optional[Callable[[Sequence[Placement]], List[float]]] = None,
     time_budget_s: Optional[float] = None,
-    **kw,
+    **kw: Any,
 ) -> ETPResult:
     """Beyond-paper: independent MCMC chains from diverse starts (random IFS
     machine orders + the DistDGL colocation heuristic), best-of.  Chains are
@@ -655,13 +656,14 @@ def etp_multichain(
         best: Optional[ETPResult] = None
         stats: List[dict] = []
         for c in range(n_chains):
+            chain_seed = derive_seed(seed, SEED_NS_CHAIN, c)
             r = etp_search(
-                workload, cluster, budget=per, seed=seed + 7919 * c,
+                workload, cluster, budget=per, seed=chain_seed,
                 init=chain_init(c), time_budget_s=time_budget_s, **seq_kw,
             )
             stats.append(
                 {
-                    "seed": seed + 7919 * c,
+                    "seed": chain_seed,
                     "evaluations": r.evaluations,
                     "cache_hits": r.cache_hits,
                     "proposals": r.proposals,
@@ -684,7 +686,8 @@ def etp_multichain(
         params["cost_fn"] = lambda p: batch_cost_fn([p])[0]
     chains = [
         _Chain(
-            workload, cluster, budget=per, seed=seed + 7919 * c,
+            workload, cluster, budget=per,
+            seed=derive_seed(seed, SEED_NS_CHAIN, c),
             init=chain_init(c), **params,
         )
         for c in range(n_chains)
@@ -790,7 +793,7 @@ def replan_after_failure(
     *,
     budget: int = 300,
     seed: int = 0,
-    **kw,
+    **kw: Any,
 ) -> ETPResult:
     """Fault-tolerance path: machine fails -> ``remap_after_leave`` -> ETP
     warm-started from the remapped incumbent on the reduced cluster."""

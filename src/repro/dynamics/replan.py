@@ -38,12 +38,17 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.cluster import ClusterSpec, Machine, Placement
-from ..core.engine import MigrationFlow, monte_carlo_draws, simulate_batch
+from ..core.engine import (
+    MigrationFlow,
+    ScheduleResult,
+    monte_carlo_draws,
+    simulate_batch,
+)
 from ..core.placement import ETPResult, etp_search, remap_after_leave
 from ..core.workload import Workload
 from ..obs import metrics as obs_metrics
@@ -114,7 +119,8 @@ def build_migration_flows(
 
 
 def annotate_deadlines(
-    flows: Sequence[MigrationFlow], clean_results
+    flows: Sequence[MigrationFlow],
+    clean_results: Sequence[ScheduleResult],
 ) -> List[MigrationFlow]:
     """Fill each gated flow's ``deadline`` with the gated task's slack: the
     earliest start of its FIRST iteration across the recorded clean-variant
@@ -306,7 +312,9 @@ class Replanner:
         if self.hit_model is not None and served_iters > 0:
             self.hit_model = self.hit_model.warm_started(served_iters)
 
-    def _cost_fn(self, cluster: ClusterSpec):
+    def _cost_fn(
+        self, cluster: ClusterSpec
+    ) -> Tuple[Optional[Callable[..., Any]], Optional[Callable[..., Any]]]:
         """(cost_fn, extra_violation) for ETP on ``cluster``: cache-aware
         (warm model + per-machine reservations) when a cache tier exists,
         engine defaults otherwise."""

@@ -128,8 +128,8 @@ def run_scenario(
     seed: int = 0,
     init_placement: Optional[Placement] = None,
     replan_config: Optional[ReplanConfig] = None,
-    hit_model=None,
-    cache_config=None,
+    hit_model: Optional[object] = None,  # repro.cache.HitModel
+    cache_config: Optional[object] = None,  # repro.cache.CacheConfig
     oracle_budget: int = 600,
     oracle_chains: int = 4,
     policy: str = "oes",

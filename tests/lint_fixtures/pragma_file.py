@@ -1,0 +1,10 @@
+"""Pragma fixture: a file-level disable waives the rule everywhere."""
+# repro-lint: disable-file=RL001
+
+
+def first(seed, d):
+    return seed + 1000 * d
+
+
+def second(seed, c):
+    return seed + 7919 * c

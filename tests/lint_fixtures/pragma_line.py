@@ -1,0 +1,9 @@
+"""Pragma fixture: line-level disables waive exactly their line."""
+
+
+def waived(seed, d):
+    return seed + 1000 * d  # repro-lint: disable=RL001
+
+
+def still_flagged(seed, d):
+    return seed + 1000 * d

@@ -1,0 +1,16 @@
+"""RL001 positive fixture: affine seed derivations the rule must flag."""
+
+
+def per_draw_streams(workload, seed, n_draws):
+    outs = []
+    for d in range(n_draws):
+        outs.append(workload.realize(seed=seed + 1000 * d))
+    return outs
+
+
+def chain_seed(base_seed, c):
+    return base_seed + 7919 * c
+
+
+def subtract_form(seed, j):
+    return seed - j * 31

@@ -1,0 +1,34 @@
+"""RL001 negative fixture: sanctioned seed handling the rule must not flag."""
+
+SEED_NS_DRAW = 0x64726177
+
+
+def _splitmix64(x):
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+def derive_seed(base, namespace, index):
+    # the sanctioned mixer may do whatever arithmetic it likes
+    mixed = _splitmix64(base + namespace * 0x10001)
+    return _splitmix64(mixed + index * 3) & 0x7FFFFFFF
+
+
+def per_draw_streams(workload, seed, n_draws):
+    outs = []
+    for d in range(n_draws):
+        outs.append(workload.realize(seed=derive_seed(seed, SEED_NS_DRAW, d)))
+    return outs
+
+
+def plain_offset(seed):
+    # additive-constant offsets without a multiplied index are not the
+    # collision class (no cross-level stride to line up)
+    return seed + 1
+
+
+def unrelated_arithmetic(x, k):
+    return x + 3 * k

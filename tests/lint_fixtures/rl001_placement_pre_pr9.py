@@ -1,0 +1,35 @@
+"""Regression fixture: the live RL001 violation this PR fixed in
+``src/repro/core/placement.py`` (``etp_multichain``'s affine per-chain
+seeds).  A faithful excerpt of the pre-fix wiring — the checker must
+keep flagging all three sites so the bug class cannot quietly return.
+"""
+
+
+def etp_multichain_pre_fix(
+    workload, cluster, etp_search, _Chain, chain_init,
+    budget, n_chains, seed, per, time_budget_s, seq_kw, params,
+):
+    best = None
+    stats = []
+    for c in range(n_chains):
+        r = etp_search(
+            workload, cluster, budget=per, seed=seed + 7919 * c,
+            init=chain_init(c), time_budget_s=time_budget_s, **seq_kw,
+        )
+        stats.append(
+            {
+                "seed": seed + 7919 * c,
+                "makespan": r.expected_makespan,
+            }
+        )
+        if best is None or r.expected_makespan < best.expected_makespan:
+            best = r
+
+    chains = [
+        _Chain(
+            workload, cluster, budget=per, seed=seed + 7919 * c,
+            init=chain_init(c), **params,
+        )
+        for c in range(n_chains)
+    ]
+    return best, stats, chains

@@ -1,0 +1,21 @@
+"""RL002 positive fixture: direct .realize() on merged-workload values."""
+from repro.core.multijob import merge_workloads
+
+
+def via_tracked_alias(jobs):
+    mj = merge_workloads(jobs)
+    wl = mj.workload
+    return wl.realize(seed=0)
+
+
+def via_attribute(jobs):
+    mj = merge_workloads(jobs)
+    return mj.workload.realize(seed=1)
+
+
+def inline_producer(jobs):
+    return merge_workloads(jobs).workload.realize(seed=2)
+
+
+def via_naming_convention(merged_wl):
+    return merged_wl.realize(seed=3)

@@ -1,0 +1,16 @@
+"""RL002 negative fixture: sanctioned realization paths."""
+from repro.core.multijob import merge_workloads, realize_merged
+
+
+def through_realize_merged(jobs):
+    mj = merge_workloads(jobs)
+    return realize_merged(mj, seed=0)
+
+
+def incremental(inc):
+    return inc.realize(seed=1)
+
+
+def single_job(workload):
+    # a plain (un-merged) workload realizes directly, as ever
+    return workload.realize(seed=2)

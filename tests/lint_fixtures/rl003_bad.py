@@ -1,0 +1,28 @@
+"""RL003 positive fixture: unrecorded results fed into per-job accounting."""
+from repro.core.engine import simulate, simulate_batch
+from repro.core.multijob import per_job_iteration_ends, per_job_makespans
+
+
+def default_record(mj, wl, cluster, p, r):
+    res = simulate(wl, cluster, p, r, policy="oes")  # record defaults False
+    return per_job_makespans(mj, res)
+
+
+def explicit_false(mj, wl, cluster, p, r):
+    res = simulate(wl, cluster, p, r, record=False)
+    return per_job_iteration_ends(mj, res)
+
+
+def batch_indexed(mj, wl, cluster, p, rs):
+    results = simulate_batch(wl, cluster, p, rs, record=False)
+    first = results[0]
+    return per_job_makespans(mj, first)
+
+
+def inline_producer(mj, wl, cluster, p, r):
+    return per_job_makespans(mj, simulate(wl, cluster, p, r, record=False))
+
+
+def task_events_read(wl, cluster, p, r):
+    res = simulate(wl, cluster, p, r)
+    return len(res.task_events)

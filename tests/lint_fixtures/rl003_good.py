@@ -1,0 +1,25 @@
+"""RL003 negative fixture: recorded results and rebound names."""
+from repro.core.engine import simulate
+from repro.core.multijob import per_job_makespans
+
+
+def recorded(mj, wl, cluster, p, r):
+    res = simulate(wl, cluster, p, r, record=True)
+    return per_job_makespans(mj, res)
+
+
+def rebound_before_sink(mj, wl, cluster, p, r):
+    res = simulate(wl, cluster, p, r, record=False)
+    res = simulate(wl, cluster, p, r, record=True)
+    return per_job_makespans(mj, res)
+
+
+def kwargs_passthrough(mj, wl, cluster, p, r, **kw):
+    # **kw may carry record=True — benefit of the doubt
+    res = simulate(wl, cluster, p, r, **kw)
+    return per_job_makespans(mj, res)
+
+
+def unrecorded_but_unaccounted(wl, cluster, p, r):
+    res = simulate(wl, cluster, p, r, record=False)
+    return res.makespan  # makespan is valid without task events

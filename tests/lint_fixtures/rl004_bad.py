@@ -1,0 +1,18 @@
+"""RL004 positive fixture (linted under a spoofed engine.py rel_path):
+metrics calls inside hot-path loop bodies."""
+from repro.obs.metrics import REGISTRY
+from repro.obs import metrics as obs_metrics
+
+
+def event_loop(events):
+    total = 0.0
+    for ev in events:
+        REGISTRY.counter("engine.events").inc()  # per-event increment
+        total += ev.dt
+    return total
+
+
+def while_loop(queue):
+    while queue:
+        ev = queue.pop()
+        obs_metrics.REGISTRY.histogram("engine.dt").observe(ev.dt)

@@ -1,0 +1,14 @@
+"""RL004 negative fixture (spoofed engine.py rel_path): metrics hoisted
+out of the loop, incremented once with pre-aggregated values."""
+from repro.obs.metrics import REGISTRY
+
+
+def event_loop(events):
+    total = 0.0
+    n = 0
+    for ev in events:
+        total += ev.dt
+        n += 1
+    REGISTRY.counter("engine.events").inc(n)
+    REGISTRY.histogram("engine.total_dt").observe(total)
+    return total

@@ -1,0 +1,17 @@
+"""RL005 positive fixture: host-side impurities inside jit-traced code."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _step(rates, volumes, threshold):
+    rem = volumes - rates
+    worst = float(jnp.max(rem))  # host sync per invocation
+    scalar = rem[0].item()  # ditto
+    folded = np.maximum(rem, 0.0)  # constant-folds the tracer
+    if threshold > 0:  # Python branch on a traced param
+        folded = folded * 2.0
+    return folded + worst + scalar
+
+
+run = jax.jit(_step)

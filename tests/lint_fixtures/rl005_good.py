@@ -1,0 +1,20 @@
+"""RL005 negative fixture: pure traced code; closure-config branching."""
+import jax
+import jax.numpy as jnp
+
+
+def build_runner(collect):
+    def run(rates, volumes):
+        rem = jnp.maximum(volumes - rates, 0.0)
+        worst = jnp.max(rem)
+        out = jnp.where(worst > 0.0, rem * 2.0, rem)
+        if collect:  # closure config: static under trace, legal
+            return out, worst
+        return out
+
+    return jax.jit(run)
+
+
+def host_side(rates):
+    # not jitted: host conversions are fine here
+    return float(rates.sum())

@@ -1,0 +1,12 @@
+"""RL006 positive fixture (spoofed src/ rel_path): engine calls that
+drop the backend knob."""
+from repro.core.engine import simulate, simulate_batch
+
+
+def library_entry(wl, cluster, p, r, backend=None):
+    # caller accepted backend= but forgot to forward it
+    return simulate(wl, cluster, p, r, policy="oes")
+
+
+def batch_entry(wl, cluster, p, rs):
+    return simulate_batch(wl, cluster, p, rs)

@@ -1,0 +1,16 @@
+"""RL006 negative fixture (spoofed src/ rel_path): backend threaded,
+pinned, or carried by **kw."""
+from repro.core.engine import simulate, simulate_batch
+
+
+def forwarded(wl, cluster, p, r, backend=None):
+    return simulate(wl, cluster, p, r, backend=backend)
+
+
+def pinned_audit(wl, cluster, p, r):
+    # committed/audit sims deliberately pin the reference engine
+    return simulate(wl, cluster, p, r, backend="numpy")
+
+
+def kwargs_carrier(wl, cluster, p, rs, **kw):
+    return simulate_batch(wl, cluster, p, rs, **kw)

@@ -1,0 +1,13 @@
+"""RL007 positive fixture: int-literal bandwidth/capacity arrays."""
+import numpy as np
+import jax.numpy as jnp
+
+
+def build_cluster():
+    bw = np.array([10, 25, 100])  # truncates waterfill arithmetic
+    nic_caps = jnp.asarray([40, 40])
+    return bw, nic_caps
+
+
+def call_site(make_cluster):
+    return make_cluster(bandwidths=np.array([10, 10, 10]))

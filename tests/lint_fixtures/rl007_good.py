@@ -1,0 +1,14 @@
+"""RL007 negative fixture: float literals, explicit dtypes, non-bw names."""
+import numpy as np
+
+
+def build_cluster():
+    bw = np.array([10.0, 25.0, 100.0])  # float literals
+    caps = np.array([40, 40], dtype=np.float64)  # explicit float dtype
+    group_sizes = np.array([2, 4])  # not a bandwidth-like name
+    return bw, caps, group_sizes
+
+
+def deliberate_int(make_cluster):
+    # explicit int dtype is a stated choice (coercion regression tests)
+    return make_cluster(bw=np.array([10, 10], dtype=np.int64))

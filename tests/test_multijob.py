@@ -297,7 +297,7 @@ def test_per_job_accounting_requires_recorded_events():
     r = realize_merged(mj, seed=0)
     res = simulate(mj.workload, cluster, p, r, policy="oes", record=False)
     with pytest.raises(ValueError, match="record=True"):
-        per_job_makespans(mj, res)
+        per_job_makespans(mj, res)  # repro-lint: disable=RL003
 
 
 def test_merged_workload_refuses_direct_realize():
@@ -308,7 +308,7 @@ def test_merged_workload_refuses_direct_realize():
     mj = merge_workloads([j1, j2])
     assert mj.workload.is_merged
     with pytest.raises(ValueError, match="realize_merged"):
-        mj.workload.realize(seed=0)
+        mj.workload.realize(seed=0)  # repro-lint: disable=RL002
     # the supported path still works
     r = realize_merged(mj, seed=0)
     assert r.volumes.shape == (mj.workload.E, mj.workload.n_iters)

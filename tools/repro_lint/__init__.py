@@ -1,0 +1,49 @@
+"""repro-lint: an AST contract checker for this repository's invariants.
+
+Every accounting bug PRs 5-8 fixed — collidable affine seed streams,
+per-job accounting silently returning 0.0 on unrecorded results,
+int-bandwidth truncation, direct ``.realize()`` on merged workloads —
+was a *contract* violation that a repo-aware static pass could have
+flagged at review time.  This package makes those contracts
+machine-checked instead of tribal knowledge.
+
+Usage::
+
+    python -m tools.repro_lint src tests benchmarks
+    python -m tools.repro_lint --list-rules
+    python -m tools.repro_lint --format json src
+    python -m tools.repro_lint --update-baseline src tests benchmarks
+
+Findings can be suppressed three ways (see README "Static analysis &
+typing"):
+
+* inline pragma on the flagged line: ``# repro-lint: disable=RL001``
+  (comma list or ``all``);
+* file-level pragma anywhere in the file:
+  ``# repro-lint: disable-file=RL004``;
+* the committed baseline (``tools/repro_lint/baseline.json``) for
+  grandfathered findings — matched on (rule, path, snippet) so entries
+  survive unrelated line-number drift; regenerate with
+  ``--update-baseline`` (deterministic: sorted, path-relative).
+
+The rule set lives in :mod:`tools.repro_lint.rules`; each rule is a
+small ``Rule`` subclass registered in ``ALL_RULES`` — adding a rule is
+adding a class and a fixture pair under ``tests/lint_fixtures/``.
+"""
+from .core import Finding, LintModule, collect_py_files, lint_paths
+from .rules import ALL_RULES, get_rules
+from .baseline import load_baseline, match_baseline, write_baseline
+from .cli import main
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "LintModule",
+    "collect_py_files",
+    "get_rules",
+    "lint_paths",
+    "load_baseline",
+    "main",
+    "match_baseline",
+    "write_baseline",
+]

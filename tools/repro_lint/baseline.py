@@ -1,0 +1,96 @@
+"""Baseline handling: grandfathered findings that pass the gate.
+
+The baseline is a committed JSON file of finding identities keyed on
+``(rule, path, snippet)`` — not line numbers, so entries survive edits
+elsewhere in the file.  Matching is a multiset subtraction: N identical
+baseline entries absorb up to N identical findings.  ``--update-baseline``
+regenerates the file deterministically (sorted, path-relative), and the
+runner also reports baseline entries that no longer match anything
+(stale entries should be pruned, not hoarded).
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+from .core import Finding
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+Key = Tuple[str, str, str]
+
+
+@dataclass
+class BaselineMatch:
+    new: List[Finding]  # findings not absorbed by the baseline
+    suppressed: List[Finding]  # findings absorbed by the baseline
+    stale: List[Dict[str, str]]  # baseline entries matching nothing
+
+
+def load_baseline(path: Path) -> List[Dict[str, str]]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(data, dict) or "findings" not in data:
+        raise ValueError(f"malformed baseline file: {path}")
+    return list(data["findings"])
+
+
+def _entry_key(entry: Dict[str, str]) -> Key:
+    return (
+        str(entry.get("rule", "")),
+        str(entry.get("path", "")),
+        str(entry.get("snippet", "")),
+    )
+
+
+def match_baseline(
+    findings: Sequence[Finding], entries: Sequence[Dict[str, str]]
+) -> BaselineMatch:
+    budget: Counter = Counter(_entry_key(e) for e in entries)
+    new: List[Finding] = []
+    suppressed: List[Finding] = []
+    for fd in findings:
+        if budget[fd.key()] > 0:
+            budget[fd.key()] -= 1
+            suppressed.append(fd)
+        else:
+            new.append(fd)
+    stale = []
+    leftover = Counter(budget)
+    for e in entries:
+        k = _entry_key(e)
+        if leftover[k] > 0:
+            leftover[k] -= 1
+            stale.append(e)
+    return BaselineMatch(new=new, suppressed=suppressed, stale=stale)
+
+
+def write_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    """Deterministic regeneration: one entry per finding, sorted by
+    (path, rule, snippet, occurrence)."""
+    entries = sorted(
+        (
+            {"rule": f.rule, "path": f.path, "snippet": f.snippet}
+            for f in findings
+        ),
+        key=lambda e: (e["path"], e["rule"], e["snippet"]),
+    )
+    payload = {
+        "version": BASELINE_VERSION,
+        "comment": (
+            "Grandfathered repro-lint findings. Keyed on (rule, path, "
+            "snippet) so entries survive line drift. Regenerate with "
+            "`python -m tools.repro_lint --update-baseline <paths>`; "
+            "prune entries when the underlying code is fixed."
+        ),
+        "findings": entries,
+    }
+    path.write_text(
+        json.dumps(payload, indent=2, sort_keys=False) + "\n",
+        encoding="utf-8",
+    )

@@ -1,0 +1,146 @@
+"""CLI: ``python -m tools.repro_lint [paths...]``.
+
+Exit codes: 0 = clean (or everything baselined/suppressed), 1 = new
+findings (or unparsable files), 2 = usage error.  ``--format json``
+emits a machine-readable report for CI annotation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .baseline import (
+    DEFAULT_BASELINE,
+    load_baseline,
+    match_baseline,
+    write_baseline,
+)
+from .core import lint_paths
+from .rules import ALL_RULES, get_rules
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def _repo_root() -> Path:
+    # tools/repro_lint/cli.py -> repo root is two parents above tools/
+    return Path(__file__).resolve().parent.parent.parent
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description=(
+            "AST contract checker for this repo's scheduling/accounting "
+            "invariants (rules RL001-RL007)."
+        ),
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        default=list(DEFAULT_PATHS),
+        help=f"files/directories to lint (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    ap.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="output format (default text)",
+    )
+    ap.add_argument(
+        "--select",
+        default=None,
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help=f"baseline file (default {DEFAULT_BASELINE})",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline: report every finding as new",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline from the current findings and exit 0",
+    )
+    ap.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print the rule catalogue and exit",
+    )
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=None,
+        help="repo root for relative paths (default: auto-detected)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.rule_id}  {r.title}")
+            print(f"       {r.rationale}")
+        return 0
+
+    try:
+        rules = get_rules(args.select.split(",") if args.select else None)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    root = args.root or _repo_root()
+    findings, errors = lint_paths(args.paths, root, rules)
+
+    baseline_path = args.baseline or DEFAULT_BASELINE
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(
+            f"baseline written: {len(findings)} finding(s) -> {baseline_path}"
+        )
+        return 0
+
+    entries = [] if args.no_baseline else load_baseline(baseline_path)
+    match = match_baseline(findings, entries)
+
+    if args.format == "json":
+        print(
+            json.dumps(
+                {
+                    "new": [f.to_dict() for f in match.new],
+                    "baselined": [f.to_dict() for f in match.suppressed],
+                    "stale_baseline": match.stale,
+                    "errors": [
+                        {"path": e.path, "message": e.message}
+                        for e in errors
+                    ],
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in match.new:
+            print(f"{f.path}:{f.line}:{f.col}: {f.rule} {f.message}")
+            if f.snippet:
+                print(f"    {f.snippet}")
+        for e in errors:
+            print(f"{e.path}: PARSE ERROR {e.message}")
+        if match.stale:
+            print(
+                f"note: {len(match.stale)} stale baseline entr"
+                f"{'y' if len(match.stale) == 1 else 'ies'} match nothing "
+                "-- prune with --update-baseline"
+            )
+        n_new, n_base = len(match.new), len(match.suppressed)
+        status = "FAILED" if (match.new or errors) else "OK"
+        print(
+            f"repro-lint: {status} — {n_new} new finding(s), "
+            f"{n_base} baselined, {len(errors)} parse error(s)"
+        )
+    return 1 if (match.new or errors) else 0

@@ -1,0 +1,232 @@
+"""Core machinery: modules, findings, pragmas, file walking.
+
+Nothing here knows about individual rules — a rule receives a
+:class:`LintModule` (parsed source + pragma map + repo-relative path)
+and returns :class:`Finding` objects.  The CLI layers baseline matching
+on top (``tools.repro_lint.baseline``).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: directories never walked into (fixtures are deliberately-bad code)
+EXCLUDED_DIR_NAMES = {"__pycache__", "lint_fixtures", ".git"}
+
+_PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*([A-Za-z0-9_,\s]+)"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site.
+
+    The baseline identity is ``(rule, path, snippet)`` — deliberately NOT
+    the line number, so a grandfathered finding survives unrelated edits
+    above it in the file.  Multiple identical snippets in one file are
+    matched as a multiset (N baseline entries absorb N findings).
+    """
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    snippet: str
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.snippet)
+
+    def sort_key(self) -> Tuple[str, int, int, str]:
+        return (self.path, self.line, self.col, self.rule)
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "snippet": self.snippet,
+        }
+
+
+class LintModule:
+    """A parsed python module plus everything rules need to judge it.
+
+    ``rel_path`` is the repo-relative posix path rules use for scoping
+    (e.g. RL004 only applies to the engine hot-path files); tests spoof
+    it to run path-scoped rules against fixture files.
+    """
+
+    def __init__(self, rel_path: str, source: str):
+        self.rel_path = rel_path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel_path)
+        self._line_disables: Dict[int, Set[str]] = {}
+        self._file_disables: Set[str] = set()
+        self._parse_pragmas()
+
+    @classmethod
+    def from_file(cls, path: Path, root: Path) -> "LintModule":
+        try:
+            rel = path.resolve().relative_to(root.resolve())
+        except ValueError:
+            rel = path
+        return cls(rel.as_posix(), path.read_text(encoding="utf-8"))
+
+    # -- pragmas ----------------------------------------------------------
+    def _parse_pragmas(self) -> None:
+        for i, text in enumerate(self.lines, start=1):
+            m = _PRAGMA_RE.search(text)
+            if not m:
+                continue
+            kind, spec = m.group(1), m.group(2)
+            rules = {s.strip().upper() for s in spec.split(",") if s.strip()}
+            if kind == "disable":
+                self._line_disables.setdefault(i, set()).update(rules)
+            else:  # disable-file
+                self._file_disables.update(rules)
+
+    def disabled(self, rule_id: str, line: int) -> bool:
+        if "ALL" in self._file_disables or rule_id in self._file_disables:
+            return True
+        at = self._line_disables.get(line, ())
+        return "ALL" in at or rule_id in at
+
+    # -- helpers for rules ------------------------------------------------
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(
+        self, rule_id: str, node: ast.AST, message: str
+    ) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            rule=rule_id,
+            path=self.rel_path,
+            line=line,
+            col=col,
+            message=message,
+            snippet=self.line_text(line),
+        )
+
+
+# ---------------------------------------------------------------------------
+# small AST utilities shared by rules
+# ---------------------------------------------------------------------------
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> ``"c"``; ``name`` -> ``"name"``; else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` / ``a.b[0].c`` -> ``"a"``; ``name`` -> ``"name"``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = (
+            node.func if isinstance(node, ast.Call) else node.value
+        )
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def contains_mult(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult)
+        for n in ast.walk(node)
+    )
+
+
+def referenced_names(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def enclosing_functions(tree: ast.AST) -> Dict[ast.AST, Optional[ast.AST]]:
+    """Map every node to its innermost enclosing FunctionDef (or None)."""
+    owner: Dict[ast.AST, Optional[ast.AST]] = {}
+
+    def visit(node: ast.AST, fn: Optional[ast.AST]) -> None:
+        owner[node] = fn
+        nxt = node if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef)
+        ) else fn
+        for child in ast.iter_child_nodes(node):
+            visit(child, nxt)
+
+    visit(tree, None)
+    return owner
+
+
+# ---------------------------------------------------------------------------
+# walking + running
+# ---------------------------------------------------------------------------
+def collect_py_files(paths: Sequence[str], root: Path) -> List[Path]:
+    """Expand files/directories into a sorted list of ``.py`` files,
+    skipping ``EXCLUDED_DIR_NAMES`` (fixtures are deliberately bad)."""
+    out: Set[Path] = set()
+    for p in paths:
+        path = (root / p) if not Path(p).is_absolute() else Path(p)
+        if path.is_file() and path.suffix == ".py":
+            out.add(path)
+        elif path.is_dir():
+            for f in path.rglob("*.py"):
+                if not any(part in EXCLUDED_DIR_NAMES for part in f.parts):
+                    out.add(f)
+    return sorted(out)
+
+
+@dataclass
+class LintError:
+    """A file that could not be parsed (reported, never silently skipped)."""
+
+    path: str
+    message: str
+
+
+def lint_paths(
+    paths: Sequence[str],
+    root: Path,
+    rules: Sequence[object],
+) -> Tuple[List[Finding], List[LintError]]:
+    """Run ``rules`` over every python file under ``paths``.
+
+    Returns (findings, errors): pragma-suppressed findings are already
+    filtered out; baseline subtraction is the caller's job.
+    """
+    findings: List[Finding] = []
+    errors: List[LintError] = []
+    for f in collect_py_files(paths, root):
+        try:
+            module = LintModule.from_file(f, root)
+        except (SyntaxError, UnicodeDecodeError) as exc:
+            errors.append(LintError(path=str(f), message=str(exc)))
+            continue
+        findings.extend(run_rules(module, rules))
+    findings.sort(key=Finding.sort_key)
+    return findings, errors
+
+
+def run_rules(
+    module: LintModule, rules: Sequence[object]
+) -> List[Finding]:
+    out: List[Finding] = []
+    for rule in rules:
+        if not rule.applies(module):
+            continue
+        for fd in rule.check(module):
+            if not module.disabled(fd.rule, fd.line):
+                out.append(fd)
+    return out
