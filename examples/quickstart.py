@@ -21,6 +21,7 @@ from repro.core import (
     plan, plan_baseline, simulate, testbed_cluster,
 )
 from repro.core.profiles import OGBN_PRODUCTS, build_workload_from_profile
+from repro.core.units import BITS_PER_BYTE
 
 
 def main():
@@ -39,7 +40,7 @@ def main():
     names = wl.task_names()
     for m in range(cluster.M):
         tasks = [names[j] for j in range(wl.J) if p.placement.y[j] == m]
-        bw = cluster.machines[m].bw_in * 8
+        bw = cluster.machines[m].bw_in * BITS_PER_BYTE
         print(f"  {cluster.machines[m].name} ({bw:.0f} Gbps): {', '.join(tasks)}")
     print(f"  makespan          = {p.schedule.makespan:.2f} s")
     print(f"  Delta (eq. 20)    = {p.delta}")

@@ -26,6 +26,7 @@ from typing import Dict, Optional, Sequence, Union
 import numpy as np
 
 from ..core.cluster import SAMPLER, ClusterSpec, Placement
+from ..core.units import GB
 from ..core.workload import Realization, Workload
 from .hitmodel import HitModel
 
@@ -44,7 +45,7 @@ class CacheConfig:
     consumes."""
 
     policy: str = "lru"
-    cache_gb: Union[float, Sequence[float]] = 1.0
+    cache_gb: Union[GB, Sequence[float]] = 1.0
     reserve_mem: bool = True
 
     def cache_gb_per_machine(self, n_machines: int) -> np.ndarray:

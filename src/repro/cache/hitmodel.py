@@ -30,6 +30,9 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from ..core.profiles import DatasetProfile
+from ..core.units import BYTES_PER_GB, GB, Ratio
+
 from ..data.graph import synthetic_graph
 from .policies import replay
 from .trace import AccessTrace, collect_trace
@@ -99,7 +102,7 @@ class HitModel:
             _table=self._table,
         )
 
-    def mean_hit_rate(self, k: int = 1) -> float:
+    def mean_hit_rate(self, k: int = 1) -> Ratio:
         return float(self.hit_rates(k, self.trace.n_iters).mean())
 
 
@@ -111,7 +114,7 @@ def touch_probabilities(trace: AccessTrace, k: int = 1) -> np.ndarray:
 
 def static_hit_rate_estimate(
     trace: AccessTrace, capacity_nodes: int, k: int = 1
-) -> float:
+) -> Ratio:
     """Closed-form expected hit fraction of a prefilled top-C hotness cache.
 
     Each iteration a sampler touches node v with probability p_v (at most
@@ -136,14 +139,14 @@ def build_hit_model(
 
 
 def capacity_nodes_for_gb(
-    cache_gb: float, *, bytes_per_node: int, real_nodes: float, proxy_nodes: int
+    cache_gb: GB, *, bytes_per_node: int, real_nodes: float, proxy_nodes: int
 ) -> int:
     """GB budget on the real graph -> node capacity in proxy-graph units.
 
     The proxy preserves the *fraction* of the graph a budget covers: C real
     feature rows out of ``real_nodes`` become the same fraction of
     ``proxy_nodes``."""
-    real_capacity = cache_gb * 2**30 / max(bytes_per_node, 1)
+    real_capacity = cache_gb * BYTES_PER_GB / max(bytes_per_node, 1)
     frac = min(1.0, real_capacity / max(real_nodes, 1.0))
     return int(round(frac * proxy_nodes))
 
@@ -154,7 +157,7 @@ def cache_gb_for_capacity(
     bytes_per_node: int,
     real_nodes: Optional[float] = None,
     proxy_nodes: Optional[int] = None,
-) -> float:
+) -> GB:
     """Inverse of ``capacity_nodes_for_gb``: the memory a hit model's node
     capacity actually costs, in GB on the real graph.
 
@@ -166,15 +169,15 @@ def cache_gb_for_capacity(
     if (real_nodes is None) != (proxy_nodes is None):
         raise ValueError("give both real_nodes and proxy_nodes, or neither")
     n = float(capacity_nodes)
-    if real_nodes is not None:
+    if real_nodes is not None and proxy_nodes is not None:
         n = n / max(proxy_nodes, 1) * real_nodes
-    return n * bytes_per_node / 2**30
+    return n * bytes_per_node / BYTES_PER_GB
 
 
 def hit_model_for_profile(
-    profile,
+    profile: DatasetProfile,
     *,
-    cache_gb: float,
+    cache_gb: GB,
     policy: str = "lru",
     n_samplers: int,
     batch_size: int = 2000,
@@ -213,7 +216,7 @@ def hit_model_for_profile(
 
 
 def collect_profile_trace(
-    profile,
+    profile: DatasetProfile,
     *,
     n_samplers: int,
     batch_size: int = 2000,

@@ -19,7 +19,7 @@ cache model through two hooks:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -99,7 +99,7 @@ def cache_cost_fns(
     sim_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
-    machine_models=None,
+    machine_models: Optional[Dict[int, HitModel]] = None,
     backend: Optional[str] = None,
 ) -> Tuple[
     Callable[[Placement], float],
@@ -136,6 +136,22 @@ def cache_cost_fns(
     return scalar_cost, batch_cost, draws
 
 
+def _coherent_config(config: Optional[CacheConfig], model: HitModel) -> CacheConfig:
+    """Default the budget config off the hit model; reject an explicit
+    config whose eviction policy disagrees with the model's — the search
+    would reserve memory for one policy while simulating hit rates under
+    another."""
+    if config is None:
+        return CacheConfig(policy=model.policy)
+    if config.policy != model.policy:
+        raise ValueError(
+            f"CacheConfig.policy={config.policy!r} disagrees with the hit "
+            f"model's policy={model.policy!r}; build the config with the "
+            "model's policy (or omit it to inherit)"
+        )
+    return config
+
+
 def cache_aware_etp(
     workload: Workload,
     cluster: ClusterSpec,
@@ -148,9 +164,9 @@ def cache_aware_etp(
     sim_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
-    machine_models=None,
+    machine_models: Optional[Dict[int, HitModel]] = None,
     backend: Optional[str] = None,
-    **kw,
+    **kw: Any,
 ) -> ETPResult:
     """Multi-chain ETP whose objective and capacity model are cache-aware.
 
@@ -164,7 +180,7 @@ def cache_aware_etp(
     ``hitmodel.cache_gb_for_capacity`` / ``capacity_nodes_for_gb``.  A
     deliberately mismatched pair is allowed (what-if sweeps) but means the
     search pays for a different cache than the one it simulates."""
-    config = config or CacheConfig(policy=model.policy)
+    config = _coherent_config(config, model)
     _, batch_cost, _ = cache_cost_fns(
         workload, cluster, model,
         sim_iters=sim_iters, sim_draws=sim_draws, seed=seed, policy=policy,
@@ -210,11 +226,11 @@ def cache_aware_plan(
     sim_draws: int = 1,
     seed: int = 0,
     policy: str = "oes",
-    **kw,
+    **kw: Any,
 ) -> CachePlan:
     """End-to-end: cache-aware ETP search, then one recorded OES schedule of
     the chosen placement under its cache-adjusted realization."""
-    config = config or CacheConfig(policy=model.policy)
+    config = _coherent_config(config, model)
     realization = realization or workload.realize(seed=seed)
     etp = cache_aware_etp(
         workload, cluster, model, config,

@@ -17,6 +17,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .units import GBps
+
 # Canonical task kinds (paper §III-A).
 STORE = "store"
 SAMPLER = "sampler"
@@ -31,8 +33,8 @@ class Machine:
 
     name: str
     resources: Dict[str, float]
-    bw_in: float
-    bw_out: float
+    bw_in: GBps
+    bw_out: GBps
 
     def cap(self, r: str) -> float:
         return float(self.resources.get(r, 0.0))

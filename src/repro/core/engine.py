@@ -66,6 +66,7 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence, Tupl
 import numpy as np
 
 from .cluster import ClusterSpec, Placement
+from .units import GB, Seconds
 from .workload import Realization, Workload
 from ..obs import metrics as obs_metrics
 
@@ -516,10 +517,10 @@ class MigrationFlow:
 
     src: int
     dst: int
-    gb: float
+    gb: GB
     task: int = -1
     cls: int = CLASS_MIGRATION
-    deadline: float = float("inf")
+    deadline: Seconds = float("inf")
 
 
 def check_migration_flows(
@@ -560,8 +561,8 @@ def check_migration_flows(
 class TaskEvent:
     task: int
     iter: int
-    start: float
-    end: float
+    start: Seconds
+    end: Seconds
 
 
 @dataclass
@@ -592,7 +593,7 @@ class ScheduleResult:
     delivered bytes (``class_gb``).  ``None`` unless collected.
     """
 
-    makespan: float
+    makespan: Seconds
     task_events: List[TaskEvent]
     # (edge, iter, start, end) per delivered flow; None when unrecorded
     flow_log: Optional[List[Tuple[int, int, float, float]]]
@@ -1706,7 +1707,7 @@ def expected_makespan(
     seed: int = 0,
     batch: Optional[bool] = None,
     backend: Optional[str] = None,
-) -> float:
+) -> Seconds:
     """Monte-Carlo estimate of T'_Y (paper §V-B): simulate ``n_iters``
     iterations a few times with fresh draws from the traffic profile.
 

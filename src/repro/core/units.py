@@ -1,0 +1,113 @@
+"""Physical-unit annotations for the scheduling stack's public APIs.
+
+The whole reproduction is an exercise in accounting identities: GB of
+graph data over per-machine NIC GB/s must integrate to seconds of
+transmission, or the schedule is fiction.  Two past silent-corruption
+bugs were exactly unit/scale errors the type system never saw (PR 5's
+int-bandwidth truncation of capacity arithmetic, PR 8's record-flag bug
+that priced every admission at 0.0 s), and the next roadmap arc imports
+a flood of new unit-bearing quantities (J, gCO2/kWh, fractions).
+
+This module declares ``typing.Annotated`` aliases that attach a
+:class:`Unit` marker to plain ``float`` / ``np.ndarray`` annotations.
+They are **erased at runtime** — ``GB`` *is* ``float`` to the
+interpreter and to mypy; no wrapper object, no conversion call, nothing
+in any hot path.  Their one consumer is the whole-program checker
+``tools/repro_verify``, which
+
+  * parses THIS file (syntactically — the tool never imports the repo)
+    to build its alias registry, so declaring a new alias here is all it
+    takes to teach the checker a new unit;
+  * seeds its interprocedural units-inference pass from parameters,
+    returns and dataclass fields annotated with these aliases; and
+  * flags mismatched arithmetic (RV001: ``GB + Seconds``, returning a
+    ``Ratio`` where ``Seconds`` is declared) and bare bit/byte or SI
+    scale factors applied to unit-carrying values (RV002: ``gb * 8``,
+    ``* 1e9`` outside this module).
+
+Annotation guide (see README "Units annotations"):
+
+  * annotate scalars with the scalar aliases (``gb: GB``), arrays with
+    the ``*Array`` aliases (``bw_in: GBpsArray``) — both carry the same
+    unit symbol and mix freely in the checker's algebra (an element of a
+    GB array is a GB scalar);
+  * unit conversions (GB<->Gbit, GB<->bytes, J<->kWh) belong HERE, as
+    named helpers — a bare ``* 8`` at a call site is exactly the hazard
+    RV002 exists to catch;
+  * quantities that are genuinely dimensionless fractions (hit rates,
+    drift measures, Jain indices) are ``Ratio`` — the checker treats
+    them as unit-free factors under * and /, but ``GB + Ratio`` is
+    still a mismatch.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Annotated
+
+if TYPE_CHECKING:
+    import numpy as np
+
+
+class Unit:
+    """Annotation marker naming a physical unit (``Unit("GB/s")``).
+
+    The symbol grammar understood by ``tools/repro_verify`` is
+    ``sym ( "*" sym )* ( "/" sym ( "*" sym )* )?`` — e.g. ``"GB"``,
+    ``"GB/s"``, ``"gCO2/kWh"``; ``"1"`` (or ``"ratio"``) is the
+    dimensionless unit.  Instances carry no behaviour: arithmetic on
+    annotated values is plain float/array arithmetic."""
+
+    __slots__ = ("symbol",)
+
+    def __init__(self, symbol: str) -> None:
+        self.symbol = symbol
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Unit({self.symbol!r})"
+
+
+# -- data volumes -----------------------------------------------------------
+GB = Annotated[float, Unit("GB")]
+Gbit = Annotated[float, Unit("Gbit")]
+GBArray = Annotated["np.ndarray", Unit("GB")]
+
+# -- rates ------------------------------------------------------------------
+GBps = Annotated[float, Unit("GB/s")]
+GBpsArray = Annotated["np.ndarray", Unit("GB/s")]
+
+# -- time -------------------------------------------------------------------
+Seconds = Annotated[float, Unit("s")]
+SecondsArray = Annotated["np.ndarray", Unit("s")]
+
+# -- dimensionless fractions (hit rates, drift, fairness, slowdowns) --------
+Ratio = Annotated[float, Unit("1")]
+RatioArray = Annotated["np.ndarray", Unit("1")]
+
+# -- energy / carbon (ROADMAP item 3: price-trace planning) -----------------
+Joules = Annotated[float, Unit("J")]
+Watts = Annotated[float, Unit("J/s")]
+KWh = Annotated[float, Unit("kWh")]
+GCO2PerKWh = Annotated[float, Unit("gCO2/kWh")]
+GCO2 = Annotated[float, Unit("gCO2")]
+
+#: bit/byte and SI scale factors — the named home for every conversion
+#: constant, so call sites never carry a bare ``* 8`` / ``* 1e9`` (RV002).
+BITS_PER_BYTE = 8.0
+GB_PER_GBIT = 1.0 / 8.0
+BYTES_PER_GB = float(2**30)  # GiB convention, matching the cache tier
+US_PER_SECOND = 1e6  # Chrome/Perfetto trace timestamps are microseconds
+JOULES_PER_KWH = 3.6e6
+
+
+def gb_to_gbit(gb: GB) -> Gbit:
+    """GB -> Gbit (the canonical bit/byte conversion site)."""
+    return gb * BITS_PER_BYTE
+
+
+def gbit_to_gb(gbit: Gbit) -> GB:
+    """Gbit -> GB."""
+    return gbit * GB_PER_GBIT
+
+
+def kwh_to_joules(kwh: KWh) -> Joules:
+    """kWh -> J (for the energy/carbon trace arc)."""
+    return kwh * JOULES_PER_KWH

@@ -27,6 +27,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .units import GBArray, SecondsArray
+
 from .cluster import PS, SAMPLER, STORE, WORKER, ClusterSpec, TaskSpec
 
 
@@ -55,8 +57,8 @@ class TrafficModel:
     as in the paper.
     """
 
-    mean_volume: np.ndarray  # [E]
-    mean_exec: np.ndarray  # [J]
+    mean_volume: GBArray  # [E]
+    mean_exec: SecondsArray  # [J]
     pmr: float = 1.16
     exec_jitter: float = 0.05
     fluctuating: Optional[np.ndarray] = None  # bool [E]
@@ -83,8 +85,8 @@ class Realization:
     Sharing a Realization across schedulers gives an apples-to-apples
     comparison (same 'online' arrival sequence for every policy)."""
 
-    volumes: np.ndarray
-    exec_times: np.ndarray
+    volumes: GBArray
+    exec_times: SecondsArray
 
     @property
     def n_iters(self) -> int:

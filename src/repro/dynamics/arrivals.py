@@ -63,6 +63,7 @@ from ..core.multijob import (
     realize_merged,
 )
 from ..core.placement import ifs_placement
+from ..core.units import GB, Ratio, Seconds
 from ..core.workload import Workload
 from ..obs import metrics as obs_metrics
 from .replan import ReplanConfig, Replanner
@@ -87,9 +88,9 @@ class JobArrival:
     non-negative int — ``merged_edge_classes`` semantics)."""
 
     name: str
-    t_arrive: float
+    t_arrive: Seconds
     workload: Workload
-    deadline_s: float
+    deadline_s: Seconds
     qos: int = 0
 
 
@@ -98,21 +99,21 @@ class TenantOutcome:
     """Per-tenant SLO row."""
 
     name: str
-    t_arrive: float
-    deadline_s: float
+    t_arrive: Seconds
+    deadline_s: Seconds
     qos: int
     admitted: bool = False
     n_defers: int = 0
-    t_admit: float = math.nan
-    t_complete: float = math.inf  # inf when rejected
-    solo_makespan_s: float = math.nan  # uncontended reference run
+    t_admit: Seconds = math.nan
+    t_complete: Seconds = math.inf  # inf when rejected
+    solo_makespan_s: Seconds = math.nan  # uncontended reference run
 
     @property
     def met(self) -> bool:
         return self.admitted and self.t_complete <= self.deadline_s + _EPS
 
     @property
-    def slowdown(self) -> float:
+    def slowdown(self) -> Ratio:
         """(completion - arrival) / solo makespan; inf when rejected."""
         if not self.admitted or not math.isfinite(self.t_complete):
             return math.inf
@@ -182,7 +183,7 @@ class SLOReport:
 class ServiceEvent:
     """Audit row: one admission decision or completion."""
 
-    t: float
+    t: Seconds
     kind: str  # "admit" | "reject" | "defer" | "complete"
     job: str
     detail: str = ""
@@ -192,13 +193,13 @@ class ServiceEvent:
 class EpochRecord:
     """One committed co-scheduled interval between membership changes."""
 
-    start_s: float
-    end_s: float
+    start_s: Seconds
+    end_s: Seconds
     reason: str  # "arrival" | "completion" | "drain"
     jobs: List[str]
     served: Dict[str, int]  # iterations committed this epoch
     replanned: bool = False
-    migration_gb: float = 0.0
+    migration_gb: GB = 0.0
 
 
 @dataclass
@@ -268,7 +269,7 @@ class ServiceConfig:
 def solo_makespan(
     job: Workload, cluster: ClusterSpec, *, seed: int = 0, index: int = 0,
     policy: str = "oes",
-) -> float:
+) -> Seconds:
     """Uncontended reference: the job alone on the full cluster (IFS
     placement, one draw).  Slowdown denominator, SJF key, and the
     admission controller's hopeless-reject bound."""

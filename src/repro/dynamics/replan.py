@@ -50,6 +50,7 @@ from ..core.engine import (
     simulate_batch,
 )
 from ..core.placement import ETPResult, etp_search, remap_after_leave
+from ..core.units import GB, Ratio, Seconds
 from ..core.workload import Workload
 from ..obs import metrics as obs_metrics
 from .traces import relative_bw_drift
@@ -146,7 +147,7 @@ def annotate_deadlines(
 
 def migration_drain_bound(
     cluster: ClusterSpec, flows: Sequence[MigrationFlow]
-) -> float:
+) -> Seconds:
     """Per-NIC drain LOWER bound on completing ``flows``: every NIC must
     carry its total migration bytes at a rate no higher than its capacity,
     so the slowest NIC's drain time bounds ANY schedule — overlapped or
@@ -179,7 +180,7 @@ def migration_time(
     old_y: np.ndarray,
     new_y: np.ndarray,
     state_gb: np.ndarray,
-) -> float:
+) -> Seconds:
     """Seconds to drain every relocated task's state over current NICs if
     transfers serialised per NIC and ran in parallel across NICs — the
     certified LOWER bound on the flow-scheduled completion (see
@@ -250,14 +251,14 @@ class ReplanRecord:
 
     trigger: str  # "epoch" | "drift" | "leave" | "join" | "forced"
     replanned: bool
-    drift: float
+    drift: Ratio
     moved_tasks: int = 0
-    migration_gb: float = 0.0  # discretionary state moved (beyond warm start)
-    forced_gb: float = 0.0  # state force-restored after a machine leave
-    migration_s: float = 0.0  # analytic per-NIC drain LOWER bound, unamortised
-    overlap_s: float = 0.0  # simulated first-interval delta vs migration-free
-    makespan: float = float("nan")  # raw simulated makespan, no migration
-    objective: float = float("nan")  # makespan + amortised overlap (searched)
+    migration_gb: GB = 0.0  # discretionary state moved (beyond warm start)
+    forced_gb: GB = 0.0  # state force-restored after a machine leave
+    migration_s: Seconds = 0.0  # analytic per-NIC drain LOWER bound, unamortised
+    overlap_s: Seconds = 0.0  # simulated first-interval delta vs migration-free
+    makespan: Seconds = float("nan")  # raw simulated makespan, no migration
+    objective: Seconds = float("nan")  # makespan + amortised overlap (searched)
     flows: List[MigrationFlow] = field(default_factory=list)
     etp: Optional[ETPResult] = None
 
@@ -296,7 +297,7 @@ class Replanner:
         self._planned_bw_out = self.cluster.bw_out.copy()
 
     # -- drift ------------------------------------------------------------
-    def drift(self, bw_in: np.ndarray, bw_out: np.ndarray) -> float:
+    def drift(self, bw_in: np.ndarray, bw_out: np.ndarray) -> Ratio:
         return relative_bw_drift(
             self._planned_bw_in, self._planned_bw_out, bw_in, bw_out
         )

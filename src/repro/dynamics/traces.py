@@ -29,6 +29,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.cluster import ClusterSpec
+from ..core.units import GBpsArray, Ratio, Seconds, SecondsArray
 
 
 @dataclass
@@ -45,9 +46,9 @@ class BandwidthTrace:
     dip to zero mid-trace, but must recover before the work can finish.
     """
 
-    times: np.ndarray  # [S]
-    bw_in: np.ndarray  # [S, M]
-    bw_out: np.ndarray  # [S, M]
+    times: SecondsArray  # [S]
+    bw_in: GBpsArray  # [S, M]
+    bw_out: GBpsArray  # [S, M]
     slow: Optional[np.ndarray] = None  # [S, M]; None -> all ones
 
     def __post_init__(self) -> None:
@@ -76,23 +77,23 @@ class BandwidthTrace:
     def M(self) -> int:
         return self.bw_in.shape[1]
 
-    def segment_at(self, t: float) -> int:
+    def segment_at(self, t: Seconds) -> int:
         """Index of the segment containing time ``t``."""
         return int(np.searchsorted(self.times, t, side="right") - 1) if t > 0 else 0
 
-    def bw_at(self, t: float) -> Tuple[np.ndarray, np.ndarray]:
+    def bw_at(self, t: Seconds) -> Tuple[GBpsArray, GBpsArray]:
         """(bw_in[M], bw_out[M]) snapshot at time ``t`` — what a bandwidth
         monitor reports to the re-planner; no future segments leak."""
         s = self.segment_at(t)
         return self.bw_in[s].copy(), self.bw_out[s].copy()
 
-    def snapshot_cluster(self, cluster: ClusterSpec, t: float) -> ClusterSpec:
+    def snapshot_cluster(self, cluster: ClusterSpec, t: Seconds) -> ClusterSpec:
         """The cluster as the planner sees it at time ``t``: nominal
         capacities, current NIC bandwidths."""
         bw_in, bw_out = self.bw_at(t)
         return cluster.with_bandwidth(bw_in, bw_out)
 
-    def window(self, t0: float, t1: Optional[float] = None) -> "BandwidthTrace":
+    def window(self, t0: Seconds, t1: Optional[Seconds] = None) -> "BandwidthTrace":
         """Sub-trace covering [t0, t1), re-anchored so its own clock starts
         at 0 — the engine simulates each planning interval in local time."""
         s0 = self.segment_at(t0)
@@ -131,8 +132,8 @@ class DynamicsEvent:
     ``t1=None`` means the episode persists to the end of the trace
     (a permanent shift, e.g. a re-negotiated link rate)."""
 
-    t0: float
-    t1: Optional[float] = None
+    t0: Seconds
+    t1: Optional[Seconds] = None
     machine: Optional[int] = None
     bw_scale: float = 1.0
     slowdown: float = 1.0
@@ -171,7 +172,7 @@ def trace_from_events(
 def drift_trace(
     cluster: ClusterSpec,
     *,
-    horizon_s: float,
+    horizon_s: Seconds,
     n_segments: int = 6,
     seed: int = 0,
     bw_scale_range: Tuple[float, float] = (0.3, 1.0),
@@ -212,7 +213,7 @@ def relative_bw_drift(
     planned_bw_out: np.ndarray,
     now_bw_in: np.ndarray,
     now_bw_out: np.ndarray,
-) -> float:
+) -> Ratio:
     """Largest per-machine relative NIC change since the incumbent plan —
     the quantity the re-planner thresholds on.
 

@@ -19,6 +19,7 @@ through ``repro.obs.trace -> repro.core``.
 from __future__ import annotations
 
 import importlib
+from typing import Any
 
 from .metrics import REGISTRY, MetricsRegistry, enabled  # noqa: F401
 
@@ -42,7 +43,7 @@ _LAZY = {
 __all__ = ["REGISTRY", "MetricsRegistry", "enabled", *_LAZY]
 
 
-def __getattr__(name: str):
+def __getattr__(name: str) -> Any:
     try:
         mod_name, attr = _LAZY[name]
     except KeyError:

@@ -37,12 +37,15 @@ it, so it never exceeds the makespan (hypothesis property).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
 from ..core.engine import CLASS_TRAINING
 from .trace import FlowSpan, ScheduleTrace, TaskSpan
+
+#: anything that can sit on the critical-path chain
+Span = Union[TaskSpan, FlowSpan]
 
 COMPONENTS = (
     "compute",
@@ -59,7 +62,7 @@ class BlameReport:
     makespan: float
     components: Dict[str, float]
     per_machine_contention: Dict[int, float]
-    path: List[object] = field(default_factory=list)  # TaskSpan | FlowSpan
+    path: List[Span] = field(default_factory=list)
 
     @property
     def total(self) -> float:
@@ -93,16 +96,16 @@ def _index_spans(
 
 
 def _binding_pred(
-    span,
+    span: Span,
     tr: ScheduleTrace,
     tasks: Dict[Tuple[int, int], TaskSpan],
     flows: Dict[Tuple[int, int], FlowSpan],
-):
+) -> Optional[Span]:
     """The predecessor span whose completion released ``span`` (None at
     the chain root).  Candidates mirror the engine's release rules; the
     binding one is the latest-ending candidate."""
     wl = tr.workload
-    cands: List[object] = []
+    cands: List[Span] = []
     if isinstance(span, TaskSpan):
         j, n = span.task, span.iter
         if n > 1 and (j, n - 1) in tasks:
@@ -143,7 +146,7 @@ def _binding_pred(
 def blame(tr: ScheduleTrace) -> BlameReport:
     """Critical-path blame decomposition of one recorded schedule."""
     tasks, flows = _index_spans(tr)
-    spans: List[object] = list(tr.tasks) + list(tr.flows)
+    spans: List[Span] = list(tr.tasks) + list(tr.flows)
     if not spans:
         return BlameReport(
             makespan=tr.makespan,
@@ -154,9 +157,9 @@ def blame(tr: ScheduleTrace) -> BlameReport:
     per_machine: Dict[int, float] = {}
 
     # walk back from the makespan-defining span
-    cur = max(spans, key=lambda s: s.end)
-    chain: List[object] = []
-    seen = set()
+    cur: Optional[Span] = max(spans, key=lambda s: s.end)
+    chain: List[Span] = []
+    seen: Set[int] = set()
     while cur is not None and id(cur) not in seen:
         seen.add(id(cur))
         chain.append(cur)
@@ -219,13 +222,13 @@ def blame_by_tenant(
     efficiency accounting, and the number to show a tenant asking why the
     merged run finished when it did."""
     tasks, flows = _index_spans(tr)
-    spans: List[object] = list(tr.tasks) + list(tr.flows)
+    spans: List[Span] = list(tr.tasks) + list(tr.flows)
     if not spans:
         return {}
     wl = tr.workload
     bounds = np.asarray(list(task_offsets) + [wl.J])
 
-    def tenant_of(span) -> int:
+    def tenant_of(span: Span) -> int:
         if isinstance(span, TaskSpan):
             t = span.task
         elif span.edge < wl.E:
@@ -237,8 +240,8 @@ def blame_by_tenant(
         return int(np.searchsorted(bounds, t, side="right") - 1)
 
     shares: Dict[int, float] = {}
-    cur = max(spans, key=lambda s: s.end)
-    seen = set()
+    cur: Optional[Span] = max(spans, key=lambda s: s.end)
+    seen: Set[int] = set()
     while cur is not None and id(cur) not in seen:
         seen.add(id(cur))
         pred = _binding_pred(cur, tr, tasks, flows)

@@ -23,7 +23,7 @@ from __future__ import annotations
 import math
 import os
 import threading
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Type, cast
 
 _TRUTHY = ("1", "true", "yes", "on")
 
@@ -37,7 +37,7 @@ class Counter:
 
     kind = "counter"
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.value = 0.0
 
@@ -53,7 +53,7 @@ class Gauge:
 
     kind = "gauge"
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.value = 0.0
 
@@ -70,7 +70,7 @@ class Histogram:
     kind = "histogram"
     MAX_SAMPLES = 256
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.count = 0
         self.sum = 0.0
@@ -131,9 +131,9 @@ NULL = _Null()
 
 
 class MetricsRegistry:
-    def __init__(self, enabled: Optional[bool] = None):
+    def __init__(self, enabled: Optional[bool] = None) -> None:
         self.enabled = _env_enabled() if enabled is None else bool(enabled)
-        self._metrics: Dict[str, object] = {}
+        self._metrics: Dict[str, Any] = {}
         self._lock = threading.Lock()
 
     def enable(self) -> None:
@@ -146,7 +146,7 @@ class MetricsRegistry:
         with self._lock:
             self._metrics.clear()
 
-    def _get(self, name: str, cls):
+    def _get(self, name: str, cls: Type[Any]) -> Any:
         if not self.enabled:
             return NULL
         with self._lock:
@@ -162,13 +162,15 @@ class MetricsRegistry:
             return m
 
     def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+        # the disabled-path NULL sentinel duck-types every metric kind, so
+        # the registry's typed accessors cast rather than narrow
+        return cast(Counter, self._get(name, Counter))
 
     def gauge(self, name: str) -> Gauge:
-        return self._get(name, Gauge)
+        return cast(Gauge, self._get(name, Gauge))
 
     def histogram(self, name: str) -> Histogram:
-        return self._get(name, Histogram)
+        return cast(Histogram, self._get(name, Histogram))
 
     def snapshot(self) -> Dict[str, dict]:
         with self._lock:

@@ -20,11 +20,11 @@ what the CI obs smoke step runs on the exported artifact.
 from __future__ import annotations
 
 import json
-from typing import Dict, List
+import os
+from typing import Dict, List, Union
 
+from ..core.units import US_PER_SECOND as _US
 from .trace import ScheduleTrace
-
-_US = 1e6  # trace-event timestamps are microseconds
 
 _META_NAMES = (
     "process_name",
@@ -140,7 +140,7 @@ def to_trace_events(tr: ScheduleTrace) -> dict:
     }
 
 
-def write_trace(tr: ScheduleTrace, path) -> dict:
+def write_trace(tr: ScheduleTrace, path: Union[str, "os.PathLike[str]"]) -> dict:
     """Export ``tr`` to ``path`` as Perfetto-loadable JSON; returns the
     rendered object (already validated)."""
     obj = to_trace_events(tr)
@@ -150,7 +150,7 @@ def write_trace(tr: ScheduleTrace, path) -> dict:
     return obj
 
 
-def validate_trace_events(obj) -> Dict[str, int]:
+def validate_trace_events(obj: object) -> Dict[str, int]:
     """Structural validation against the trace-event JSON spec.
 
     Checks the invariants Perfetto's importer relies on (object format,

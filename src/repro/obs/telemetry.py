@@ -8,12 +8,12 @@ state, so telemetry can always be taken after the fact.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 from .metrics import REGISTRY
 
 
-def search_telemetry(etp) -> dict:
+def search_telemetry(etp: Any) -> dict:
     """Per-search telemetry from an ``ETPResult``: objective trajectory,
     acceptance rate, memo-cache hit rate — plus per-chain stats when the
     search ran multi-chain (``ETPResult.chain_stats``)."""
@@ -21,7 +21,7 @@ def search_telemetry(etp) -> dict:
     hits = int(etp.cache_hits)
     proposals = int(getattr(etp, "proposals", 0))
     accepted = int(getattr(etp, "accepted", 0))
-    out = {
+    out: Dict[str, Any] = {
         "best_makespan": float(etp.best_makespan),
         "evaluations": evals,
         "cache_hits": hits,
@@ -39,11 +39,11 @@ def search_telemetry(etp) -> dict:
     return out
 
 
-def replan_telemetry(records) -> List[dict]:
+def replan_telemetry(records: Iterable[Any]) -> List[dict]:
     """One event dict per ``ReplanRecord`` (taken or declined)."""
-    out = []
+    out: List[dict] = []
     for rec in records:
-        row = {
+        row: Dict[str, Any] = {
             "trigger": rec.trigger,
             "replanned": bool(rec.replanned),
             "drift": float(rec.drift),

@@ -23,7 +23,7 @@ silently producing an empty trace.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -90,27 +90,28 @@ class ScheduleTrace:
     tasks: List[TaskSpan]
     flows: List[FlowSpan]
     shaping: Optional[str] = None
-    # planner context threaded through for blame attribution
-    workload: object = None
-    realization: object = None
-    bw_trace: object = None
-    cluster: object = None
+    # planner context threaded through for blame attribution; typed Any
+    # (not object) because blame.py reaches into workload/cluster structure
+    workload: Any = None
+    realization: Any = None
+    bw_trace: Any = None
+    cluster: Any = None
     extras: dict = field(default_factory=dict)
 
     # -- construction -----------------------------------------------------
     @classmethod
     def from_result(
         cls,
-        res,
-        workload,
-        cluster,
-        placement,
-        realization,
+        res: Any,
+        workload: Any,
+        cluster: Any,
+        placement: Any,
+        realization: Any,
         *,
-        trace=None,
+        trace: Any = None,
         migrations: Optional[Sequence[MigrationFlow]] = None,
         shaping: Optional[str] = None,
-        edge_classes=None,
+        edge_classes: Any = None,
     ) -> "ScheduleTrace":
         """Build a trace from ``simulate(..., record=True)`` output.
 
@@ -253,7 +254,9 @@ class ScheduleTrace:
         ivs = sorted(
             (t.start, t.end) for t in self.tasks if t.machine == machine
         )
-        total, cur_s, cur_e = 0.0, None, None
+        total = 0.0
+        cur_s: Optional[float] = None
+        cur_e = 0.0
         for s, e in ivs:
             if cur_s is None:
                 cur_s, cur_e = s, e

@@ -1,0 +1,26 @@
+"""RV001 fixture: unit-mismatched arithmetic (deliberately bad).
+
+Analysed as module ``repro.rv001_bad`` inside a synthetic project (see
+tests/test_repro_verify.py) so the units registry resolves.
+"""
+from repro.core.units import GB, GBps, Seconds
+
+
+def takes_seconds(dur: Seconds) -> Seconds:
+    return dur
+
+
+def add_mismatch(vol: GB, dur: Seconds) -> float:
+    return vol + dur  # GB + s
+
+
+def compare_mismatch(vol: GB, rate: GBps) -> bool:
+    return vol > rate  # GB vs GB/s
+
+
+def return_mismatch(vol: GB, dur: Seconds) -> Seconds:
+    return vol / dur  # GB/s where seconds are declared
+
+
+def call_mismatch(vol: GB) -> Seconds:
+    return takes_seconds(vol)  # GB into a seconds parameter

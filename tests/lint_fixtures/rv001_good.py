@@ -1,0 +1,18 @@
+"""RV001 fixture: unit-correct arithmetic (must stay clean)."""
+from repro.core.units import GB, GBps, Seconds
+
+
+def transfer_time(vol: GB, rate: GBps) -> Seconds:
+    return vol / rate  # GB / (GB/s) = s
+
+
+def total(a: GB, b: GB) -> GB:
+    return a + b
+
+
+def doubled(vol: GB) -> GB:
+    return vol * 2.0  # dimensionless non-scale literal is fine
+
+
+def budget_left(cap: GB, used: GB, dur: Seconds, rate: GBps) -> GB:
+    return cap - used - rate * dur  # GB/s * s = GB

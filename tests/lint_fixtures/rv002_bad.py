@@ -1,0 +1,14 @@
+"""RV002 fixture: bare bit/byte and SI scale factors (deliberately bad)."""
+from repro.core.units import GB
+
+
+def to_gbit(vol: GB) -> float:
+    return vol * 8  # bare bits-per-byte factor
+
+
+def to_bytes_ish(vol: GB) -> float:
+    return vol * 1e9  # bare SI giga factor
+
+
+def to_gib(vol: GB) -> float:
+    return vol / 2**30  # bare byte-scale power of two

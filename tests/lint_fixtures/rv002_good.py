@@ -1,0 +1,14 @@
+"""RV002 fixture: named conversions and unitless scaling (stays clean)."""
+from repro.core.units import BITS_PER_BYTE, GB
+
+
+def to_gbit(vol: GB) -> float:
+    return vol * BITS_PER_BYTE  # conversion named in repro.core.units
+
+
+def plain(x: float) -> float:
+    return x * 8  # no unit on x: a bare 8 is allowed
+
+
+def index_math(n: int) -> int:
+    return n * 1024  # unitless counters are not unit-carrying values

@@ -1,0 +1,12 @@
+"""RV003 fixture: a *Config dataclass with a knob nothing reads."""
+from dataclasses import dataclass
+
+
+@dataclass
+class DemoConfig:
+    used_knob: int = 1
+    dead_knob: float = 0.0  # written/defaulted, never read anywhere
+
+
+def consume(cfg: DemoConfig) -> int:
+    return cfg.used_knob

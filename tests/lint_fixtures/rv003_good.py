@@ -1,0 +1,16 @@
+"""RV003 fixture: every knob is read somewhere (stays clean)."""
+from dataclasses import asdict, dataclass
+
+
+@dataclass
+class DemoConfig:
+    rate_limit: float = 1.0
+    exported: int = 0
+
+
+def consume(cfg: DemoConfig) -> float:
+    return cfg.rate_limit
+
+
+def export(cfg: DemoConfig) -> dict:
+    return asdict(cfg)  # asdict consumes every field

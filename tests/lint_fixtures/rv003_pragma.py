@@ -1,0 +1,11 @@
+"""RV003 fixture: the shared pragma machinery waives RV findings too."""
+from dataclasses import dataclass
+
+
+@dataclass
+class PragmaConfig:
+    dead_knob: float = 0.0  # repro-lint: disable=RV003
+
+
+def consume(cfg: PragmaConfig) -> "PragmaConfig":
+    return cfg

@@ -1,0 +1,21 @@
+"""RV004 fixture: unrecorded results reach accounting through a helper.
+
+The scope-local RL003 cannot see this — the ``simulate`` call and the
+``.task_events`` read live in different functions.
+"""
+from repro.core.engine import simulate
+from repro.core.multijob import per_job_makespans
+
+
+def run_once(wl, cluster, placement, real):
+    return simulate(wl, cluster, placement, real)  # record defaults False
+
+
+def account(wl, cluster, placement, real):
+    res = run_once(wl, cluster, placement, real)
+    return [ev.task for ev in res.task_events]  # empty without record=True
+
+
+def account_sink(wl, cluster, placement, real):
+    res = run_once(wl, cluster, placement, real)
+    return per_job_makespans(res, [0, 4])

@@ -1,0 +1,22 @@
+"""RV004 fixture: recorded results and conditional forwarding (clean)."""
+from repro.core.engine import simulate
+from repro.core.multijob import per_job_makespans
+
+
+def run_recorded(wl, cluster, placement, real):
+    return simulate(wl, cluster, placement, real, record=True)
+
+
+def account(wl, cluster, placement, real):
+    res = run_recorded(wl, cluster, placement, real)
+    return [ev.task for ev in res.task_events]
+
+
+def run_flagged(wl, cluster, placement, real, record=False):
+    # conditional summary: status decided at each call site
+    return simulate(wl, cluster, placement, real, record=record)
+
+
+def account_flagged(wl, cluster, placement, real):
+    res = run_flagged(wl, cluster, placement, real, record=True)
+    return per_job_makespans(res, [0, 4])

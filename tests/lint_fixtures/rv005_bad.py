@@ -1,0 +1,22 @@
+"""RV005 fixture: impurities in a helper reachable from a jitted body.
+
+RL005 checks the jitted function's own body only; the hazards here hide
+one call deep.
+"""
+import jax
+import numpy as np
+
+
+def helper(state, n):
+    peak = float(state)  # host sync per invocation under trace
+    table = np.arange(4)  # constant-folds to a baked array
+    if n > 0:  # Python branch on a traced argument
+        peak = peak + 1.0
+    return peak, table
+
+
+def step(state, n):
+    return helper(state, n)
+
+
+run = jax.jit(step)

@@ -1,0 +1,14 @@
+"""RV005 fixture: trace-safe helper under a jitted caller (stays clean)."""
+import jax
+import jax.numpy as jnp
+
+
+def helper(state, n):
+    return jnp.maximum(state, 0.0) * n  # jnp ops trace fine
+
+
+def step(state, n):
+    return helper(state, n)
+
+
+run = jax.jit(step)

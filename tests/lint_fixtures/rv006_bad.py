@@ -1,0 +1,9 @@
+"""RV006 fixture: a backend-aware call edge that drops the knob."""
+
+
+def inner(x, backend=None):
+    return x
+
+
+def outer(x, backend=None):
+    return inner(x)  # backend silently reset to inner's default

@@ -1,0 +1,17 @@
+"""RV006 fixture: every backend-aware edge threads the knob (clean)."""
+
+
+def inner(x, backend=None):
+    return x
+
+
+def forwarded(x, backend=None):
+    return inner(x, backend=backend)
+
+
+def positional(x, backend=None):
+    return inner(x, backend)
+
+
+def kwargs_carrier(x, **kw):
+    return inner(x, **kw)  # caller has no backend param: not an RV006 edge

@@ -1,0 +1,90 @@
+"""BENCH_*.json row-shape contract for the benchmark harness.
+
+CI uploads ``bench-out/BENCH_<group>.json`` artifacts so the perf
+trajectory persists across PRs; downstream tooling (and the next PR's
+regression diffing) keys on the exact row shape ``benchmarks.common``
+emits.  This pins it: every row is
+``{name, us_per_call, derived, group, timestamp, git_sha}`` with an
+ISO-8601 UTC timestamp and a short-sha string (or None outside a git
+checkout).
+"""
+import json
+from datetime import datetime
+
+import pytest
+
+from benchmarks import common
+
+REQUIRED_KEYS = {
+    "name", "us_per_call", "derived", "group", "timestamp", "git_sha",
+}
+
+
+def validate_row(row):
+    assert set(row) == REQUIRED_KEYS, row
+    assert isinstance(row["name"], str) and row["name"]
+    assert isinstance(row["us_per_call"], float)
+    assert row["us_per_call"] >= 0.0
+    assert isinstance(row["derived"], str)
+    assert isinstance(row["group"], str) and row["group"]
+    ts = datetime.fromisoformat(row["timestamp"])
+    assert ts.tzinfo is not None and ts.utcoffset().total_seconds() == 0.0
+    assert row["git_sha"] is None or (
+        isinstance(row["git_sha"], str) and row["git_sha"]
+    )
+
+
+@pytest.fixture
+def json_sink(tmp_path, monkeypatch):
+    """Point the module-level sink at tmp_path; globals restored after."""
+    monkeypatch.setattr(common, "_JSON_DIR", None)
+    monkeypatch.setattr(common, "_ROWS", {})
+    monkeypatch.setattr(common, "_GROUP", "misc")
+    common.set_json_dir(tmp_path)
+    return tmp_path
+
+
+def test_emitted_rows_match_schema(json_sink, capsys):
+    common.set_group("alpha")
+    common.emit("cell_a", 12.34, "derived=1.0")
+    common.emit("cell_b", 5.0, "")
+    common.set_group("beta")
+    common.emit("cell_c", 0.0, "x=2")
+    paths = common.flush_json()
+    assert [p.name for p in paths] == ["BENCH_alpha.json", "BENCH_beta.json"]
+    for p in paths:
+        rows = json.loads(p.read_text())
+        assert isinstance(rows, list) and rows
+        group = p.name[len("BENCH_"):-len(".json")]
+        for row in rows:
+            validate_row(row)
+            assert row["group"] == group
+    alpha = json.loads((json_sink / "BENCH_alpha.json").read_text())
+    assert [r["name"] for r in alpha] == ["cell_a", "cell_b"]
+    assert alpha[0]["us_per_call"] == 12.34
+
+
+def test_git_sha_field_is_this_checkout(json_sink):
+    common.set_group("sha")
+    common.emit("cell", 1.0, "")
+    (path,) = common.flush_json()
+    (row,) = json.loads(path.read_text())
+    # running inside the repo: the short sha must be a real hex string
+    assert row["git_sha"] == common._git_sha()
+    if row["git_sha"] is not None:
+        assert len(row["git_sha"]) >= 7
+        int(row["git_sha"], 16)
+
+
+def test_csv_line_contract_unchanged(json_sink, capsys):
+    common.emit("name_x", 123.456, "evals/s=9")
+    out = capsys.readouterr().out.strip()
+    assert out == "name_x,123.5,evals/s=9"  # one decimal, comma-separated
+
+
+def test_flush_without_sink_is_noop(monkeypatch, capsys):
+    monkeypatch.setattr(common, "_JSON_DIR", None)
+    monkeypatch.setattr(common, "_ROWS", {})
+    common.emit("quiet", 1.0, "")
+    assert common.flush_json() == []
+    assert capsys.readouterr().out.strip() == "quiet,1.0,"

@@ -275,3 +275,30 @@ def test_multichain_more_chains_never_worse():
     assert r8.best_makespan <= r2.best_makespan * 1.02, (
         r8.best_makespan, r2.best_makespan,
     )
+
+
+def test_cache_config_policy_coheres_with_model(trace, paper_job):
+    """Regression for the repro-verify RV003 finding that seeded this
+    wiring: ``CacheConfig.policy`` used to be written by callers and then
+    silently ignored — the search reserved memory for one eviction policy
+    while simulating hit rates under another.  Now the planner derives the
+    config from the model when omitted and REJECTS a mismatched pair."""
+    from repro.cache.planner import _coherent_config
+
+    model = build_hit_model(trace, policy="lru", capacity_nodes=100)
+    # omitted config inherits the model's policy
+    assert _coherent_config(None, model).policy == "lru"
+    # a matching explicit config passes through untouched
+    same = CacheConfig(policy="lru", cache_gb=2.0)
+    assert _coherent_config(same, model) is same
+    # a mismatched pair is refused up front, before any search spend
+    with pytest.raises(ValueError, match="disagrees"):
+        cache_aware_etp(
+            paper_job, _testbed_cluster(), model,
+            CacheConfig(policy="static", cache_gb=2.0),
+        )
+    with pytest.raises(ValueError, match="disagrees"):
+        cache_aware_plan(
+            paper_job, _testbed_cluster(), model,
+            CacheConfig(policy="prefetch", cache_gb=2.0),
+        )

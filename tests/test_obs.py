@@ -24,6 +24,7 @@ import numpy as np
 import pytest
 
 from repro.core import build_gnn_workload, heterogeneous_cluster, ifs_placement, simulate
+from repro.core.units import US_PER_SECOND
 from repro.obs import REGISTRY, MetricsRegistry
 from repro.obs.blame import COMPONENTS, blame, blame_delta, combine
 from repro.obs.metrics import NULL, Counter, Gauge, Histogram
@@ -142,7 +143,7 @@ def test_perfetto_roundtrip(tmp_path):
     # slices never extend past the makespan
     for e in loaded["traceEvents"]:
         if e["ph"] == "X":
-            assert e["ts"] + e["dur"] <= trace.makespan * 1e6 + 1e-3
+            assert e["ts"] + e["dur"] <= trace.makespan * US_PER_SECOND + 1e-3
 
 
 def test_perfetto_validator_rejects_malformed():

@@ -1,0 +1,268 @@
+"""Tests for tools/repro_verify: per-rule fixtures, pragma/baseline reuse,
+SARIF output, CLI behaviour, and the live-tree acceptance gate.
+
+The RV rules are *whole-program*: they need a Project (module graph, call
+graph, units registry), not one spoofed module.  Each fixture test
+therefore assembles a synthetic repo under ``tmp_path`` — the fixture
+file installed as ``src/repro/<name>.py`` next to the REAL
+``repro.core.units`` module (so annotation aliases resolve) and a
+minimal ``repro.core.engine`` stub (so ``simulate`` calls resolve to the
+engine entry point RV004 watches) — and runs the full rule set over it.
+Fixtures live in ``tests/lint_fixtures/`` (excluded from the verify
+walk — they are deliberately-bad code).
+"""
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from tools.repro_lint.baseline import load_baseline, match_baseline
+from tools.repro_verify.cli import (
+    DEFAULT_BASELINE,
+    DEFAULT_PATHS,
+    main as cli_main,
+)
+from tools.repro_verify.project import build_project
+from tools.repro_verify.rules import ALL_RULES, get_rules, run_project_rules
+from tools.repro_verify.sarif import to_sarif
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "lint_fixtures"
+UNITS_SRC = REPO_ROOT / "src" / "repro" / "core" / "units.py"
+
+#: just enough engine for ``from repro.core.engine import simulate`` to
+#: resolve to the qname RV004's record-flow pass treats as a result mint
+ENGINE_STUB = (
+    'def simulate(wl, cluster, placement, real, policy="oes", '
+    "record=False):\n"
+    "    return None\n"
+)
+
+
+def make_project_root(tmp_path, *fixture_names):
+    """Synthetic repo: real units module + engine stub + fixtures."""
+    core = tmp_path / "src" / "repro" / "core"
+    core.mkdir(parents=True)
+    shutil.copy(UNITS_SRC, core / "units.py")
+    (core / "engine.py").write_text(ENGINE_STUB, encoding="utf-8")
+    for name in fixture_names:
+        content = (FIXTURES / name).read_text(encoding="utf-8")
+        (tmp_path / "src" / "repro" / name).write_text(
+            content, encoding="utf-8"
+        )
+    return tmp_path
+
+
+def verify_fixture(tmp_path, *fixture_names, select=None):
+    root = make_project_root(tmp_path, *fixture_names)
+    project = build_project(["src"], root)
+    assert project.errors == []
+    return run_project_rules(project, select)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: positive flags, negative stays clean
+# ---------------------------------------------------------------------------
+def test_rv001_bad_fixture_flagged(tmp_path):
+    found = verify_fixture(tmp_path, "rv001_bad.py", select=["RV001"])
+    # GB+s, GB vs GB/s compare, GB/s returned as s, GB into a s parameter
+    assert len(found) == 4
+    assert rules_of(found) == ["RV001"]
+
+
+def test_rv001_good_fixture_clean(tmp_path):
+    assert verify_fixture(tmp_path, "rv001_good.py", select=["RV001"]) == []
+
+
+def test_rv002_bad_fixture_flagged(tmp_path):
+    found = verify_fixture(tmp_path, "rv002_bad.py", select=["RV002"])
+    # * 8, * 1e9, / 2**30 on GB-carrying values
+    assert len(found) == 3
+    assert rules_of(found) == ["RV002"]
+    assert any("2**30" in f.message for f in found)
+
+
+def test_rv002_good_fixture_clean(tmp_path):
+    # named conversions and unitless operands never flag
+    assert verify_fixture(tmp_path, "rv002_good.py", select=["RV002"]) == []
+
+
+def test_rv003_bad_fixture_flagged(tmp_path):
+    found = verify_fixture(tmp_path, "rv003_bad.py", select=["RV003"])
+    assert len(found) == 1
+    assert found[0].rule == "RV003"
+    assert "dead_knob" in found[0].message
+    assert "used_knob" not in found[0].message
+
+
+def test_rv003_good_fixture_clean(tmp_path):
+    # direct read + asdict() both count as reads
+    assert verify_fixture(tmp_path, "rv003_good.py", select=["RV003"]) == []
+
+
+def test_rv004_bad_fixture_flagged(tmp_path):
+    found = verify_fixture(tmp_path, "rv004_bad.py", select=["RV004"])
+    # .task_events read + per_job_makespans sink, both one helper deep
+    assert len(found) == 2
+    assert rules_of(found) == ["RV004"]
+
+
+def test_rv004_good_fixture_clean(tmp_path):
+    # record=True through a helper AND a conditional record=<param>
+    # summary evaluated at the call site both launder the status
+    assert verify_fixture(tmp_path, "rv004_good.py", select=["RV004"]) == []
+
+
+def test_rv005_bad_fixture_flagged(tmp_path):
+    found = verify_fixture(tmp_path, "rv005_bad.py", select=["RV005"])
+    # float() sync, np. constant-fold, branch on traced param — all
+    # inside a helper the jitted body calls, invisible to RL005
+    assert len(found) == 3
+    assert rules_of(found) == ["RV005"]
+    assert any("reachable from a jitted body" in f.message for f in found)
+    assert any("traced arguments" in f.message for f in found)
+
+
+def test_rv005_good_fixture_clean(tmp_path):
+    assert verify_fixture(tmp_path, "rv005_good.py", select=["RV005"]) == []
+
+
+def test_rv006_bad_fixture_flagged(tmp_path):
+    found = verify_fixture(tmp_path, "rv006_bad.py", select=["RV006"])
+    assert len(found) == 1
+    assert found[0].rule == "RV006"
+    assert "without forwarding backend=" in found[0].message
+
+
+def test_rv006_good_fixture_clean(tmp_path):
+    # kwarg forward, positional pass and **kw carrier are all fine
+    assert verify_fixture(tmp_path, "rv006_good.py", select=["RV006"]) == []
+
+
+# ---------------------------------------------------------------------------
+# pragma + select machinery (shared with repro_lint)
+# ---------------------------------------------------------------------------
+def test_line_pragma_waives_rv_finding(tmp_path):
+    # same dead-knob shape as rv003_bad, waived by the RL pragma syntax
+    assert verify_fixture(tmp_path, "rv003_pragma.py", select=["RV003"]) == []
+
+
+def test_select_scopes_the_run(tmp_path):
+    found = verify_fixture(
+        tmp_path, "rv001_bad.py", "rv006_bad.py", select=["RV006"]
+    )
+    assert rules_of(found) == ["RV006"]
+
+
+def test_get_rules_rejects_unknown_ids():
+    with pytest.raises(ValueError, match="RV999"):
+        get_rules(["RV999"])
+
+
+# ---------------------------------------------------------------------------
+# SARIF export
+# ---------------------------------------------------------------------------
+def test_sarif_structure(tmp_path):
+    found = verify_fixture(tmp_path, "rv001_bad.py", "rv003_bad.py")
+    doc = to_sarif(found)
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "repro-verify"
+    assert {r["id"] for r in driver["rules"]} == {
+        r.rule_id for r in ALL_RULES
+    }
+    assert len(run["results"]) == len(found)
+    for res, fd in zip(run["results"], found):
+        assert res["ruleId"] == fd.rule
+        loc = res["locations"][0]["physicalLocation"]
+        assert loc["artifactLocation"]["uri"] == fd.path
+        assert loc["region"]["startLine"] == fd.line
+
+
+def test_sarif_empty_run_is_valid():
+    doc = to_sarif([])
+    assert doc["runs"][0]["results"] == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_clean_on_repo_head(capsys):
+    """Acceptance gate: the live tree verifies clean (modulo the committed
+    baseline) over the exact paths CI walks."""
+    rc = cli_main(list(DEFAULT_PATHS))
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "OK" in out
+    assert "stale baseline" not in out
+
+
+def test_cli_sarif_on_fixture_project(tmp_path, capsys):
+    root = make_project_root(tmp_path, "rv002_bad.py")
+    rc = cli_main(
+        ["src", "--root", str(root), "--no-baseline", "--format", "sarif"]
+    )
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    results = doc["runs"][0]["results"]
+    assert len(results) == 3
+    assert {r["ruleId"] for r in results} == {"RV002"}
+
+
+def test_cli_update_baseline_roundtrip(tmp_path, capsys):
+    root = make_project_root(tmp_path, "rv003_bad.py")
+    bl = tmp_path / "baseline.json"
+    rc = cli_main(["src", "--root", str(root), "--baseline", str(bl),
+                   "--update-baseline"])
+    assert rc == 0
+    capsys.readouterr()
+    assert "repro_verify --update-baseline" in bl.read_text()
+    rc = cli_main(["src", "--root", str(root), "--baseline", str(bl)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "1 baselined" in out
+
+
+def test_cli_select_unknown_rule_is_usage_error(capsys):
+    rc = cli_main(["src", "--select", "RV999"])
+    assert rc == 2
+
+
+def test_cli_list_rules(capsys):
+    rc = cli_main(["--list-rules"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    for rule in ALL_RULES:
+        assert rule.rule_id in out
+
+
+# ---------------------------------------------------------------------------
+# live-tree invariants
+# ---------------------------------------------------------------------------
+def test_live_baseline_is_rv003_only_and_not_stale():
+    """The committed baseline grandfathers exactly the two dead model
+    knobs (router_jitter, max_seq) — nothing else, and nothing stale."""
+    entries = load_baseline(DEFAULT_BASELINE)
+    assert {e["rule"] for e in entries} == {"RV003"}
+    assert len(entries) == 2
+    project = build_project(list(DEFAULT_PATHS), REPO_ROOT)
+    findings = run_project_rules(project)
+    match = match_baseline(findings, entries)
+    assert match.new == []
+    assert match.stale == []
+
+
+def test_live_quickstart_uses_named_conversion():
+    """Regression: examples/quickstart.py carried a bare ``* 8`` on a
+    GB/s capacity; it must stay on the named BITS_PER_BYTE constant."""
+    src = (REPO_ROOT / "examples" / "quickstart.py").read_text(
+        encoding="utf-8"
+    )
+    assert "BITS_PER_BYTE" in src
+    assert "* 8" not in src

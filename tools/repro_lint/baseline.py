@@ -70,7 +70,17 @@ def match_baseline(
     return BaselineMatch(new=new, suppressed=suppressed, stale=stale)
 
 
-def write_baseline(path: Path, findings: Sequence[Finding]) -> None:
+_DEFAULT_COMMENT = (
+    "Grandfathered repro-lint findings. Keyed on (rule, path, "
+    "snippet) so entries survive line drift. Regenerate with "
+    "`python -m tools.repro_lint --update-baseline <paths>`; "
+    "prune entries when the underlying code is fixed."
+)
+
+
+def write_baseline(
+    path: Path, findings: Sequence[Finding], comment: str = _DEFAULT_COMMENT
+) -> None:
     """Deterministic regeneration: one entry per finding, sorted by
     (path, rule, snippet, occurrence)."""
     entries = sorted(
@@ -82,12 +92,7 @@ def write_baseline(path: Path, findings: Sequence[Finding]) -> None:
     )
     payload = {
         "version": BASELINE_VERSION,
-        "comment": (
-            "Grandfathered repro-lint findings. Keyed on (rule, path, "
-            "snippet) so entries survive line drift. Regenerate with "
-            "`python -m tools.repro_lint --update-baseline <paths>`; "
-            "prune entries when the underlying code is fixed."
-        ),
+        "comment": comment,
         "findings": entries,
     }
     path.write_text(

@@ -1,0 +1,10 @@
+"""repro-verify: whole-program interprocedural analysis tier.
+
+Builds a project-wide module/call graph over ``src``, ``tests``,
+``benchmarks``, ``examples`` and ``tools``, runs physical-units
+inference seeded by the ``repro.core.units`` annotations, and checks
+cross-function contracts the per-file ``repro_lint`` tier cannot see
+(rules RV001-RV006).  Run with ``python -m tools.repro_verify``.
+"""
+from .project import Project, build_project  # noqa: F401
+from .rules import ALL_RULES, RULE_IDS, run_project_rules  # noqa: F401

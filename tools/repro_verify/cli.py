@@ -1,8 +1,12 @@
-"""CLI: ``python -m tools.repro_lint [paths...]``.
+"""CLI: ``python -m tools.repro_verify [paths...]``.
 
-Exit codes: 0 = clean (or everything baselined/suppressed), 1 = new
-findings (or unparsable files), 2 = usage error.  ``--format json``
-emits a machine-readable report for CI annotation.
+Whole-program companion to ``tools.repro_lint``: builds one
+:class:`~tools.repro_verify.project.Project` over every walked path and
+runs the interprocedural RV rules.  Exit codes match repro-lint: 0 =
+clean (or everything baselined/suppressed), 1 = new findings or parse
+errors, 2 = usage error.  ``--format sarif`` emits SARIF 2.1.0 for
+code-scanning upload; the baseline file and pragma syntax are shared
+with repro-lint (``# repro-lint: disable=RV003``).
 """
 from __future__ import annotations
 
@@ -10,42 +14,58 @@ import argparse
 import json
 import sys
 from pathlib import Path
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
-from .baseline import (
-    DEFAULT_BASELINE,
+from tools.repro_lint.baseline import (
     load_baseline,
     match_baseline,
     write_baseline,
 )
-from .core import lint_paths
-from .rules import ALL_RULES, get_rules
 
+from .project import build_project
+from .rules import ALL_RULES, get_rules, run_project_rules
+from .sarif import to_sarif
+
+#: the verify walk covers the full program surface — including examples/
+#: and tools/ (the analysis tier must hold itself to its own contracts)
 DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples", "tools")
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+_BASELINE_COMMENT = (
+    "Grandfathered repro-verify findings. Keyed on (rule, path, snippet) "
+    "so entries survive line drift. Regenerate with "
+    "`python -m tools.repro_verify --update-baseline`; prune entries when "
+    "the underlying code is fixed."
+)
 
 
 def _repo_root() -> Path:
-    # tools/repro_lint/cli.py -> repo root is two parents above tools/
+    # tools/repro_verify/cli.py -> repo root is two parents above tools/
     return Path(__file__).resolve().parent.parent.parent
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
-        prog="python -m tools.repro_lint",
+        prog="python -m tools.repro_verify",
         description=(
-            "AST contract checker for this repo's scheduling/accounting "
-            "invariants (rules RL001-RL007)."
+            "Interprocedural repro-verify: physical-units checking, dead "
+            "config knobs and cross-function dataflow contracts (rules "
+            "RV001-RV006)."
         ),
     )
     ap.add_argument(
         "paths",
         nargs="*",
         default=list(DEFAULT_PATHS),
-        help=f"files/directories to lint (default: {' '.join(DEFAULT_PATHS)})",
+        help=(
+            "files/directories forming the program under analysis "
+            f"(default: {' '.join(DEFAULT_PATHS)})"
+        ),
     )
     ap.add_argument(
         "--format",
-        choices=("text", "json"),
+        choices=("text", "json", "sarif"),
         default="text",
         help="output format (default text)",
     )
@@ -90,17 +110,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
 
     try:
-        rules = get_rules(args.select.split(",") if args.select else None)
+        select = args.select.split(",") if args.select else None
+        get_rules(select)  # validate ids up front
     except ValueError as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 2
 
     root = args.root or _repo_root()
-    findings, errors = lint_paths(args.paths, root, rules)
+    project = build_project(args.paths, root)
+    findings = run_project_rules(project, select)
+    errors = project.errors
 
     baseline_path = args.baseline or DEFAULT_BASELINE
     if args.update_baseline:
-        write_baseline(baseline_path, findings)
+        write_baseline(baseline_path, findings, comment=_BASELINE_COMMENT)
         print(
             f"baseline written: {len(findings)} finding(s) -> {baseline_path}"
         )
@@ -109,7 +132,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     entries = [] if args.no_baseline else load_baseline(baseline_path)
     match = match_baseline(findings, entries)
 
-    if args.format == "json":
+    if args.format == "sarif":
+        print(json.dumps(to_sarif(match.new), indent=2))
+    elif args.format == "json":
         print(
             json.dumps(
                 {
@@ -140,7 +165,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         n_new, n_base = len(match.new), len(match.suppressed)
         status = "FAILED" if (match.new or errors) else "OK"
         print(
-            f"repro-lint: {status} — {n_new} new finding(s), "
+            f"repro-verify: {status} — {n_new} new finding(s), "
             f"{n_base} baselined, {len(errors)} parse error(s)"
         )
     return 1 if (match.new or errors) else 0

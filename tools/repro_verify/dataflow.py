@@ -1,0 +1,1064 @@
+"""Interprocedural dataflow: units inference, receiver typing, summaries.
+
+Three lattices share one forward statement walk (assignments update an
+environment in program order; branches merge optimistically; nested
+``def``s are separate scopes and are NOT entered):
+
+* **units** (:class:`UnitScope`) — every expression evaluates to a
+  :data:`~tools.repro_verify.unitspec.Unit`, :data:`LITERAL` (numeric
+  literal, unit-polymorphic) or ``None`` (unknown).  Mismatches are
+  reported at ``+``/``-``/comparisons, returns, annotated assignments and
+  resolved call arguments; ``*``/``/`` combine exponents.  Unknown never
+  reports — the pass is gradual by construction.
+* **class types** (:class:`TypeScope`) — variables/attributes resolve to
+  project classes (seeded from parameter annotations, ``self``,
+  constructor calls, return annotations and the attribute-name table).
+  Consumed by RV003 to type the receiver of every field read.
+* **record-flag status** (:class:`RecordFlow`) — which values carry
+  recorded ``ScheduleResult``s, propagated through helper returns via
+  per-function summaries (``record=<param>`` becomes a conditional
+  summary evaluated at each call site).  Consumed by RV004.
+
+Everything resolves through :class:`~tools.repro_verify.project.Project`;
+anything unresolved degrades to "unknown", never to a finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
+
+from .project import ClassInfo, FunctionInfo, ModuleInfo, Project
+from .unitspec import (
+    DIMENSIONLESS,
+    LITERAL,
+    UNITS_MODULE,
+    Unit,
+    load_registry,
+    mul_units,
+    resolve_annotation,
+    unit_str,
+)
+
+UnitVal = Union[Unit, None, object]  # Unit | None | LITERAL
+
+#: numpy/builtin callables through which the first argument's unit flows
+_PROPAGATE_FIRST = {
+    "asarray", "array", "abs", "maximum", "minimum", "clip", "copy",
+    "astype", "float", "sum", "max", "min", "mean", "sort", "ravel",
+    "nan_to_num", "ascontiguousarray", "round", "squeeze",
+}
+#: methods that preserve the receiver's unit
+_METHOD_PRESERVE = {
+    "copy", "astype", "sum", "max", "min", "mean", "item", "reshape",
+    "ravel", "squeeze", "clip", "round", "cumsum",
+}
+
+#: bit/byte and SI scale factors that must not touch unit-carrying values
+#: outside the units module (RV002)
+_SCALE_LITERALS = {8, 8.0, 1000, 1000.0, 1024, 1024.0, 1e6, 1e9, 0.125}
+
+
+def _is_scale_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and not isinstance(node.value, bool):
+        return node.value in _SCALE_LITERALS
+    if (
+        isinstance(node, ast.BinOp)
+        and isinstance(node.op, ast.Pow)
+        and isinstance(node.left, ast.Constant)
+        and node.left.value == 2
+        and isinstance(node.right, ast.Constant)
+        and node.right.value in (10, 20, 30, 40)
+    ):
+        return True  # 2**10 / 2**20 / 2**30 / 2**40: byte-scale conversions
+    return False
+
+
+class Analyses:
+    """Shared cross-module tables, built once per project."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        units_mod = project.modules.get(UNITS_MODULE)
+        self.registry = (
+            load_registry(units_mod.lint.tree) if units_mod else {}
+        )
+        # units tables --------------------------------------------------
+        self.fn_param_units: Dict[str, Dict[str, Unit]] = {}
+        self.fn_return_units: Dict[str, Unit] = {}
+        for q, fn in project.functions.items():
+            params = {}
+            for p in fn.params:
+                u = resolve_annotation(fn.param_annotation(p), self.registry)
+                if u is not None:
+                    params[p] = u
+            if params:
+                self.fn_param_units[q] = params
+            ru = resolve_annotation(fn.node.returns, self.registry)
+            if ru is not None:
+                self.fn_return_units[q] = ru
+        #: attribute name -> unit (conflicting declarations are dropped)
+        self.attr_units: Dict[str, Optional[Unit]] = {}
+        for cls in project.classes.values():
+            for fname, ann in cls.fields.items():
+                u = resolve_annotation(ann, self.registry)
+                if u is None:
+                    continue
+                if fname in self.attr_units and self.attr_units[fname] != u:
+                    self.attr_units[fname] = None  # ambiguous
+                else:
+                    self.attr_units[fname] = u
+        for q, fn in project.functions.items():
+            if fn.class_name and _is_property(fn.node):
+                u = resolve_annotation(fn.node.returns, self.registry)
+                if u is not None:
+                    prev = self.attr_units.get(fn.name, u)
+                    self.attr_units[fn.name] = u if prev == u else None
+        self.attr_units = {k: v for k, v in self.attr_units.items() if v}
+        # class-type tables ---------------------------------------------
+        self.attr_types: Dict[str, Optional[str]] = {}
+        for cls in project.classes.values():
+            for fname, ann in cls.fields.items():
+                c = self.resolve_class_annotation(ann)
+                if c is None:
+                    continue
+                if fname in self.attr_types and self.attr_types[fname] != c:
+                    self.attr_types[fname] = None
+                else:
+                    self.attr_types[fname] = c
+        self.attr_types = {k: v for k, v in self.attr_types.items() if v}
+        self.fn_return_types: Dict[str, str] = {}
+        for q, fn in project.functions.items():
+            c = self.resolve_class_annotation(fn.node.returns)
+            if c is not None:
+                self.fn_return_types[q] = c
+        self.record_flow = RecordFlow(self)
+
+    def class_field_type(self, cls_qname: str, attr: str) -> Optional[str]:
+        """Type of ``attr`` as declared on ``cls_qname`` itself — beats
+        the global attribute-name table (where common names like
+        ``config`` are ambiguous and dropped)."""
+        cls = self.project.classes.get(cls_qname)
+        if cls is not None and attr in cls.fields:
+            return self.resolve_class_annotation(cls.fields[attr])
+        return None
+
+    def resolve_class_annotation(self, ann: Optional[ast.AST]) -> Optional[str]:
+        """Annotation -> project class qname (unique terminal-name match)."""
+        if ann is None:
+            return None
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            try:
+                ann = ast.parse(ann.value, mode="eval").body
+            except SyntaxError:
+                return None
+        if isinstance(ann, ast.Subscript):
+            head = ann.value
+            name = (
+                head.attr if isinstance(head, ast.Attribute)
+                else getattr(head, "id", None)
+            )
+            if name in ("Optional", "Final", "ClassVar"):
+                return self.resolve_class_annotation(ann.slice)
+            return None
+        if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+            return (
+                self.resolve_class_annotation(ann.left)
+                or self.resolve_class_annotation(ann.right)
+            )
+        term = (
+            ann.attr if isinstance(ann, ast.Attribute)
+            else getattr(ann, "id", None)
+        )
+        if term is None:
+            return None
+        cands = self.project.class_by_name.get(term, [])
+        return cands[0] if len(cands) == 1 else None
+
+
+def _is_property(node: ast.FunctionDef) -> bool:
+    return any(
+        getattr(d, "id", None) == "property"
+        or getattr(d, "attr", None) == "property"
+        for d in node.decorator_list
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared forward statement walk
+# ---------------------------------------------------------------------------
+class _Scope:
+    """Forward walk of one scope (module body or one function body).
+
+    Subclasses implement ``expr`` (environment lookup + propagation) and
+    the statement hooks they care about; the walk itself is shared so all
+    three lattices see identical control flow."""
+
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.env: Dict[str, object] = {}
+
+    def run_block(self, stmts: Sequence[ast.stmt]) -> None:
+        for s in stmts:
+            self.stmt(s)
+
+    def expr(self, node: Optional[ast.AST]) -> object:  # pragma: no cover
+        raise NotImplementedError
+
+    def on_assign(self, target: str, value: ast.AST, node: ast.stmt) -> None:
+        self.env[target] = self.expr(value)
+
+    def on_ann_assign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            val = self.expr(node.value)
+            if isinstance(node.target, ast.Name):
+                self.env[node.target.id] = val
+
+    def on_aug_assign(self, node: ast.AugAssign) -> None:
+        self.expr(node.value)
+
+    def on_return(self, node: ast.Return) -> None:
+        if node.value is not None:
+            self.expr(node.value)
+
+    def on_for_target(self, target: ast.AST, iter_node: ast.AST) -> None:
+        pass
+
+    def clear_target(self, target: ast.AST) -> None:
+        """Drop bindings a write we cannot model may have changed."""
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                self.env.pop(n.id, None)
+
+    def stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # separate scope
+        if isinstance(s, ast.Assign):
+            if len(s.targets) == 1 and isinstance(s.targets[0], ast.Name):
+                self.on_assign(s.targets[0].id, s.value, s)
+            elif (
+                len(s.targets) == 1
+                and isinstance(s.targets[0], (ast.Tuple, ast.List))
+                and isinstance(s.value, (ast.Tuple, ast.List))
+                and len(s.targets[0].elts) == len(s.value.elts)
+            ):
+                # parallel unpack: ``cfg, ctx = self.cfg, self.ctx``
+                for t_elt, v_elt in zip(s.targets[0].elts, s.value.elts):
+                    if isinstance(t_elt, ast.Name):
+                        self.on_assign(t_elt.id, v_elt, s)
+                    else:
+                        self.expr(v_elt)
+            else:
+                self.expr(s.value)
+                for tgt in s.targets:
+                    self.clear_target(tgt)
+        elif isinstance(s, ast.AnnAssign):
+            self.on_ann_assign(s)
+        elif isinstance(s, ast.AugAssign):
+            self.on_aug_assign(s)
+        elif isinstance(s, ast.Return):
+            self.on_return(s)
+        elif isinstance(s, ast.Expr):
+            self.expr(s.value)
+        elif isinstance(s, ast.If):
+            self.expr(s.test)
+            self.run_block(s.body)
+            self.run_block(s.orelse)
+        elif isinstance(s, ast.For):
+            self.on_for_target(s.target, s.iter)
+            self.run_block(s.body)
+            self.run_block(s.orelse)
+        elif isinstance(s, ast.While):
+            self.expr(s.test)
+            self.run_block(s.body)
+            self.run_block(s.orelse)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self.expr(item.context_expr)
+            self.run_block(s.body)
+        elif isinstance(s, ast.Try):
+            self.run_block(s.body)
+            for h in s.handlers:
+                self.run_block(h.body)
+            self.run_block(s.orelse)
+            self.run_block(s.finalbody)
+        elif isinstance(s, ast.Assert):
+            self.expr(s.test)
+        elif isinstance(s, ast.Raise):
+            if s.exc is not None:
+                self.expr(s.exc)
+
+
+# ---------------------------------------------------------------------------
+# units inference
+# ---------------------------------------------------------------------------
+class UnitScope(_Scope):
+    """Units walk of one scope; ``report(kind, node, message)`` with kind
+    ``"mismatch"`` (RV001) or ``"scale"`` (RV002)."""
+
+    def __init__(
+        self,
+        analyses: Analyses,
+        mod: ModuleInfo,
+        fn: Optional[FunctionInfo],
+        report: Callable[[str, ast.AST, str], None],
+    ):
+        super().__init__(mod)
+        self.A = analyses
+        self.fn = fn
+        self.report = report
+        if fn is not None:
+            for p, u in self.A.fn_param_units.get(fn.qname, {}).items():
+                self.env[p] = u
+        self.return_unit = (
+            self.A.fn_return_units.get(fn.qname) if fn else None
+        )
+
+    def run(self) -> None:
+        body = self.fn.node.body if self.fn else self.mod.lint.tree.body
+        self.run_block(body)
+
+    # -- expression evaluation -------------------------------------------
+    def expr(self, node: Optional[ast.AST]) -> UnitVal:
+        if node is None:
+            return None
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, bool) or not isinstance(
+                node.value, (int, float)
+            ):
+                return None
+            return LITERAL
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id)
+        if isinstance(node, ast.Attribute):
+            self.expr(node.value)
+            return self.A.attr_units.get(node.attr)
+        if isinstance(node, ast.Subscript):
+            self.expr(node.slice)
+            return self.expr(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self._binop(node)
+        if isinstance(node, ast.Compare):
+            self._compare(node)
+            return None
+        if isinstance(node, ast.BoolOp):
+            return self._combine([self.expr(v) for v in node.values])
+        if isinstance(node, ast.IfExp):
+            self.expr(node.test)
+            return self._combine(
+                [self.expr(node.body), self.expr(node.orelse)]
+            )
+        if isinstance(node, ast.Call):
+            return self._call(node)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            for e in node.elts:
+                self.expr(e)
+            return None
+        if isinstance(node, ast.Dict):
+            for e in list(node.keys) + list(node.values):
+                if e is not None:
+                    self.expr(e)
+            return None
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                if isinstance(v, ast.FormattedValue):
+                    self.expr(v.value)
+            return None
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        return None
+
+    @staticmethod
+    def _combine(vals: Sequence[UnitVal]) -> UnitVal:
+        concrete = [v for v in vals if isinstance(v, tuple)]
+        if concrete and all(v == concrete[0] for v in concrete):
+            if all(isinstance(v, tuple) or v is LITERAL for v in vals):
+                return concrete[0]
+        if vals and all(v is LITERAL for v in vals):
+            return LITERAL
+        return None
+
+    def _binop(self, node: ast.BinOp) -> UnitVal:
+        left, right = self.expr(node.left), self.expr(node.right)
+        if isinstance(node.op, (ast.Mult, ast.Div, ast.FloorDiv)):
+            self._check_scale(node, left, right)
+            sign = -1 if isinstance(node.op, (ast.Div, ast.FloorDiv)) else 1
+            if left is LITERAL and right is LITERAL:
+                return LITERAL
+            if left is LITERAL:
+                left = DIMENSIONLESS
+            if right is LITERAL:
+                right = DIMENSIONLESS
+            if isinstance(left, tuple) and isinstance(right, tuple):
+                return mul_units(left, right, sign)
+            return None
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            if (
+                isinstance(left, tuple)
+                and isinstance(right, tuple)
+                and left != right
+            ):
+                op = "+" if isinstance(node.op, ast.Add) else "-"
+                self.report(
+                    "mismatch", node,
+                    f"unit mismatch: [{unit_str(left)}] {op} "
+                    f"[{unit_str(right)}] — operands of +/- must agree",
+                )
+                return None
+            if left is LITERAL:
+                return right
+            if right is LITERAL:
+                return left
+            if isinstance(left, tuple) and isinstance(right, tuple):
+                return left
+            return None
+        if isinstance(node.op, ast.Pow):
+            if left is LITERAL and right is LITERAL:
+                return LITERAL
+            return None
+        return None
+
+    def _compare(self, node: ast.Compare) -> None:
+        vals = [self.expr(node.left)] + [self.expr(c) for c in node.comparators]
+        for i, op in enumerate(node.ops):
+            if isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn)):
+                continue
+            a, b = vals[i], vals[i + 1]
+            if isinstance(a, tuple) and isinstance(b, tuple) and a != b:
+                self.report(
+                    "mismatch", node,
+                    f"unit mismatch: comparing [{unit_str(a)}] with "
+                    f"[{unit_str(b)}]",
+                )
+
+    def _check_scale(self, node: ast.BinOp, left: UnitVal, right: UnitVal) -> None:
+        pairs = [(node.right, left)]
+        if isinstance(node.op, ast.Mult):
+            pairs.append((node.left, right))
+        for lit_side, other_unit in pairs:
+            if (
+                _is_scale_literal(lit_side)
+                and isinstance(other_unit, tuple)
+                and other_unit != DIMENSIONLESS
+            ):
+                src = (
+                    f"{lit_side.left.value}**{lit_side.right.value}"
+                    if isinstance(lit_side, ast.BinOp)
+                    else repr(lit_side.value)
+                )
+                self.report(
+                    "scale", node,
+                    f"bare scale factor {src} applied to a "
+                    f"[{unit_str(other_unit)}] value — name the conversion "
+                    f"in repro.core.units instead",
+                )
+
+    def _call(self, node: ast.Call) -> UnitVal:
+        arg_units = [self.expr(a) for a in node.args]
+        kw_units = {
+            kw.arg: self.expr(kw.value) for kw in node.keywords if kw.arg
+        }
+        for kw in node.keywords:
+            if kw.arg is None:
+                self.expr(kw.value)
+        target = self.A.project.resolve_call(
+            self.mod, node, self.fn.class_name if self.fn else None
+        )
+        if target in self.A.project.classes:
+            self._check_constructor(
+                node, self.A.project.classes[target], arg_units, kw_units
+            )
+            return None
+        if target in self.A.project.functions:
+            self._check_call_args(
+                node, self.A.project.functions[target], arg_units, kw_units
+            )
+            return self.A.fn_return_units.get(target)
+        # builtin / numpy propagation
+        fname = (
+            node.func.attr if isinstance(node.func, ast.Attribute)
+            else getattr(node.func, "id", None)
+        )
+        if isinstance(node.func, ast.Attribute) and fname in _METHOD_PRESERVE:
+            recv = self.expr(node.func.value)
+            if recv is not None:
+                return recv
+        if fname == "where" and len(arg_units) == 3:
+            return self._combine(arg_units[1:])
+        if fname == "full" and len(arg_units) >= 2:
+            return arg_units[1]
+        if fname in ("min", "max", "maximum", "minimum") and len(arg_units) > 1:
+            return self._combine(arg_units)
+        if fname in _PROPAGATE_FIRST and arg_units:
+            return arg_units[0]
+        return None
+
+    def _check_call_args(
+        self,
+        node: ast.Call,
+        fn: FunctionInfo,
+        arg_units: Sequence[UnitVal],
+        kw_units: Dict[str, UnitVal],
+    ) -> None:
+        declared = self.A.fn_param_units.get(fn.qname)
+        if not declared:
+            return
+        pos = fn.positional_params()
+        for i, (a, u) in enumerate(zip(node.args, arg_units)):
+            if isinstance(a, ast.Starred) or i >= len(pos):
+                break
+            self._check_arg(node, pos[i], declared.get(pos[i]), u)
+        for kw in node.keywords:
+            if kw.arg is not None and kw.arg in declared:
+                self._check_arg(
+                    node, kw.arg, declared[kw.arg], kw_units.get(kw.arg)
+                )
+
+    def _check_constructor(
+        self,
+        node: ast.Call,
+        cls: ClassInfo,
+        arg_units: Sequence[UnitVal],
+        kw_units: Dict[str, UnitVal],
+    ) -> None:
+        field_units = {
+            f: resolve_annotation(ann, self.A.registry)
+            for f, ann in cls.fields.items()
+        }
+        if not any(field_units.values()):
+            return
+        names = list(cls.fields)
+        if cls.is_dataclass:
+            for i, (a, u) in enumerate(zip(node.args, arg_units)):
+                if isinstance(a, ast.Starred) or i >= len(names):
+                    break
+                self._check_arg(node, names[i], field_units.get(names[i]), u)
+        for kw in node.keywords:
+            if kw.arg is not None and kw.arg in field_units:
+                self._check_arg(
+                    node, kw.arg, field_units[kw.arg], kw_units.get(kw.arg)
+                )
+
+    def _check_arg(
+        self,
+        node: ast.Call,
+        pname: str,
+        declared: Optional[Unit],
+        actual: UnitVal,
+    ) -> None:
+        if (
+            declared is not None
+            and isinstance(actual, tuple)
+            and actual != declared
+        ):
+            self.report(
+                "mismatch", node,
+                f"unit mismatch: argument '{pname}' declared "
+                f"[{unit_str(declared)}] receives [{unit_str(actual)}]",
+            )
+
+    # -- statement hooks --------------------------------------------------
+    def on_ann_assign(self, node: ast.AnnAssign) -> None:
+        declared = resolve_annotation(node.annotation, self.A.registry)
+        val = self.expr(node.value) if node.value is not None else None
+        if (
+            declared is not None
+            and isinstance(val, tuple)
+            and val != declared
+        ):
+            self.report(
+                "mismatch", node,
+                f"unit mismatch: annotated [{unit_str(declared)}] but "
+                f"assigned a [{unit_str(val)}] value",
+            )
+        if isinstance(node.target, ast.Name):
+            self.env[node.target.id] = (
+                declared if declared is not None else val
+            )
+
+    def on_aug_assign(self, node: ast.AugAssign) -> None:
+        val = self.expr(node.value)
+        tgt = (
+            self.env.get(node.target.id)
+            if isinstance(node.target, ast.Name)
+            else self.expr(node.target)
+        )
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            if isinstance(tgt, tuple) and isinstance(val, tuple) and tgt != val:
+                self.report(
+                    "mismatch", node,
+                    f"unit mismatch: [{unit_str(tgt)}] "
+                    f"{'+=' if isinstance(node.op, ast.Add) else '-='} "
+                    f"[{unit_str(val)}]",
+                )
+        elif isinstance(node.op, (ast.Mult, ast.Div)) and isinstance(
+            node.target, ast.Name
+        ):
+            sign = -1 if isinstance(node.op, ast.Div) else 1
+            if isinstance(tgt, tuple) and isinstance(val, tuple):
+                self.env[node.target.id] = mul_units(tgt, val, sign)
+            elif isinstance(tgt, tuple) and val is LITERAL:
+                pass  # unchanged
+            else:
+                self.env[node.target.id] = None
+
+    def on_return(self, node: ast.Return) -> None:
+        val = self.expr(node.value) if node.value is not None else None
+        if (
+            self.return_unit is not None
+            and isinstance(val, tuple)
+            and val != self.return_unit
+        ):
+            self.report(
+                "mismatch", node,
+                f"unit mismatch: returns [{unit_str(val)}] but is "
+                f"declared [{unit_str(self.return_unit)}]",
+            )
+
+    def on_for_target(self, target: ast.AST, iter_node: ast.AST) -> None:
+        u = self.expr(iter_node)
+        if isinstance(target, ast.Name):
+            self.env[target.id] = u if isinstance(u, tuple) else None
+
+
+def run_units_pass(
+    analyses: Analyses,
+    mod: ModuleInfo,
+    report: Callable[[str, ast.AST, str], None],
+) -> None:
+    """All scopes of one module through the units walk (the units module
+    itself is exempt: conversions definitionally cross units)."""
+    if mod.name == UNITS_MODULE:
+        return
+    UnitScope(analyses, mod, None, report).run()
+    for fn in analyses.project.functions.values():
+        if fn.module == mod.name:
+            UnitScope(analyses, mod, fn, report).run()
+
+
+# ---------------------------------------------------------------------------
+# receiver typing (RV003)
+# ---------------------------------------------------------------------------
+class TypeScope(_Scope):
+    """Class-type walk of one scope; calls ``on_read(cls_qname, attr,
+    node)`` for every typed attribute read."""
+
+    def __init__(
+        self,
+        analyses: Analyses,
+        mod: ModuleInfo,
+        fn: Optional[FunctionInfo],
+        on_read: Callable[[Optional[str], str, ast.AST], None],
+    ):
+        super().__init__(mod)
+        self.A = analyses
+        self.fn = fn
+        self.on_read = on_read
+        if fn is not None:
+            if fn.class_name is not None:
+                own = f"{mod.name}.{fn.class_name}"
+                self.env["self"] = own
+                self.env["cls"] = own
+            for p in fn.params:
+                c = self.A.resolve_class_annotation(fn.param_annotation(p))
+                if c is not None:
+                    self.env[p] = c
+
+    def run(self) -> None:
+        body = self.fn.node.body if self.fn else self.mod.lint.tree.body
+        self.run_block(body)
+
+    def stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested closures read enclosing bindings (``cfg`` captured by
+            # admission helpers) — descend with a copy of the environment
+            # so RV003 sees field reads inside them
+            child = TypeScope(self.A, self.mod, self.fn, self.on_read)
+            child.env = dict(self.env)
+            a = s.args
+            for arg in a.posonlyargs + a.args + a.kwonlyargs:
+                child.env[arg.arg] = self.A.resolve_class_annotation(
+                    arg.annotation
+                )
+            child.run_block(s.body)
+            return
+        super().stmt(s)
+
+    def expr(self, node: Optional[ast.AST]) -> Optional[str]:
+        if node is None or isinstance(node, ast.Constant):
+            return None
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id)  # type: ignore[return-value]
+        if isinstance(node, ast.Attribute):
+            recv = self.expr(node.value)
+            if isinstance(node.ctx, ast.Load):
+                self.on_read(recv, node.attr, node)
+            if recv is not None:
+                own = self.A.class_field_type(recv, node.attr)
+                if own is not None:
+                    return own
+            return self.A.attr_types.get(node.attr)
+        if isinstance(node, ast.Subscript):
+            self.expr(node.slice)
+            self.expr(node.value)
+            return None
+        if isinstance(node, ast.Call):
+            return self._call(node)
+        if isinstance(node, ast.BoolOp):
+            types = [self.expr(v) for v in node.values]
+            concrete = [t for t in types if t]
+            return concrete[0] if concrete else None
+        if isinstance(node, ast.IfExp):
+            self.expr(node.test)
+            types = [self.expr(node.body), self.expr(node.orelse)]
+            concrete = [t for t in types if t]
+            return concrete[0] if concrete else None
+        if isinstance(node, (ast.BinOp, ast.UnaryOp, ast.Compare)):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    self.expr(child)
+            return None
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            for e in node.elts:
+                self.expr(e)
+            return None
+        if isinstance(node, ast.Dict):
+            for e in list(node.keys) + list(node.values):
+                if e is not None:
+                    self.expr(e)
+            return None
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                if isinstance(v, ast.FormattedValue):
+                    self.expr(v.value)
+            return None
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            for gen in node.generators:
+                self.expr(gen.iter)
+            # element expressions see untyped loop targets; still walk them
+            # so reads with resolvable receivers (e.g. closures) register
+            self.expr(node.elt)
+            return None
+        if isinstance(node, ast.DictComp):
+            for gen in node.generators:
+                self.expr(gen.iter)
+            self.expr(node.key)
+            self.expr(node.value)
+            return None
+        return None
+
+    def _call(self, node: ast.Call) -> Optional[str]:
+        fname = (
+            node.func.attr if isinstance(node.func, ast.Attribute)
+            else getattr(node.func, "id", None)
+        )
+        if fname == "getattr" and len(node.args) >= 2:
+            recv = self.expr(node.args[0])
+            name_arg = node.args[1]
+            if isinstance(name_arg, ast.Constant) and isinstance(
+                name_arg.value, str
+            ):
+                self.on_read(recv or "*", name_arg.value, node)
+            return None
+        if fname in ("asdict", "astuple"):
+            if node.args:
+                recv = self.expr(node.args[0])
+                if recv:
+                    self.on_read(recv, "*", node)
+            return None
+        for a in node.args:
+            self.expr(a)
+        for kw in node.keywords:
+            self.expr(kw.value)
+        if isinstance(node.func, ast.Attribute):
+            self.expr(node.func.value)
+        target = self.A.project.resolve_call(
+            self.mod, node, self.fn.class_name if self.fn else None
+        )
+        if target in self.A.project.classes:
+            return target
+        if target in self.A.project.functions:
+            return self.A.fn_return_types.get(target)
+        return None
+
+    def on_for_target(self, target: ast.AST, iter_node: ast.AST) -> None:
+        self.expr(iter_node)
+        if isinstance(target, ast.Name):
+            self.env[target.id] = None
+
+
+def run_type_pass(
+    analyses: Analyses,
+    mod: ModuleInfo,
+    on_read: Callable[[Optional[str], str, ast.AST], None],
+) -> None:
+    TypeScope(analyses, mod, None, on_read).run()
+    for fn in analyses.project.functions.values():
+        if fn.module == mod.name:
+            TypeScope(analyses, mod, fn, on_read).run()
+
+
+# ---------------------------------------------------------------------------
+# record-flag flow (RV004)
+# ---------------------------------------------------------------------------
+RECORDED = "recorded"
+UNRECORDED = "unrecorded"
+UNKNOWN = "unknown"
+
+#: engine entry points that mint ScheduleResults
+_ENGINE_SIMS = {
+    "repro.core.engine.simulate",
+    "repro.core.engine.simulate_batch",
+}
+#: per-job accounting sinks that require recorded results
+SINK_NAMES = {"per_job_makespans", "per_job_iteration_ends"}
+
+
+def _join(a: str, b: str) -> str:
+    return a if a == b else UNKNOWN
+
+
+class RecordFlow:
+    """Per-function summaries: does this function return recorded
+    ``ScheduleResult`` values?  ``record=<param>`` summaries are
+    conditional — re-evaluated at every call site."""
+
+    def __init__(self, analyses: Analyses):
+        self.A = analyses
+        self._memo: Dict[str, object] = {}
+
+    # summary: RECORDED | UNRECORDED | UNKNOWN | ("param", name)
+    def summary(self, qname: str, _stack: Optional[Set[str]] = None) -> object:
+        if qname in self._memo:
+            return self._memo[qname]
+        stack = _stack or set()
+        if qname in stack:
+            return UNKNOWN  # cycle
+        fn = self.A.project.functions.get(qname)
+        if fn is None:
+            return UNKNOWN
+        stack = stack | {qname}
+        mod = self.A.project.modules[fn.module]
+        scope = _RecordScope(self, mod, fn, stack)
+        scope.run()
+        result = scope.returned if scope.returned is not None else UNKNOWN
+        self._memo[qname] = result
+        return result
+
+    def eval_call(
+        self,
+        mod: ModuleInfo,
+        call: ast.Call,
+        env: Dict[str, object],
+        enclosing: Optional[FunctionInfo],
+        stack: Optional[Set[str]] = None,
+    ) -> object:
+        """Status of the value produced by ``call`` in ``env``."""
+        target = self.A.project.resolve_call(
+            mod, call, enclosing.class_name if enclosing else None
+        )
+        if target in _ENGINE_SIMS:
+            return self._record_kwarg_status(call, env)
+        if target in self.A.project.functions:
+            summ = self.summary(target, stack)
+            if isinstance(summ, tuple) and summ and summ[0] == "param":
+                return self._site_param_status(
+                    call, self.A.project.functions[target], summ[1], env
+                )
+            return summ if isinstance(summ, str) else UNKNOWN
+        return UNKNOWN
+
+    def _record_kwarg_status(
+        self, call: ast.Call, env: Dict[str, object]
+    ) -> object:
+        for kw in call.keywords:
+            if kw.arg == "record":
+                return self._flag_status(kw.value, env)
+        if any(kw.arg is None for kw in call.keywords):
+            return UNKNOWN  # **kwargs may carry record=
+        return UNRECORDED  # record defaults to False
+
+    def _site_param_status(
+        self,
+        call: ast.Call,
+        callee: FunctionInfo,
+        pname: str,
+        env: Dict[str, object],
+    ) -> object:
+        for kw in call.keywords:
+            if kw.arg == pname:
+                return self._flag_status(kw.value, env)
+        pos = callee.positional_params()
+        if pname in pos:
+            idx = pos.index(pname)
+            if idx < len(call.args):
+                return self._flag_status(call.args[idx], env)
+        if any(kw.arg is None for kw in call.keywords):
+            return UNKNOWN
+        default = callee.param_default(pname)
+        if isinstance(default, ast.Constant):
+            return RECORDED if default.value is True else UNRECORDED
+        return UNKNOWN
+
+    @staticmethod
+    def _flag_status(node: ast.AST, env: Dict[str, object]) -> object:
+        if isinstance(node, ast.Constant):
+            return RECORDED if node.value is True else UNRECORDED
+        if isinstance(node, ast.Name):
+            got = env.get(node.id)
+            if got == "flag-true":
+                return RECORDED
+            if got == "flag-false":
+                return UNRECORDED
+            if isinstance(got, tuple) and got and got[0] == "param":
+                return got  # conditional on the CALLER's own flag param
+        return UNKNOWN
+
+
+class _RecordScope(_Scope):
+    """Forward record-status walk of one function/module scope."""
+
+    def __init__(
+        self,
+        flow: RecordFlow,
+        mod: ModuleInfo,
+        fn: Optional[FunctionInfo],
+        stack: Optional[Set[str]] = None,
+        on_check: Optional[Callable[[str, ast.AST, str], None]] = None,
+    ):
+        super().__init__(mod)
+        self.flow = flow
+        self.fn = fn
+        self.stack = stack
+        self.on_check = on_check
+        self.returned: Optional[object] = None
+        if fn is not None:
+            for p in fn.params:
+                self.env[p] = ("param", p)
+
+    def run(self) -> None:
+        body = self.fn.node.body if self.fn else self.mod.lint.tree.body
+        self.run_block(body)
+
+    def expr(self, node: Optional[ast.AST]) -> object:
+        if node is None:
+            return UNKNOWN
+        if isinstance(node, ast.Constant):
+            if node.value is True:
+                return "flag-true"
+            if node.value is False:
+                return "flag-false"
+            return UNKNOWN
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, UNKNOWN)
+        if isinstance(node, ast.Call):
+            for a in node.args:
+                self._walk_nested(a)
+            for kw in node.keywords:
+                self._walk_nested(kw.value)
+            status = self.flow.eval_call(
+                self.mod, node, self.env, self.fn, self.stack
+            )
+            self._check_sink_call(node)
+            return status
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value)
+        if isinstance(node, ast.Attribute):
+            self._check_task_events(node)
+            self._walk_nested(node.value)
+            return UNKNOWN
+        if isinstance(node, ast.IfExp):
+            self._walk_nested(node.test)
+            a, b = self.expr(node.body), self.expr(node.orelse)
+            return a if a == b else UNKNOWN
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            for gen in node.generators:
+                src = self.expr(gen.iter)
+                if isinstance(gen.target, ast.Name):
+                    self.env[gen.target.id] = src
+            self._walk_nested(node.elt)
+            return UNKNOWN
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._walk_nested(child)
+        return UNKNOWN
+
+    def _walk_nested(self, node: ast.AST) -> None:
+        self.expr(node)
+
+    def on_for_target(self, target: ast.AST, iter_node: ast.AST) -> None:
+        src = self.expr(iter_node)
+        if isinstance(target, ast.Name):
+            # iterating a batch of results keeps each element's status
+            self.env[target.id] = src
+
+    def on_return(self, node: ast.Return) -> None:
+        if node.value is None:
+            return
+        val = self.expr(node.value)
+        if val in ("flag-true", "flag-false"):
+            val = UNKNOWN
+        if self.returned is None:
+            self.returned = val
+        elif self.returned != val:
+            self.returned = UNKNOWN
+
+    # -- sink checks (active only when on_check is set) -------------------
+    def _check_sink_call(self, node: ast.Call) -> None:
+        if self.on_check is None:
+            return
+        fname = (
+            node.func.attr if isinstance(node.func, ast.Attribute)
+            else getattr(node.func, "id", None)
+        )
+        if fname not in SINK_NAMES or not node.args:
+            return
+        status = self.expr_status_of(node.args[0])
+        if status == UNRECORDED:
+            self.on_check(
+                "record", node,
+                f"unrecorded ScheduleResult reaches {fname}() through a "
+                "helper — per-job accounting needs record=True at the "
+                "originating simulate call",
+            )
+
+    def _check_task_events(self, node: ast.Attribute) -> None:
+        if self.on_check is None or node.attr != "task_events":
+            return
+        status = self.expr_status_of(node.value)
+        if status == UNRECORDED:
+            self.on_check(
+                "record", node,
+                "unrecorded ScheduleResult's .task_events is empty — the "
+                "originating simulate call needs record=True",
+            )
+
+    def expr_status_of(self, node: ast.AST) -> str:
+        """Status of an expression WITHOUT re-triggering sink checks."""
+        if isinstance(node, ast.Name):
+            got = self.env.get(node.id, UNKNOWN)
+            return got if got in (RECORDED, UNRECORDED) else UNKNOWN
+        if isinstance(node, ast.Call):
+            status = self.flow.eval_call(
+                self.mod, node, self.env, self.fn, self.stack
+            )
+            return status if status in (RECORDED, UNRECORDED) else UNKNOWN
+        if isinstance(node, ast.Subscript):
+            return self.expr_status_of(node.value)
+        return UNKNOWN
+
+
+def run_record_pass(
+    analyses: Analyses,
+    mod: ModuleInfo,
+    report: Callable[[str, ast.AST, str], None],
+) -> None:
+    flow = analyses.record_flow
+    scope = _RecordScope(flow, mod, None, on_check=report)
+    scope.run()
+    for fn in analyses.project.functions.values():
+        if fn.module == mod.name:
+            _RecordScope(flow, mod, fn, on_check=report).run()

@@ -1,0 +1,341 @@
+"""Whole-program view: module graph, function/class index, call graph.
+
+``repro_lint`` judges one file at a time; everything in this package
+starts from a :class:`Project` — every walked module parsed once, imports
+resolved to project-dotted names, functions and classes indexed by
+qualified name, and a call graph whose edges are *resolved* calls only.
+
+Resolution is deliberately conservative: a call we cannot attribute to
+exactly one project function produces NO edge (and therefore no finding
+downstream).  The repo's conventions make the common cases exact:
+
+  * ``from .engine import simulate`` / ``simulate(...)``       (from-import)
+  * ``from .. import engine`` / ``engine.simulate(...)``       (module attr)
+  * ``self.method(...)`` inside a class body                   (own method)
+  * ``obj.method(...)`` where exactly ONE project function has
+    that terminal name                                         (unique-name)
+
+Module naming mirrors the import system: ``src/repro/core/engine.py`` is
+``repro.core.engine`` (the ``src`` layout root is stripped), everything
+else keeps its path (``tools.repro_lint.cli``, ``tests.test_oes``,
+``examples.quickstart``); a package's ``__init__.py`` is the package.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.repro_lint.core import LintError, LintModule, collect_py_files
+
+
+def module_name_for(rel_path: str) -> str:
+    """Repo-relative posix path -> project-dotted module name."""
+    parts = rel_path.split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][: -len(".py")]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+@dataclass
+class FunctionInfo:
+    """One module-level function or class method."""
+
+    qname: str  # e.g. repro.core.engine.simulate / ...engine.ShapedPolicy.rates
+    module: str
+    node: ast.FunctionDef
+    class_name: Optional[str] = None  # enclosing class, if a method
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        return [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+
+    def param_annotation(self, name: str) -> Optional[ast.AST]:
+        a = self.node.args
+        for x in a.posonlyargs + a.args + a.kwonlyargs:
+            if x.arg == name:
+                return x.annotation
+        return None
+
+    def positional_params(self) -> List[str]:
+        """Parameter names fillable by position (``self`` stripped for
+        methods so caller-side positions line up)."""
+        a = self.node.args
+        names = [x.arg for x in a.posonlyargs + a.args]
+        if self.class_name is not None and names and names[0] in ("self", "cls"):
+            names = names[1:]
+        return names
+
+    def param_default(self, name: str) -> Optional[ast.AST]:
+        a = self.node.args
+        pos = a.posonlyargs + a.args
+        defaults = a.defaults
+        for x, d in zip(pos[len(pos) - len(defaults):], defaults):
+            if x.arg == name:
+                return d
+        for x, d in zip(a.kwonlyargs, a.kw_defaults):
+            if x.arg == name and d is not None:
+                return d
+        return None
+
+    def has_param(self, name: str) -> bool:
+        return name in self.params
+
+    def has_kwargs(self) -> bool:
+        return self.node.args.kwarg is not None
+
+
+@dataclass
+class ClassInfo:
+    """One class: annotated fields (dataclass knobs) + methods."""
+
+    qname: str
+    module: str
+    node: ast.ClassDef
+    fields: Dict[str, ast.AST] = field(default_factory=dict)  # name -> annotation
+    field_defaults: Dict[str, Optional[ast.AST]] = field(default_factory=dict)
+    is_dataclass: bool = False
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+
+class ModuleInfo:
+    """One parsed module plus its resolved import table."""
+
+    def __init__(self, name: str, lint: LintModule, is_package: bool):
+        self.name = name
+        self.lint = lint
+        self.is_package = is_package
+        #: local name -> project-dotted qualified name it refers to.  A
+        #: plain ``import x.y`` binds ``x`` -> ``x``; from-imports bind the
+        #: imported symbol's fully qualified name.
+        self.imports: Dict[str, str] = {}
+        self._resolve_imports()
+
+    @property
+    def package(self) -> str:
+        if self.is_package:
+            return self.name
+        return self.name.rsplit(".", 1)[0] if "." in self.name else ""
+
+    def _resolve_imports(self) -> None:
+        for node in ast.walk(self.lint.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.asname:
+                        self.imports[alias.asname] = alias.name
+                    else:
+                        self.imports[alias.name.split(".")[0]] = (
+                            alias.name.split(".")[0]
+                        )
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:
+                    pkg = self.package
+                    for _ in range(node.level - 1):
+                        pkg = pkg.rsplit(".", 1)[0] if "." in pkg else ""
+                    base = f"{pkg}.{node.module}" if node.module else pkg
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    local = alias.asname or alias.name
+                    self.imports[local] = f"{base}.{alias.name}" if base else alias.name
+
+
+class Project:
+    """Every walked module, indexed; build with :func:`build_project`."""
+
+    def __init__(self) -> None:
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.classes: Dict[str, ClassInfo] = {}
+        self.fn_by_name: Dict[str, List[str]] = {}
+        self.class_by_name: Dict[str, List[str]] = {}
+        #: caller qname -> set of resolved callee qnames (functions only)
+        self.call_graph: Dict[str, Set[str]] = {}
+        self.errors: List[LintError] = []
+
+    # -- indexing ---------------------------------------------------------
+    def _index_module(self, mod: ModuleInfo) -> None:
+        self.modules[mod.name] = mod
+        for node in mod.lint.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_function(mod, node, None)
+            elif isinstance(node, ast.ClassDef):
+                self._add_class(mod, node)
+
+    def _add_function(
+        self, mod: ModuleInfo, node: ast.AST, class_name: Optional[str]
+    ) -> None:
+        if not isinstance(node, ast.FunctionDef):
+            return
+        prefix = f"{mod.name}.{class_name}." if class_name else f"{mod.name}."
+        info = FunctionInfo(
+            qname=prefix + node.name, module=mod.name, node=node,
+            class_name=class_name,
+        )
+        self.functions[info.qname] = info
+        self.fn_by_name.setdefault(node.name, []).append(info.qname)
+
+    def _add_class(self, mod: ModuleInfo, node: ast.ClassDef) -> None:
+        is_dc = any(
+            (isinstance(d, ast.Name) and d.id == "dataclass")
+            or (isinstance(d, ast.Attribute) and d.attr == "dataclass")
+            or (
+                isinstance(d, ast.Call)
+                and isinstance(d.func, (ast.Name, ast.Attribute))
+                and (
+                    getattr(d.func, "id", None) == "dataclass"
+                    or getattr(d.func, "attr", None) == "dataclass"
+                )
+            )
+            for d in node.decorator_list
+        )
+        info = ClassInfo(
+            qname=f"{mod.name}.{node.name}", module=mod.name, node=node,
+            is_dataclass=is_dc,
+        )
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and isinstance(
+                stmt.target, ast.Name
+            ):
+                info.fields[stmt.target.id] = stmt.annotation
+                info.field_defaults[stmt.target.id] = stmt.value
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_function(mod, stmt, node.name)
+        self.classes[info.qname] = info
+        self.class_by_name.setdefault(node.name, []).append(info.qname)
+
+    # -- resolution -------------------------------------------------------
+    def qualify(self, mod: ModuleInfo, node: ast.AST) -> Optional[str]:
+        """Best-effort project-qualified name for a Name/Attribute chain."""
+        if isinstance(node, ast.Name):
+            q = mod.imports.get(node.id)
+            if q is not None:
+                return q
+            local = f"{mod.name}.{node.id}"
+            if local in self.functions or local in self.classes:
+                return local
+            return None
+        if isinstance(node, ast.Attribute):
+            base = self.qualify(mod, node.value)
+            return f"{base}.{node.attr}" if base else None
+        return None
+
+    def resolve_call(
+        self,
+        mod: ModuleInfo,
+        call: ast.Call,
+        enclosing_class: Optional[str] = None,
+    ) -> Optional[str]:
+        """Qualified name of the project function/class a call targets,
+        or None when it cannot be attributed to exactly one."""
+        func = call.func
+        q = self.qualify(mod, func)
+        if q is not None and (q in self.functions or q in self.classes):
+            return q
+        if q is not None:
+            # from-imported symbol re-exported through a package __init__:
+            # fall back to unique terminal-name match below
+            pass
+        if isinstance(func, ast.Attribute):
+            if (
+                isinstance(func.value, ast.Name)
+                and func.value.id == "self"
+                and enclosing_class
+            ):
+                own = f"{mod.name}.{enclosing_class}.{func.attr}"
+                if own in self.functions:
+                    return own
+            cands = self.fn_by_name.get(func.attr, [])
+            if len(cands) == 1:
+                return cands[0]
+            return None
+        if isinstance(func, ast.Name):
+            cands = self.fn_by_name.get(func.id, [])
+            if len(cands) == 1 and (
+                func.id in mod.imports or f"{mod.name}.{func.id}" == cands[0]
+            ):
+                return cands[0]
+            ccands = self.class_by_name.get(func.id, [])
+            if len(ccands) == 1 and (
+                func.id in mod.imports or f"{mod.name}.{func.id}" == ccands[0]
+            ):
+                return ccands[0]
+        return None
+
+    def callee_function(
+        self, mod: ModuleInfo, call: ast.Call,
+        enclosing_class: Optional[str] = None,
+    ) -> Optional[FunctionInfo]:
+        q = self.resolve_call(mod, call, enclosing_class)
+        if q is None:
+            return None
+        if q in self.functions:
+            return self.functions[q]
+        if q in self.classes:  # constructor: treat __init__ if present
+            init = f"{q}.__init__"
+            return self.functions.get(init)
+        return None
+
+    # -- call graph -------------------------------------------------------
+    def _build_call_graph(self) -> None:
+        for qname, fn in self.functions.items():
+            mod = self.modules[fn.module]
+            callees: Set[str] = set()
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call):
+                    q = self.resolve_call(mod, node, fn.class_name)
+                    if q is not None:
+                        if q in self.classes:
+                            init = f"{q}.__init__"
+                            if init in self.functions:
+                                callees.add(init)
+                        elif q != qname:
+                            callees.add(q)
+            self.call_graph[qname] = callees
+
+    def reachable_from(self, roots: Sequence[str]) -> Set[str]:
+        """Transitive closure over the resolved call graph."""
+        seen: Set[str] = set()
+        stack = [r for r in roots if r in self.call_graph]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(self.call_graph.get(cur, ()))
+        return seen
+
+
+def build_project(
+    paths: Sequence[str], root: Path
+) -> Project:
+    """Parse every ``.py`` under ``paths`` into one :class:`Project`.
+
+    Unparsable files are recorded in ``project.errors`` (the CLI reports
+    them and exits non-zero — the analysis never silently narrows)."""
+    project = Project()
+    for f in collect_py_files(paths, root):
+        try:
+            lint = LintModule.from_file(f, root)
+        except (SyntaxError, UnicodeDecodeError) as exc:
+            project.errors.append(LintError(path=str(f), message=str(exc)))
+            continue
+        name = module_name_for(lint.rel_path)
+        is_package = lint.rel_path.endswith("__init__.py")
+        project._index_module(ModuleInfo(name, lint, is_package))
+    project._build_call_graph()
+    return project

@@ -1,0 +1,411 @@
+"""RV rules: whole-program contracts over the :class:`Project` graph.
+
+Where ``repro_lint``'s RL rules judge one scope at a time, every rule
+here consumes the interprocedural passes in ``dataflow``:
+
+RV001  unit-mismatch arithmetic (GB + s, comparing GB with GB/s,
+       returning a ratio where seconds are declared, mismatched call
+       arguments) — seeded by the ``repro.core.units`` annotations.
+RV002  bit/byte and SI scale-factor hazards: a bare ``* 8`` / ``/ 8`` /
+       ``* 1e9`` / ``2**30`` applied to a unit-carrying value outside the
+       units module (the PR 5 int-truncation class of silent scale bugs).
+RV003  dead config knobs: a field of a ``*Config`` dataclass in ``src/``
+       that is written (constructed, defaulted) but never READ anywhere
+       in the program — the ``record_events`` class of lying APIs.
+RV004  record-flag dataflow (interprocedural RL003): an unrecorded
+       ``ScheduleResult`` flowing through helper returns into per-job
+       accounting sinks.
+RV005  jit-purity reachability (interprocedural RL005): impurities in
+       module-level helpers called from inside a jitted body, and Python
+       branching on parameters that receive traced arguments.
+RV006  backend-threading edges (interprocedural RL006): a function WITH a
+       ``backend`` parameter calling a project function that also has one
+       without forwarding it — edge completeness gives path completeness
+       from every public entry point.
+
+Findings reuse ``repro_lint``'s pragma machinery verbatim: a
+``# repro-lint: disable=RVxxx`` line pragma or ``disable-file=`` waives a
+finding exactly as for RL rules.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.repro_lint.core import Finding
+
+from .dataflow import (
+    Analyses,
+    run_record_pass,
+    run_type_pass,
+    run_units_pass,
+)
+from .project import Project
+from .unitspec import UNITS_MODULE
+
+
+@dataclass(frozen=True)
+class RuleSpec:
+    rule_id: str
+    title: str
+    rationale: str
+
+
+ALL_RULES: Tuple[RuleSpec, ...] = (
+    RuleSpec(
+        "RV001",
+        "no unit-mismatched arithmetic on annotated quantities",
+        "The schedule is an accounting identity: GB over GB/s must "
+        "integrate to seconds.  Adding GB to seconds, comparing across "
+        "units, or returning a ratio where seconds are declared is the "
+        "silent-corruption class unit tests probe only pointwise.",
+    ),
+    RuleSpec(
+        "RV002",
+        "no bare bit/byte or SI scale factors on unit-carrying values",
+        "A bare * 8 / 2**30 / 1e9 on a GB or GB/s value is an unnamed "
+        "unit conversion — the PR 5 truncation bug wore exactly this "
+        "disguise.  Conversions live as named constants in "
+        "repro.core.units.",
+    ),
+    RuleSpec(
+        "RV003",
+        "no dead config-dataclass knobs",
+        "A *Config field that is written but never read anywhere in the "
+        "program is an API that lies (the record_events class): callers "
+        "set it, nothing changes.  Wire it or delete it.",
+    ),
+    RuleSpec(
+        "RV004",
+        "no unrecorded ScheduleResults reaching per-job accounting "
+        "(interprocedural)",
+        "RL003 sees one scope; this follows results through helper "
+        "returns and record= forwarding.  Unrecorded results carry no "
+        "task events — per-job accounting on them judged every admission "
+        "feasible before PR 8 made it raise.",
+    ),
+    RuleSpec(
+        "RV005",
+        "no impurities in helpers reachable from jitted bodies "
+        "(interprocedural)",
+        "RL005 checks the jitted function's own body; a module-level "
+        "helper called from inside the trace can still host-sync "
+        "(float()/.item()), constant-fold tracers (np. calls), or branch "
+        "on a traced argument.",
+    ),
+    RuleSpec(
+        "RV006",
+        "backend= forwarded on every backend-aware call edge "
+        "(interprocedural)",
+        "If every function with a backend parameter forwards it on every "
+        "call to another backend-aware function, then every path from a "
+        "public entry point threads the knob — edge completeness gives "
+        "path completeness.  A dropped kwarg silently mixes engines "
+        "under REPRO_ENGINE_BACKEND.",
+    ),
+)
+
+RULE_IDS = tuple(r.rule_id for r in ALL_RULES)
+
+
+def get_rules(select: Optional[Sequence[str]] = None) -> List[RuleSpec]:
+    if select is None:
+        return list(ALL_RULES)
+    wanted = {s.strip().upper() for s in select if s.strip()}
+    unknown = wanted - set(RULE_IDS)
+    if unknown:
+        raise ValueError(
+            f"unknown rule id(s): {sorted(unknown)}; known: {list(RULE_IDS)}"
+        )
+    return [r for r in ALL_RULES if r.rule_id in wanted]
+
+
+def run_project_rules(
+    project: Project, select: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """All enabled RV rules over the project; pragma-suppressed findings
+    are filtered here (baseline subtraction is the caller's job)."""
+    enabled = {r.rule_id for r in get_rules(select)}
+    analyses = Analyses(project)
+    findings: List[Finding] = []
+
+    def emit(rule_id: str, mod_name: str, node: ast.AST, message: str) -> None:
+        if rule_id not in enabled:
+            return
+        lint = project.modules[mod_name].lint
+        fd = lint.finding(rule_id, node, message)
+        if not lint.disabled(rule_id, fd.line):
+            findings.append(fd)
+
+    for mod in project.modules.values():
+        if "RV001" in enabled or "RV002" in enabled:
+            run_units_pass(
+                analyses, mod,
+                lambda kind, node, msg, _m=mod.name: emit(
+                    "RV001" if kind == "mismatch" else "RV002", _m, node, msg
+                ),
+            )
+        if "RV004" in enabled:
+            run_record_pass(
+                analyses, mod,
+                lambda kind, node, msg, _m=mod.name: emit("RV004", _m, node, msg),
+            )
+    if "RV003" in enabled:
+        _check_dead_knobs(project, analyses, emit)
+    if "RV005" in enabled:
+        _check_jit_reachability(project, emit)
+    if "RV006" in enabled:
+        _check_backend_edges(project, emit)
+
+    findings.sort(key=Finding.sort_key)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RV003: dead config knobs
+# ---------------------------------------------------------------------------
+def _config_classes(project: Project) -> Dict[str, Set[str]]:
+    """src/ dataclasses named *Config -> their candidate knob fields."""
+    out: Dict[str, Set[str]] = {}
+    for q, cls in project.classes.items():
+        if not cls.module.startswith("repro."):
+            continue
+        if not cls.is_dataclass or not cls.name.endswith("Config"):
+            continue
+        fields = {
+            f for f in cls.fields
+            if not f.startswith("_") and not _is_classvar(cls.fields[f])
+        }
+        if fields:
+            out[q] = fields
+    return out
+
+
+def _is_classvar(ann: ast.AST) -> bool:
+    if isinstance(ann, ast.Subscript):
+        head = ann.value
+        name = (
+            head.attr if isinstance(head, ast.Attribute)
+            else getattr(head, "id", None)
+        )
+        return name == "ClassVar"
+    return False
+
+
+def _check_dead_knobs(project: Project, analyses: Analyses, emit) -> None:
+    candidates = _config_classes(project)
+    if not candidates:
+        return
+    read: Set[Tuple[str, str]] = set()  # (class qname, field)
+
+    def on_read(cls: Optional[str], attr: str, node: ast.AST) -> None:
+        if cls == "*":  # getattr with unresolvable receiver: lenient
+            for q, fields in candidates.items():
+                if attr in fields:
+                    read.add((q, attr))
+            return
+        if cls in candidates:
+            if attr == "*":  # asdict/astuple consume every field
+                for f in candidates[cls]:
+                    read.add((cls, f))
+            elif attr in candidates[cls]:
+                read.add((cls, attr))
+
+    for mod in project.modules.values():
+        run_type_pass(analyses, mod, on_read)
+
+    for q, fields in sorted(candidates.items()):
+        cls = project.classes[q]
+        for stmt in cls.node.body:
+            if not (
+                isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)
+            ):
+                continue
+            fname = stmt.target.id
+            if fname not in fields or (q, fname) in read:
+                continue
+            emit(
+                "RV003", cls.module, stmt,
+                f"config knob {cls.name}.{fname} is never read anywhere "
+                "in the program — callers can set it but nothing changes; "
+                "wire it or delete it",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RV005: jit-purity reachability
+# ---------------------------------------------------------------------------
+def _jit_wrapped_nodes(mod) -> List[ast.FunctionDef]:
+    """FunctionDefs wrapped by jit in this module: ``jit(fn)`` /
+    ``jax.jit(fn)`` references and ``@jit`` / ``@partial(jit, ...)``
+    decorators (matching RL005's detection)."""
+    by_name: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(mod.lint.tree):
+        if isinstance(node, ast.FunctionDef):
+            by_name.setdefault(node.name, []).append(node)
+    out: List[ast.FunctionDef] = []
+    seen: Set[int] = set()
+
+    def _is_jit(fnode: ast.AST) -> bool:
+        term = (
+            fnode.attr if isinstance(fnode, ast.Attribute)
+            else getattr(fnode, "id", None)
+        )
+        return term == "jit"
+
+    for node in ast.walk(mod.lint.tree):
+        if isinstance(node, ast.Call) and _is_jit(node.func):
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    for fn in by_name.get(a.id, []):
+                        if id(fn) not in seen:
+                            seen.add(id(fn))
+                            out.append(fn)
+        elif isinstance(node, ast.FunctionDef):
+            for d in node.decorator_list:
+                if _is_jit(d) or (
+                    isinstance(d, ast.Call)
+                    and (
+                        _is_jit(d.func)
+                        or any(_is_jit(a) for a in d.args)
+                    )
+                ):
+                    if id(node) not in seen:
+                        seen.add(id(node))
+                        out.append(node)
+    return out
+
+
+def _impurity_findings(fn_node: ast.FunctionDef) -> List[Tuple[ast.AST, str]]:
+    out: List[Tuple[ast.AST, str]] = []
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in ("float", "int", "bool"):
+            if node.args:
+                out.append(
+                    (node, f"{func.id}() forces a host sync per invocation")
+                )
+        elif isinstance(func, ast.Attribute):
+            if func.attr == "item":
+                out.append((node, ".item() forces a host sync per invocation"))
+            else:
+                root = func.value
+                while isinstance(root, (ast.Attribute, ast.Subscript)):
+                    root = root.value
+                if isinstance(root, ast.Name) and root.id in ("np", "numpy"):
+                    out.append(
+                        (node, f"np.{func.attr}() constant-folds tracers")
+                    )
+    return out
+
+
+def _check_jit_reachability(project: Project, emit) -> None:
+    flagged: Set[Tuple[str, int]] = set()
+    for mod in project.modules.values():
+        if not mod.name.startswith("repro."):
+            continue
+        jit_nodes = _jit_wrapped_nodes(mod)
+        if not jit_nodes:
+            continue
+        jit_ids = {id(n) for n in jit_nodes}
+        roots: List[str] = []
+        traced_params: Dict[str, Set[str]] = {}
+        for jn in jit_nodes:
+            params = {
+                a.arg
+                for a in jn.args.posonlyargs + jn.args.args + jn.args.kwonlyargs
+            }
+            for call in ast.walk(jn):
+                if not isinstance(call, ast.Call):
+                    continue
+                q = project.resolve_call(mod, call)
+                if q not in project.functions:
+                    continue
+                roots.append(q)
+                # depth-1 traced-argument marking: an argument expression
+                # that references a parameter of the jitted function makes
+                # the receiving parameter traced inside the helper
+                callee = project.functions[q]
+                pos = callee.positional_params()
+                for i, a in enumerate(call.args):
+                    if i < len(pos) and _references_any(a, params):
+                        traced_params.setdefault(q, set()).add(pos[i])
+                for kw in call.keywords:
+                    if kw.arg and _references_any(kw.value, params):
+                        traced_params.setdefault(q, set()).add(kw.arg)
+        reach = project.reachable_from(roots)
+        for q in sorted(reach):
+            fn = project.functions[q]
+            if not fn.module.startswith("repro.") or id(fn.node) in jit_ids:
+                continue
+            for node, why in _impurity_findings(fn.node):
+                key = (fn.module, getattr(node, "lineno", 0))
+                if key in flagged:
+                    continue
+                flagged.add(key)
+                emit(
+                    "RV005", fn.module, node,
+                    f"{why} — {fn.name}() is reachable from a jitted body "
+                    f"in {mod.name}",
+                )
+        for q, tparams in sorted(traced_params.items()):
+            fn = project.functions[q]
+            if not fn.module.startswith("repro.") or id(fn.node) in jit_ids:
+                continue
+            for node in ast.walk(fn.node):
+                if isinstance(node, (ast.If, ast.While)) and _references_any(
+                    node.test, tparams
+                ):
+                    key = (fn.module, getattr(node, "lineno", 0))
+                    if key in flagged:
+                        continue
+                    flagged.add(key)
+                    emit(
+                        "RV005", fn.module, node,
+                        f"Python branch on parameter(s) "
+                        f"{sorted(tparams & _names_in(node.test))} of "
+                        f"{fn.name}() which receive traced arguments from "
+                        f"a jitted body in {mod.name} — raises under trace",
+                    )
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _references_any(node: ast.AST, names: Set[str]) -> bool:
+    return bool(_names_in(node) & names)
+
+
+# ---------------------------------------------------------------------------
+# RV006: backend-threading edges
+# ---------------------------------------------------------------------------
+def _check_backend_edges(project: Project, emit) -> None:
+    for q, fn in sorted(project.functions.items()):
+        if not fn.module.startswith("repro.") or not fn.has_param("backend"):
+            continue
+        mod = project.modules[fn.module]
+        for call in ast.walk(fn.node):
+            if not isinstance(call, ast.Call):
+                continue
+            cq = project.resolve_call(mod, call, fn.class_name)
+            if cq is None or cq not in project.functions or cq == q:
+                continue
+            callee = project.functions[cq]
+            if not callee.has_param("backend"):
+                continue
+            if any(kw.arg == "backend" or kw.arg is None for kw in call.keywords):
+                continue  # forwarded/pinned explicitly, or **kwargs carries it
+            pos = callee.positional_params()
+            if "backend" in pos and pos.index("backend") < len(call.args):
+                continue  # passed positionally
+            emit(
+                "RV006", fn.module, call,
+                f"{fn.name}() has a backend parameter but calls "
+                f"{callee.name}() without forwarding backend= — a dropped "
+                "kwarg silently mixes engines under REPRO_ENGINE_BACKEND",
+            )

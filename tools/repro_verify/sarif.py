@@ -1,0 +1,87 @@
+"""SARIF 2.1.0 export: ``--format sarif`` for code-scanning upload.
+
+Minimal but valid static-analysis results interchange: one run, one
+driver (``repro-verify``), the RV rule catalogue as ``rules`` metadata,
+one result per NEW finding (baselined/suppressed findings are omitted —
+SARIF consumers treat every result as actionable).  Region info carries
+line and 1-based column as SARIF requires.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from tools.repro_lint.core import Finding
+
+from .rules import ALL_RULES, RuleSpec
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = (
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/"
+    "Schemata/sarif-schema-2.1.0.json"
+)
+TOOL_NAME = "repro-verify"
+
+
+def _rule_descriptor(rule: RuleSpec) -> Dict[str, object]:
+    return {
+        "id": rule.rule_id,
+        "name": rule.title,
+        "shortDescription": {"text": rule.title},
+        "fullDescription": {"text": rule.rationale},
+        "defaultConfiguration": {"level": "error"},
+    }
+
+
+def to_sarif(
+    findings: Sequence[Finding],
+    rules: Sequence[RuleSpec] = ALL_RULES,
+) -> Dict[str, object]:
+    rule_index = {r.rule_id: i for i, r in enumerate(rules)}
+    results: List[Dict[str, object]] = []
+    for fd in findings:
+        result: Dict[str, object] = {
+            "ruleId": fd.rule,
+            "level": "error",
+            "message": {"text": fd.message},
+            "locations": [
+                {
+                    "physicalLocation": {
+                        "artifactLocation": {
+                            "uri": fd.path,
+                            "uriBaseId": "SRCROOT",
+                        },
+                        "region": {
+                            "startLine": fd.line,
+                            "startColumn": fd.col + 1,
+                        },
+                    }
+                }
+            ],
+        }
+        if fd.rule in rule_index:
+            result["ruleIndex"] = rule_index[fd.rule]
+        if fd.snippet:
+            loc = result["locations"][0]["physicalLocation"]  # type: ignore[index]
+            loc["region"]["snippet"] = {"text": fd.snippet}
+        results.append(result)
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": TOOL_NAME,
+                        "informationUri": (
+                            "https://example.invalid/repro-verify"
+                        ),
+                        "rules": [_rule_descriptor(r) for r in rules],
+                    }
+                },
+                "originalUriBaseIds": {
+                    "SRCROOT": {"description": {"text": "repository root"}}
+                },
+                "results": results,
+            }
+        ],
+    }

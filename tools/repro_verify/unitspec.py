@@ -1,0 +1,173 @@
+"""Units registry + algebra for the physical-units inference pass.
+
+The registry is parsed SYNTACTICALLY from ``src/repro/core/units.py`` —
+the tool never imports the repo under analysis.  Any module-level
+
+    ``Alias = Annotated[<base>, Unit("<symbol>")]``
+
+assignment registers ``Alias``; the symbol grammar is
+``sym ("*" sym)* ("/" sym ("*" sym)*)?`` with ``"1"`` / ``"ratio"`` as
+the dimensionless unit.  A unit is represented as a frozen mapping
+``symbol -> integer exponent`` (``GB/s`` is ``{"GB": 1, "s": -1}``);
+the empty mapping is dimensionless (``Ratio``).  Scalar and array
+aliases carrying the same symbol are the SAME unit — an element of a
+GB array is a GB scalar.
+
+:data:`LITERAL` is the lattice element for numeric literals: they adopt
+whatever unit the context imposes (``makespan + 1.0`` is fine) and act
+as dimensionless factors under ``*`` / ``/``.  ``None`` is "unknown" —
+unknown never participates in a finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Mapping, Optional, Tuple
+
+#: the units-registry module (and the only module exempt from RV001/RV002 —
+#: conversions definitionally cross units)
+UNITS_MODULE = "repro.core.units"
+
+Unit = Tuple[Tuple[str, int], ...]  # sorted (symbol, exponent) pairs
+
+DIMENSIONLESS: Unit = ()
+
+
+class _Literal:
+    """Sentinel: a numeric literal, unit-polymorphic."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "<literal>"
+
+
+LITERAL = _Literal()
+
+
+def make_unit(exps: Mapping[str, int]) -> Unit:
+    return tuple(sorted((s, e) for s, e in exps.items() if e != 0))
+
+
+def parse_symbol(symbol: str) -> Unit:
+    """``"GB/s"`` -> unit; ``"1"`` / ``"ratio"`` -> dimensionless."""
+    s = symbol.strip()
+    if s in ("1", "ratio", ""):
+        return DIMENSIONLESS
+    num, _, den = s.partition("/")
+    exps: Dict[str, int] = {}
+    for part in num.split("*"):
+        part = part.strip()
+        if part and part != "1":
+            exps[part] = exps.get(part, 0) + 1
+    for part in den.split("*") if den else ():
+        part = part.strip()
+        if part:
+            exps[part] = exps.get(part, 0) - 1
+    return make_unit(exps)
+
+
+def unit_str(u: Unit) -> str:
+    """Human form for messages: ``{"GB":1,"s":-1}`` -> ``"GB/s"``."""
+    if not u:
+        return "1"
+    num = [s if e == 1 else f"{s}^{e}" for s, e in u if e > 0]
+    den = [s if e == -1 else f"{s}^{-e}" for s, e in u if e < 0]
+    out = "*".join(num) if num else "1"
+    if den:
+        out += "/" + "*".join(den)
+    return out
+
+
+def mul_units(a: Unit, b: Unit, sign: int = 1) -> Unit:
+    exps = dict(a)
+    for s, e in b:
+        exps[s] = exps.get(s, 0) + sign * e
+    return make_unit(exps)
+
+
+def load_registry(units_tree: ast.AST) -> Dict[str, Unit]:
+    """Alias table from the units module's AST: name -> unit."""
+    registry: Dict[str, Unit] = {}
+    for node in getattr(units_tree, "body", []):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        if not isinstance(target, ast.Name):
+            continue
+        sym = _annotated_unit_symbol(node.value)
+        if sym is not None:
+            registry[target.id] = parse_symbol(sym)
+    return registry
+
+
+def _annotated_unit_symbol(node: ast.AST) -> Optional[str]:
+    """``Annotated[<base>, Unit("sym")]`` -> ``"sym"``."""
+    if not isinstance(node, ast.Subscript):
+        return None
+    head = node.value
+    name = head.attr if isinstance(head, ast.Attribute) else getattr(head, "id", None)
+    if name != "Annotated":
+        return None
+    sl = node.slice
+    if isinstance(sl, getattr(ast, "Index", ())):  # py3.8 compat
+        sl = sl.value  # pragma: no cover
+    if not isinstance(sl, ast.Tuple):
+        return None
+    for elt in sl.elts[1:]:
+        if (
+            isinstance(elt, ast.Call)
+            and (
+                getattr(elt.func, "id", None) == "Unit"
+                or getattr(elt.func, "attr", None) == "Unit"
+            )
+            and elt.args
+            and isinstance(elt.args[0], ast.Constant)
+            and isinstance(elt.args[0].value, str)
+        ):
+            return elt.args[0].value
+    return None
+
+
+def resolve_annotation(
+    ann: Optional[ast.AST], registry: Mapping[str, Unit]
+) -> Optional[Unit]:
+    """Unit of an annotation expression, or None when it carries none.
+
+    Handles bare aliases (``GB``, ``units.GB``), string annotations,
+    ``Optional[GB]``, ``Union[GB, ...]`` (first unit-carrying member) and
+    inline ``Annotated[float, Unit("...")]``."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:
+            ann = ast.parse(ann.value, mode="eval").body
+        except SyntaxError:
+            return None
+    if isinstance(ann, ast.Name):
+        return registry.get(ann.id)
+    if isinstance(ann, ast.Attribute):
+        return registry.get(ann.attr)
+    if isinstance(ann, ast.Subscript):
+        sym = _annotated_unit_symbol(ann)
+        if sym is not None:
+            return parse_symbol(sym)
+        head = ann.value
+        name = (
+            head.attr if isinstance(head, ast.Attribute)
+            else getattr(head, "id", None)
+        )
+        if name in ("Optional", "Final", "ClassVar"):
+            return resolve_annotation(ann.slice, registry)
+        if name == "Union":
+            sl = ann.slice
+            elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            for elt in elts:
+                u = resolve_annotation(elt, registry)
+                if u is not None:
+                    return u
+        return None
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        # PEP 604: GB | None
+        return (
+            resolve_annotation(ann.left, registry)
+            or resolve_annotation(ann.right, registry)
+        )
+    return None
